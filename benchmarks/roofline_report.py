@@ -1,0 +1,70 @@
+"""Turn dry-run JSONL records into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun_baseline.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def load(path):
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    return recs
+
+
+def table(recs, multi_pod: bool) -> str:
+    rows = []
+    head = ("| arch | shape | mem/dev GiB | fits 16G | compute s | memory s |"
+            " collective s | bottleneck | useful (6ND/HLO) | top collective |")
+    sep = "|" + "---|" * 10
+    rows.append(head)
+    rows.append(sep)
+    for r in recs:
+        if r.get("error"):
+            if bool(r.get("multi_pod")) == multi_pod:
+                rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | |"
+                            f" {r['error'][:40]} | | |")
+            continue
+        if bool(r.get("multi_pod")) != multi_pod:
+            continue
+        rl = r["roofline"]
+        m = r["memory"]
+        cb = rl.get("collective_bytes", {})
+        top = max(cb, key=cb.get) if cb else "-"
+        tops = f"{top} {cb.get(top,0)/2**30:.1f}GiB" if cb else "-"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {m['peak_per_device_gib']} | "
+            f"{'Y' if m['fits_16gib'] else 'N'} | {rl['compute_s']:.3f} | "
+            f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | "
+            f"**{rl['bottleneck']}** | {rl['useful_ratio']:.2f} | {tops} |")
+    return "\n".join(rows)
+
+
+def main():
+    recs = load(sys.argv[1] if len(sys.argv) > 1
+                else "results/dryrun_baseline.jsonl")
+    ok = [r for r in recs if not r.get("error")]
+    err = [r for r in recs if r.get("error")]
+    print(f"<!-- {len(ok)} ok, {len(err)} failed -->\n")
+    print("### Single-pod (16x16 = 256 chips)\n")
+    print(table(recs, False))
+    print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    print(table(recs, True))
+    if err:
+        print("\n### Failures\n")
+        for r in err:
+            print(f"- {r['arch']} x {r['shape']} mp={r.get('multi_pod')}: "
+                  f"{r['error'][:200]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/claim. Prints
+``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only SUITE]
+
+Suites:
+  neighbor_scaling : §1/§4.1 — CARLS step ~flat in K, inline baseline linear
+  staleness        : §1     — freshness impact controllable
+  lazy_update      : §3.2   — lazy average + outlier rejection stability
+  two_tower        : §4.3   — KB-scaled negative pools
+  nn_search_bench  : §3.2   — NN lookup + constant-latency sharding
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+SUITES = ["neighbor_scaling", "staleness", "lazy_update", "two_tower",
+          "nn_search_bench", "dynamic_graph"]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    suites = [args.only] if args.only else SUITES
+    print("name,us_per_call,derived")
+    failed = 0
+    for s in suites:
+        try:
+            mod = importlib.import_module(f"benchmarks.{s}")
+            for row in mod.run(quick=args.quick):
+                print(f"{row['name']},{row['us_per_call']:.1f},"
+                      f"\"{row['derived']}\"", flush=True)
+        except Exception:
+            failed += 1
+            print(f"{s},ERROR,\"{traceback.format_exc(limit=2)}\"",
+                  file=sys.stderr, flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Multimodal learning with CARLS (paper §4.3, Fig. 5): an image-text-style
+two-tower model trained with a contrastive loss where the negative pool is
+served by the Knowledge Bank and refreshed maker-style, instead of being
+limited to the in-batch negatives.
+
+Run:  PYTHONPATH=src python examples/multimodal_two_tower.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import kb_create, kb_lookup, kb_update
+from repro.data import PairedCorpus
+from repro.models import build_model
+from repro.models.losses import contrastive_loss, masked_mean_pool
+from repro.optim import AdamW, constant_lr
+from repro.sharding.partition import DistContext
+
+DIST = DistContext()
+
+
+def embed(model, params, toks):
+    h, _, _, _ = model.hidden(params, toks, {}, DIST)
+    return masked_mean_pool(h, jnp.ones(toks.shape, jnp.float32))
+
+
+def recall_at_1(ma, mb, params, corpus, n=128):
+    ev = corpus.batch(np.random.default_rng(99), n)
+    ea = embed(ma, params["a"], jnp.asarray(ev["tokens_a"]))
+    eb = embed(mb, params["b"], jnp.asarray(ev["tokens_b"]))
+    sim = np.asarray(ea @ eb.T)
+    return float((sim.argmax(1) == np.arange(n)).mean())
+
+
+def train(n_negatives, steps=60, batch=16, seed=0):
+    cfg = get_config("internvl2-2b").reduced().replace(num_layers=2,
+                                                       frontend="none")
+    corpus = PairedCorpus(num_pairs=1024, vocab_size=cfg.vocab_size,
+                          num_concepts=32, seed=0)
+    ma, mb = build_model(cfg), build_model(cfg)
+    ka, kb_key = jax.random.split(jax.random.key(seed))
+    params = {"a": ma.init(ka), "b": mb.init(kb_key)}
+    opt = AdamW(lr=constant_lr(2e-3), weight_decay=0.0)
+    st = opt.init(params)
+    bank = kb_create(corpus.num_pairs, cfg.d_model)
+
+    @jax.jit
+    def step(params, st, bank, ta, tb, neg_ids):
+        negs, bank = kb_lookup(bank, neg_ids, apply_pending=False)
+
+        def loss_fn(p):
+            ea = embed(ma, p["a"], ta)
+            eb = embed(mb, p["b"], tb)
+            extra = negs if n_negatives else None
+            return contrastive_loss(ea, eb, extra_negatives=extra), eb
+
+        (l, eb), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, st, _ = opt.update(g, st, params)
+        return params, st, bank, l, eb
+
+    rng = np.random.default_rng(seed)
+    for s in range(steps):
+        b = corpus.batch(rng, batch)
+        neg_ids = jnp.asarray(
+            rng.integers(0, corpus.num_pairs, (max(n_negatives, 1),)))
+        params, st, bank, l, eb = step(params, st, bank,
+                                       jnp.asarray(b["tokens_a"]),
+                                       jnp.asarray(b["tokens_b"]), neg_ids)
+        # knowledge-maker role: keep the bank's tower-b embeddings fresh
+        bank = kb_update(bank, jnp.asarray(b["ids"]), eb)
+    return recall_at_1(ma, mb, params, corpus), float(l)
+
+
+def main():
+    print("=== two-tower contrastive: scaling negatives via the KB ===")
+    for n_neg in (0, 64, 256):
+        r1, loss = train(n_neg)
+        print(f"negatives={n_neg:4d}: recall@1={r1:.3f} final_loss={loss:.3f}"
+              f"  (extra negatives cost one KB lookup, not {n_neg} encoder"
+              " passes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""CARLS quickstart: asynchronous graph-regularized semi-supervised training
+(paper Fig. 1 + §4.1) on one host.
+
+Components wired together:
+- Model Trainer  : tiny llama-style LM + graph regularizer (main thread)
+- Knowledge Maker: 2 daemon threads re-encoding nodes with the latest
+                   checkpoint and pushing embeddings
+- Knowledge Bank : thread-safe server with lazy gradient updates
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import run_async_training
+from repro.data import SyntheticGraphCorpus
+from repro.models import build_model
+
+
+def main():
+    cfg = get_config("yi-6b").reduced().replace(num_layers=2)
+    model = build_model(cfg)
+    corpus = SyntheticGraphCorpus(
+        num_nodes=1024, vocab_size=cfg.vocab_size, seq_len=33,
+        num_clusters=8, neighbors_per_node=cfg.carls.num_neighbors)
+
+    print("=== CARLS async training: trainer + 2 knowledge makers ===")
+    res = run_async_training(model, corpus, steps=60, batch_size=16,
+                             num_makers=2, maker_batch=64, ckpt_period=5,
+                             lr=2e-3, seed=0)
+    print(f"loss: {res.losses[0]:.4f} -> {np.mean(res.losses[-5:]):.4f}")
+    print(f"graph-reg: {res.reg_losses[0]:.4f} -> "
+          f"{np.mean(res.reg_losses[-5:]):.4f}")
+    print(f"maker refreshes (concurrent with training): "
+          f"{res.maker_refreshes}")
+    print(f"mean embedding staleness (trainer steps): "
+          f"{res.mean_staleness:.2f}")
+    print(f"mean trainer step: {np.mean(res.step_times[2:])*1e3:.1f} ms "
+          f"(independent of maker load — that's the point)")
+
+    # the bank now holds model-space node embeddings; same-cluster nodes
+    # should be closer than cross-cluster ones
+    tbl = res.server.table_snapshot()
+    c = corpus.clusters
+    same = np.einsum("id,id->i", tbl[corpus.neighbor_table[:, 0]], tbl)
+    rng = np.random.default_rng(0)
+    rand = np.einsum("id,id->i",
+                     tbl[rng.integers(0, corpus.num_nodes, corpus.num_nodes)],
+                     tbl)
+    print(f"avg similarity to graph neighbor: {same.mean():.4f}  "
+          f"to random node: {rand.mean():.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpointing import (DiskCheckpointStore,
+                                            MemoryCheckpointStore,
+                                            flatten_params, unflatten_params)
+
+__all__ = ["DiskCheckpointStore", "MemoryCheckpointStore", "flatten_params",
+           "unflatten_params"]

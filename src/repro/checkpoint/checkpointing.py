@@ -1,0 +1,127 @@
+"""Versioned checkpointing — the weight-transfer channel between model
+trainers and knowledge makers (paper §3.1: "knowledge makers keep the same
+machine states as model trainers by periodically loading the parameters from
+the latest checkpoints").
+
+Two backends with one interface:
+- ``DiskCheckpointStore``: flattened-pytree npz files, atomic rename, pruning.
+- ``MemoryCheckpointStore``: in-process, lock-protected — used by the async
+  runtime so trainer/maker threads exchange weights at memory speed.
+"""
+from __future__ import annotations
+
+import os
+import re
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "::"
+
+
+def flatten_params(params) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = {}
+    for path, leaf in flat:
+        key = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype not in (np.float32, np.float64, np.int32, np.int64,
+                             np.bool_, np.uint32, np.int8, np.uint8,
+                             np.float16):
+            arr = arr.astype(np.float32)   # bf16 etc: npz can't store them
+        out[key] = arr
+    return out
+
+
+def unflatten_params(template, flat: Dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths[0]:
+        key = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = flat[key]
+        leaves.append(arr.astype(leaf.dtype).reshape(leaf.shape)
+                      if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(paths[1], leaves)
+
+
+class DiskCheckpointStore:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+
+    def save(self, step: int, params) -> str:
+        flat = flatten_params(params)
+        tmp = self._path(step) + ".tmp.npz"   # .npz suffix: savez won't append
+        np.savez(tmp, **flat)
+        os.replace(tmp, self._path(step))
+        self._prune()
+        return self._path(step)
+
+    def _prune(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            try:
+                os.remove(self._path(s))
+            except OSError:
+                pass
+
+    def steps(self) -> List[int]:
+        out = []
+        for f in os.listdir(self.dir):
+            m = re.match(r"ckpt_(\d+)\.npz$", f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def load(self, step: int, template) -> Any:
+        with np.load(self._path(step)) as z:
+            flat = {k: z[k] for k in z.files}
+        return unflatten_params(template, flat)
+
+    def load_latest(self, template) -> Tuple[Optional[int], Any]:
+        s = self.latest_step()
+        if s is None:
+            return None, None
+        return s, self.load(s, template)
+
+
+class MemoryCheckpointStore:
+    """Thread-safe in-memory store. Holds device arrays directly (no host
+    round-trip), so makers pick up new trainer weights instantly."""
+
+    def __init__(self, keep: int = 2):
+        self._lock = threading.Lock()
+        self._ckpts: Dict[int, Any] = {}
+        self.keep = keep
+        self.publish_times: Dict[int, float] = {}
+
+    def save(self, step: int, params):
+        with self._lock:
+            self._ckpts[step] = params
+            self.publish_times[step] = time.monotonic()
+            for s in sorted(self._ckpts)[:-self.keep]:
+                del self._ckpts[s]
+
+    def latest_step(self) -> Optional[int]:
+        with self._lock:
+            return max(self._ckpts) if self._ckpts else None
+
+    def load_latest(self, template=None) -> Tuple[Optional[int], Any]:
+        with self._lock:
+            if not self._ckpts:
+                return None, None
+            s = max(self._ckpts)
+            return s, self._ckpts[s]

@@ -1,0 +1,6 @@
+from repro.configs.base import (CarlsConfig, InputShape, INPUT_SHAPES,
+                                ModelConfig)
+from repro.configs.registry import ARCH_IDS, all_configs, get_config, get_shape
+
+__all__ = ["CarlsConfig", "InputShape", "INPUT_SHAPES", "ModelConfig",
+           "ARCH_IDS", "all_configs", "get_config", "get_shape"]

@@ -1,0 +1,32 @@
+"""CARLS core: Knowledge Bank, Knowledge Makers, Model Trainer glue, and the
+asynchronous host runtime."""
+from repro.core.knowledge_bank import (FeatureStore, KBState,
+                                       feature_store_create, fs_lookup_neighbors,
+                                       fs_update_labels, fs_update_neighbors,
+                                       kb_create, kb_flush, kb_lazy_grad,
+                                       kb_lookup, kb_nn_search, kb_update)
+from repro.core.sharded_kb import (kb_axes, kb_pspecs, sharded_kb_lazy_grad,
+                                   sharded_kb_lookup, sharded_kb_nn_search,
+                                   sharded_kb_update)
+from repro.core.trainer import (make_async_train_fns, make_carls_train_step,
+                                make_inline_baseline_step, model_loss)
+from repro.core.knowledge_maker import (graph_agreement_labels,
+                                        make_embed_fn,
+                                        make_embedding_refresh,
+                                        make_graph_builder, make_label_mining)
+from repro.core.async_runtime import (AsyncRunResult, KnowledgeBankServer,
+                                      MakerLoop, run_async_training)
+
+__all__ = [
+    "FeatureStore", "KBState", "feature_store_create", "fs_lookup_neighbors",
+    "fs_update_labels", "fs_update_neighbors", "kb_create", "kb_flush",
+    "kb_lazy_grad", "kb_lookup", "kb_nn_search", "kb_update",
+    "kb_axes", "kb_pspecs", "sharded_kb_lazy_grad", "sharded_kb_lookup",
+    "sharded_kb_nn_search", "sharded_kb_update",
+    "make_async_train_fns", "make_carls_train_step",
+    "make_inline_baseline_step", "model_loss",
+    "graph_agreement_labels", "make_embed_fn", "make_embedding_refresh",
+    "make_graph_builder", "make_label_mining",
+    "AsyncRunResult", "KnowledgeBankServer", "MakerLoop",
+    "run_async_training",
+]

@@ -1,0 +1,218 @@
+"""Asynchronous host runtime: real trainer / knowledge-maker concurrency.
+
+This is the faithful execution model of the paper's Figure 1 on one host:
+
+- ``KnowledgeBankServer``  : thread-safe bank (embedding table + feature
+  store + lazy-gradient cache) with version counters and staleness metrics —
+  the stand-in for the sharded Bigtable/DynamicEmbedding servers.
+- ``MakerLoop`` (thread)   : repeatedly loads the LATEST checkpoint published
+  by the trainer, re-encodes a round-robin slice of nodes, and pushes
+  embeddings. Runs concurrently with — and never blocks — training.
+- ``run_async_training``   : the trainer loop. Each step it (1) looks up
+  neighbor features + embeddings from the server, (2) runs the jitted train
+  core, (3) hands the neighbor-embedding gradients back to the server's lazy
+  cache, (4) periodically publishes a checkpoint.
+
+Asynchrony knobs: number of maker threads, maker batch size, checkpoint
+publish period (== the paper's "data freshness" axis, measured and reported
+as `staleness` = trainer_step - ckpt_step_used_by_maker).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import MemoryCheckpointStore
+from repro.core import knowledge_bank as kbm
+from repro.core.trainer import make_async_train_fns
+from repro.data.pipeline import SyntheticGraphCorpus
+from repro.models.model import LM
+from repro.optim import AdamW
+from repro.sharding.partition import DistContext
+
+
+class KnowledgeBankServer:
+    """Thread-safe knowledge bank with the same lazy-update semantics as the
+    functional ops (it *uses* them, under a lock)."""
+
+    def __init__(self, num_entries: int, dim: int, *, lazy_lr: float = 0.1,
+                 zmax: float = 3.0, lazy_update: bool = True):
+        self._kb = kbm.kb_create(num_entries, dim)
+        self._lock = threading.RLock()
+        self.lazy_lr, self.zmax, self.lazy_update = lazy_lr, zmax, lazy_update
+        # row -> trainer step of the checkpoint that produced the row
+        self._row_src_step = np.full((num_entries,), -1, np.int64)
+        self.metrics = {"lookups": 0, "updates": 0, "lazy_grads": 0,
+                        "rows_served": 0, "stale_rows_served": 0,
+                        "staleness_sum": 0.0}
+
+    # -- embedding ops -----------------------------------------------------
+    def lookup(self, ids: np.ndarray, *, trainer_step: int = 0) -> np.ndarray:
+        with self._lock:
+            vals, self._kb = kbm.kb_lookup(
+                self._kb, jnp.asarray(ids), lazy_lr=self.lazy_lr,
+                zmax=self.zmax, apply_pending=self.lazy_update)
+            flat = np.asarray(ids).reshape(-1)
+            src = self._row_src_step[flat]
+            known = src >= 0
+            self.metrics["lookups"] += 1
+            self.metrics["rows_served"] += flat.size
+            self.metrics["stale_rows_served"] += int(
+                (known & (src < trainer_step)).sum())
+            self.metrics["staleness_sum"] += float(
+                np.maximum(trainer_step - src[known], 0).sum())
+            return np.asarray(vals)
+
+    def update(self, ids, values, *, src_step: int = 0):
+        with self._lock:
+            self._kb = kbm.kb_update(self._kb, jnp.asarray(ids),
+                                     jnp.asarray(values))
+            self._row_src_step[np.asarray(ids).reshape(-1)] = src_step
+            self.metrics["updates"] += 1
+
+    def lazy_grad(self, ids, grads):
+        with self._lock:
+            if self.lazy_update:
+                self._kb = kbm.kb_lazy_grad(self._kb, jnp.asarray(ids),
+                                            jnp.asarray(grads),
+                                            zmax=self.zmax)
+            else:  # naive immediate SGD scatter (ablation baseline)
+                flat = jnp.asarray(ids).reshape(-1)
+                g = jnp.asarray(grads).reshape(flat.shape[0], -1)
+                tbl = self._kb.table.at[flat].add(-self.lazy_lr * g)
+                self._kb = self._kb._replace(table=tbl)
+            self.metrics["lazy_grads"] += 1
+
+    def flush(self):
+        with self._lock:
+            self._kb = kbm.kb_flush(self._kb, lazy_lr=self.lazy_lr,
+                                    zmax=self.zmax)
+
+    def nn_search(self, queries, k: int):
+        with self._lock:
+            return kbm.kb_nn_search(self._kb, jnp.asarray(queries), k)
+
+    def table_snapshot(self) -> np.ndarray:
+        with self._lock:
+            return np.asarray(self._kb.table)
+
+    @property
+    def mean_staleness(self) -> float:
+        served = max(self.metrics["rows_served"], 1)
+        return self.metrics["staleness_sum"] / served
+
+
+class MakerLoop(threading.Thread):
+    """Embedding-refresh knowledge maker (§4.1) as a daemon thread."""
+
+    def __init__(self, server: KnowledgeBankServer,
+                 ckpts: MemoryCheckpointStore, embed_fn: Callable,
+                 corpus: SyntheticGraphCorpus, *, batch_size: int = 64,
+                 node_slice: Optional[np.ndarray] = None,
+                 min_period_s: float = 0.0, name: str = "maker"):
+        super().__init__(daemon=True, name=name)
+        self.server, self.ckpts, self.embed_fn = server, ckpts, embed_fn
+        self.corpus = corpus
+        self.batch_size = batch_size
+        self.nodes = (node_slice if node_slice is not None
+                      else np.arange(corpus.num_nodes))
+        self.min_period_s = min_period_s
+        self.stop_event = threading.Event()
+        self.refreshes = 0
+        self.ckpt_steps_used: List[int] = []
+        self._cursor = 0
+
+    def run(self):
+        while not self.stop_event.is_set():
+            step, params = self.ckpts.load_latest()
+            if params is None:
+                time.sleep(0.005)
+                continue
+            ids = self.nodes[np.arange(self._cursor,
+                                       self._cursor + self.batch_size)
+                             % len(self.nodes)]
+            self._cursor = (self._cursor + self.batch_size) % len(self.nodes)
+            toks = self.corpus.node_tokens(ids)[:, :-1]
+            emb = self.embed_fn(params, jnp.asarray(toks))
+            self.server.update(ids, np.asarray(emb), src_step=step)
+            self.refreshes += 1
+            self.ckpt_steps_used.append(step)
+            if self.min_period_s:
+                time.sleep(self.min_period_s)
+
+
+@dataclass
+class AsyncRunResult:
+    losses: List[float]
+    reg_losses: List[float]
+    step_times: List[float]
+    maker_refreshes: int
+    mean_staleness: float
+    final_params: dict = field(repr=False, default=None)
+    server: KnowledgeBankServer = field(repr=False, default=None)
+
+
+def run_async_training(model: LM, corpus: SyntheticGraphCorpus, *,
+                       steps: int = 50, batch_size: int = 16,
+                       num_makers: int = 1, maker_batch: int = 64,
+                       ckpt_period: int = 5, lr: float = 1e-3,
+                       reg_weight: Optional[float] = None,
+                       lazy_update: bool = True,
+                       use_makers: bool = True,
+                       seed: int = 0) -> AsyncRunResult:
+    """End-to-end asynchronous CARLS training on one host."""
+    from repro.optim import constant_lr
+    cfg = model.cfg
+    dist = DistContext()
+    opt = AdamW(lr=constant_lr(lr), weight_decay=0.0)
+    params = model.init(jax.random.key(seed))
+    opt_state = opt.init(params)
+    train_core, embed_fn = make_async_train_fns(model, opt, dist,
+                                                reg_weight=reg_weight)
+    server = KnowledgeBankServer(corpus.num_nodes, cfg.d_model,
+                                 lazy_lr=cfg.carls.lazy_lr,
+                                 zmax=cfg.carls.outlier_zmax,
+                                 lazy_update=lazy_update)
+    ckpts = MemoryCheckpointStore()
+    ckpts.save(0, params)
+    makers = []
+    if use_makers:
+        slices = np.array_split(np.arange(corpus.num_nodes), num_makers)
+        makers = [MakerLoop(server, ckpts, embed_fn, corpus,
+                            batch_size=maker_batch, node_slice=s,
+                            name=f"maker{i}")
+                  for i, s in enumerate(slices)]
+        for mk in makers:
+            mk.start()
+
+    rng = np.random.default_rng(seed + 1)
+    losses, regs, times = [], [], []
+    for step in range(steps):
+        batch = corpus.batch(rng, batch_size)
+        nbr_emb = server.lookup(batch["neighbor_ids"], trainer_step=step)
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        t0 = time.perf_counter()
+        params, opt_state, pooled, gn, metrics = train_core(
+            params, opt_state, jb, jnp.asarray(nbr_emb))
+        jax.block_until_ready(pooled)
+        times.append(time.perf_counter() - t0)
+        server.lazy_grad(batch["neighbor_ids"], np.asarray(gn))
+        losses.append(float(metrics["loss"]))
+        regs.append(float(metrics.get("graph_reg", 0.0)))
+        if (step + 1) % ckpt_period == 0:
+            ckpts.save(step + 1, params)
+    for mk in makers:
+        mk.stop_event.set()
+    for mk in makers:
+        mk.join(timeout=5.0)
+    return AsyncRunResult(
+        losses=losses, reg_losses=regs, step_times=times,
+        maker_refreshes=sum(m.refreshes for m in makers),
+        mean_staleness=server.mean_staleness,
+        final_params=params, server=server)

@@ -1,0 +1,229 @@
+"""Knowledge Bank (paper §3.2) as a functional JAX state.
+
+The bank stores one row per instance: an embedding, a version counter, and
+the *lazy gradient update* caches. Three op families from the paper:
+
+- feature lookup      : ``FeatureStore`` (neighbor ids/weights, labels)
+- embedding lookup/update with back-propagated gradients (DynamicEmbedding-
+  style): ``kb_lookup`` / ``kb_update`` / ``kb_lazy_grad`` / ``kb_flush``
+- nearest-neighbor lookup: ``kb_nn_search``
+
+Lazy update semantics (faithful to §3.2): gradients arriving from (possibly
+many) trainers are cached (sum + count + squared-norm stats), and applied as
+the *average of all cached gradients with outlier detection* at the next
+lookup of that row — or en masse by ``kb_flush`` (the "expiration" path).
+Outlier detection keeps O(1) state per row: the averaged gradient's norm is
+clipped at ``zmax * sqrt(mean per-contribution squared norm)``, rejecting
+update mass contributed by abnormally large cached gradients.
+
+The distributed (mesh-sharded) implementation with identical semantics lives
+in ``repro.core.sharded_kb``.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KBState(NamedTuple):
+    table: jnp.ndarray          # (N, D)
+    version: jnp.ndarray        # (N,) int32 — bumped on every write
+    grad_sum: jnp.ndarray       # (N, D) f32 — cached gradient sum
+    grad_cnt: jnp.ndarray       # (N,) f32 — number of cached gradients
+    grad_sqnorm: jnp.ndarray    # (N,) f32 — sum of per-gradient sq norms
+    norm_ema: jnp.ndarray       # (N,) f32 — EMA of contribution sq norms
+    step: jnp.ndarray           # () int32 — bank clock
+
+
+_EMA_DECAY = 0.9
+
+
+class FeatureStore(NamedTuple):
+    """Paper's 'feature lookup': per-instance features keyed by id."""
+    nbr_ids: jnp.ndarray        # (N, K) int32, -1 = missing
+    nbr_weights: jnp.ndarray    # (N, K) f32
+    labels: jnp.ndarray         # (N,) int32, -1 = unlabeled
+    label_conf: jnp.ndarray     # (N,) f32 — confidence of (mined) labels
+
+
+def kb_create(num_entries: int, dim: int, *, dtype=jnp.float32,
+              key: Optional[jax.Array] = None) -> KBState:
+    if key is not None:
+        table = (jax.random.normal(key, (num_entries, dim), jnp.float32)
+                 * 0.01).astype(dtype)
+    else:
+        table = jnp.zeros((num_entries, dim), dtype)
+    return KBState(
+        table=table,
+        version=jnp.zeros((num_entries,), jnp.int32),
+        grad_sum=jnp.zeros((num_entries, dim), jnp.float32),
+        grad_cnt=jnp.zeros((num_entries,), jnp.float32),
+        grad_sqnorm=jnp.zeros((num_entries,), jnp.float32),
+        norm_ema=jnp.zeros((num_entries,), jnp.float32),
+        step=jnp.int32(0),
+    )
+
+
+def feature_store_create(num_entries: int, max_neighbors: int) -> FeatureStore:
+    return FeatureStore(
+        nbr_ids=jnp.full((num_entries, max_neighbors), -1, jnp.int32),
+        nbr_weights=jnp.zeros((num_entries, max_neighbors), jnp.float32),
+        labels=jnp.full((num_entries,), -1, jnp.int32),
+        label_conf=jnp.zeros((num_entries,), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# lazy-update math (shared with sharded_kb)
+# ---------------------------------------------------------------------------
+
+def pending_delta(grad_sum, grad_cnt, grad_sqnorm, *, lazy_lr: float,
+                  zmax: float):
+    """The update each row would receive if its cache were applied now.
+
+    Average of cached gradients, norm-clipped at zmax * rms contribution
+    norm (outlier rejection). Rows with an empty cache get zero."""
+    cnt = jnp.maximum(grad_cnt, 1.0)[..., None]
+    avg = grad_sum / cnt
+    avg_norm = jnp.linalg.norm(avg, axis=-1, keepdims=True)
+    rms = jnp.sqrt(grad_sqnorm / jnp.maximum(grad_cnt, 1.0))[..., None]
+    cap = zmax * jnp.maximum(rms, 1e-12)
+    scale = jnp.minimum(1.0, cap / jnp.maximum(avg_norm, 1e-12))
+    delta = -lazy_lr * avg * scale
+    return jnp.where((grad_cnt > 0)[..., None], delta, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+def kb_lookup(kb: KBState, ids: jnp.ndarray, *, lazy_lr: float = 0.1,
+              zmax: float = 3.0, apply_pending: bool = True
+              ) -> Tuple[jnp.ndarray, KBState]:
+    """Fetch rows ``ids`` (any shape). If ``apply_pending``, first applies the
+    lazily-cached gradient average to those rows (paper: "caching the results
+    of gradient update until the next lookup request arrives")."""
+    flat = ids.reshape(-1)
+    if apply_pending:
+        delta = pending_delta(kb.grad_sum[flat], kb.grad_cnt[flat],
+                              kb.grad_sqnorm[flat], lazy_lr=lazy_lr,
+                              zmax=zmax)
+        new_rows = kb.table[flat].astype(jnp.float32) + delta
+        table = kb.table.at[flat].set(new_rows.astype(kb.table.dtype))
+        kb = kb._replace(
+            table=table,
+            grad_sum=kb.grad_sum.at[flat].set(0.0),
+            grad_cnt=kb.grad_cnt.at[flat].set(0.0),
+            grad_sqnorm=kb.grad_sqnorm.at[flat].set(0.0),
+            version=kb.version.at[flat].add(
+                (kb.grad_cnt[flat] > 0).astype(jnp.int32)),
+        )
+        vals = new_rows.reshape(*ids.shape, -1)
+    else:
+        vals = kb.table[flat].astype(jnp.float32).reshape(*ids.shape, -1)
+    return vals, kb
+
+
+def kb_update(kb: KBState, ids: jnp.ndarray, values: jnp.ndarray) -> KBState:
+    """Direct write (knowledge-maker push). ids: (...,); values: (..., D).
+    Cached gradients for overwritten rows are discarded (they were computed
+    against stale values)."""
+    flat = ids.reshape(-1)
+    vals = values.reshape(flat.shape[0], -1)
+    return kb._replace(
+        table=kb.table.at[flat].set(vals.astype(kb.table.dtype)),
+        version=kb.version.at[flat].add(1),
+        grad_sum=kb.grad_sum.at[flat].set(0.0),
+        grad_cnt=kb.grad_cnt.at[flat].set(0.0),
+        grad_sqnorm=kb.grad_sqnorm.at[flat].set(0.0),
+        step=kb.step + 1,
+    )
+
+
+def kb_lazy_grad(kb: KBState, ids: jnp.ndarray, grads: jnp.ndarray,
+                 *, zmax: float = 0.0) -> KBState:
+    """Cache gradients w.r.t. looked-up rows. ids: (...,); grads (..., D).
+    Duplicate ids accumulate (each counts as one cached gradient).
+
+    Entry-side outlier detection (``zmax > 0``): each incoming gradient's
+    norm is clipped at ``zmax * sqrt(norm_ema)`` — a persistent EMA of
+    per-contribution squared norms — so a single corrupted trainer cannot
+    poison the cached average (§3.2 "average of all cached gradients with
+    possible outlier detection")."""
+    flat = ids.reshape(-1)
+    g = grads.reshape(flat.shape[0], -1).astype(jnp.float32)
+    sq = jnp.sum(g * g, axis=-1)
+    if zmax and zmax > 0:
+        ema = kb.norm_ema[flat]
+        cap = zmax * jnp.sqrt(jnp.maximum(ema, 1e-30))
+        nrm = jnp.sqrt(jnp.maximum(sq, 1e-30))
+        scale = jnp.where(ema > 0, jnp.minimum(1.0, cap / nrm), 1.0)
+        g = g * scale[:, None]
+        sq = sq * scale * scale
+    return kb._replace(
+        grad_sum=kb.grad_sum.at[flat].add(g),
+        grad_cnt=kb.grad_cnt.at[flat].add(1.0),
+        grad_sqnorm=kb.grad_sqnorm.at[flat].add(sq),
+        norm_ema=kb.norm_ema.at[flat].set(
+            jnp.where(kb.norm_ema[flat] > 0,
+                      _EMA_DECAY * kb.norm_ema[flat] + (1 - _EMA_DECAY) * sq,
+                      sq)),
+    )
+
+
+def kb_flush(kb: KBState, *, lazy_lr: float = 0.1, zmax: float = 3.0
+             ) -> KBState:
+    """Expiration path: apply every pending cached gradient now."""
+    delta = pending_delta(kb.grad_sum, kb.grad_cnt, kb.grad_sqnorm,
+                          lazy_lr=lazy_lr, zmax=zmax)
+    return kb._replace(
+        table=(kb.table.astype(jnp.float32) + delta).astype(kb.table.dtype),
+        version=kb.version + (kb.grad_cnt > 0).astype(jnp.int32),
+        grad_sum=jnp.zeros_like(kb.grad_sum),
+        grad_cnt=jnp.zeros_like(kb.grad_cnt),
+        grad_sqnorm=jnp.zeros_like(kb.grad_sqnorm),
+        step=kb.step + 1,
+    )
+
+
+def kb_nn_search(kb: KBState, queries: jnp.ndarray, k: int,
+                 *, exclude_ids: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k maximum-inner-product search over the whole bank.
+
+    queries: (B, D) -> (scores (B, k), ids (B, k)). Reference path; the
+    blocked Pallas kernel lives in repro.kernels.nn_search."""
+    scores = queries.astype(jnp.float32) @ kb.table.T.astype(jnp.float32)
+    if exclude_ids is not None:
+        B = queries.shape[0]
+        excl = jnp.zeros(scores.shape, bool).at[
+            jnp.arange(B)[:, None], exclude_ids].set(
+            exclude_ids >= 0, mode="drop")
+        scores = jnp.where(excl, -jnp.inf, scores)
+    return jax.lax.top_k(scores, k)
+
+
+# ---------------------------------------------------------------------------
+# feature-store ops
+# ---------------------------------------------------------------------------
+
+def fs_lookup_neighbors(fs: FeatureStore, ids: jnp.ndarray, k: int):
+    """ids: (B,) -> (nbr_ids (B, k), nbr_weights (B, k))."""
+    return fs.nbr_ids[ids, :k], fs.nbr_weights[ids, :k]
+
+
+def fs_update_neighbors(fs: FeatureStore, ids, nbr_ids, nbr_weights):
+    return fs._replace(nbr_ids=fs.nbr_ids.at[ids].set(nbr_ids),
+                       nbr_weights=fs.nbr_weights.at[ids].set(nbr_weights))
+
+
+def fs_update_labels(fs: FeatureStore, ids, labels, conf):
+    """Confidence-gated label write (curriculum / label mining §4.2)."""
+    better = conf > fs.label_conf[ids]
+    return fs._replace(
+        labels=fs.labels.at[ids].set(jnp.where(better, labels,
+                                               fs.labels[ids])),
+        label_conf=fs.label_conf.at[ids].set(jnp.where(better, conf,
+                                                       fs.label_conf[ids])))

@@ -1,0 +1,119 @@
+"""Knowledge Makers (paper §3.1): jobs that load the latest trainer
+checkpoint and produce knowledge for the bank. Each maker is a pure jitted
+program; the async runtime (or a detached pod) drives it in a loop.
+
+Implemented maker types, mapping 1:1 to the paper's examples:
+- ``embedding_refresh``  : re-encode a slice of nodes with the latest
+  checkpoint and push embeddings (§4.1 graph regularization / Fig. 2-3).
+- ``label_mining``       : re-infer class labels with confidence gating
+  (§4.2.1 online label mining for noisy labels).
+- ``graph_agreement``    : infer labels for unlabeled nodes from their
+  nearest labeled neighbors in embedding space (§4.2.2).
+- ``graph_builder``      : rebuild the neighborhood graph from current
+  embeddings via KB nearest-neighbor search ("the graph structure can be
+  dynamically updated with the similarity between computed node embeddings").
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import knowledge_bank as kbm
+from repro.core import sharded_kb as skb
+from repro.models.losses import masked_mean_pool
+from repro.models.model import LM
+from repro.sharding.partition import DistContext
+
+
+def make_embedding_refresh(model: LM, dist: DistContext):
+    """(ckpt_params, kb, node_ids, node_tokens) -> kb with fresh rows."""
+
+    def maker_step(params, kb, node_ids, node_tokens):
+        h, prefix, _, _ = model.hidden(params, node_tokens, {}, dist)
+        mask = jnp.ones(node_tokens.shape, jnp.float32)
+        emb = masked_mean_pool(h[:, prefix:] if prefix else h, mask)
+        if dist.mesh is not None:
+            return skb.sharded_kb_update(kb, node_ids, emb, dist)
+        return kbm.kb_update(kb, node_ids, emb)
+
+    return maker_step
+
+
+def make_embed_fn(model: LM, dist: DistContext):
+    def embed(params, node_tokens):
+        h, prefix, _, _ = model.hidden(params, node_tokens, {}, dist)
+        mask = jnp.ones(node_tokens.shape, jnp.float32)
+        return masked_mean_pool(h[:, prefix:] if prefix else h, mask)
+    return embed
+
+
+def make_label_mining(model: LM, dist: DistContext, *, num_classes: int,
+                      conf_threshold: float = 0.6):
+    """§4.2.1: infer labels from the model's own predictions; only write when
+    prediction confidence beats both the threshold and the stored label's
+    confidence (fs_update_labels is confidence-gated).
+
+    Class read-out: mean logits over the class-token slice of the vocab (the
+    synthetic corpus encodes the class in a vocab range, see data.pipeline).
+    """
+
+    def maker_step(params, fs: kbm.FeatureStore, node_ids, node_tokens,
+                   class_readout: Callable):
+        h, prefix, _, _ = model.hidden(params, node_tokens, {}, dist)
+        mask = jnp.ones(node_tokens.shape, jnp.float32)
+        emb = masked_mean_pool(h[:, prefix:] if prefix else h, mask)
+        logits = class_readout(params, h, emb)              # (B, num_classes)
+        probs = jax.nn.softmax(logits, axis=-1)
+        conf = probs.max(-1)
+        pred = jnp.argmax(probs, -1).astype(jnp.int32)
+        conf = jnp.where(conf >= conf_threshold, conf, 0.0)
+        return kbm.fs_update_labels(fs, node_ids, pred, conf), (pred, conf)
+
+    return maker_step
+
+
+def graph_agreement_labels(kb: kbm.KBState, fs: kbm.FeatureStore,
+                           query_emb, query_ids, *, k: int = 8,
+                           num_classes: int, dist: DistContext = None):
+    """§4.2.2 graph agreement: label = weighted vote of the k nearest
+    *labeled* neighbors in the current embedding space."""
+    labeled = fs.labels >= 0
+    masked_table = jnp.where(labeled[:, None], kb.table, 0.0)
+    tmp = kb._replace(table=masked_table)
+    if dist is not None and dist.mesh is not None:
+        scores, ids = skb.sharded_kb_nn_search(tmp, query_emb, k, dist)
+    else:
+        scores, ids = kbm.kb_nn_search(tmp, query_emb, k,
+                                       exclude_ids=query_ids[:, None])
+    votes_lab = fs.labels[ids]                               # (B, k)
+    w = jax.nn.softmax(jnp.where(votes_lab >= 0, scores, -jnp.inf), axis=-1)
+    onehot = jax.nn.one_hot(jnp.clip(votes_lab, 0), num_classes) * \
+        (votes_lab >= 0)[..., None]
+    tally = jnp.einsum("bk,bkc->bc", w, onehot)
+    conf = tally.max(-1)
+    pred = jnp.argmax(tally, -1).astype(jnp.int32)
+    return pred, conf
+
+
+def make_graph_builder(dist: DistContext, *, k: int):
+    """Dynamic graph discovery: neighbors of a node = top-k most similar
+    embeddings currently in the bank (excluding itself)."""
+
+    def maker_step(kb: kbm.KBState, fs: kbm.FeatureStore, node_ids):
+        q = kb.table[node_ids].astype(jnp.float32)
+        if dist.mesh is not None:
+            scores, ids = skb.sharded_kb_nn_search(kb, q, k + 1, dist)
+        else:
+            scores, ids = kbm.kb_nn_search(kb, q, k + 1)
+        # drop self-matches
+        self_m = ids == node_ids[:, None]
+        order = jnp.argsort(jnp.where(self_m, 1, 0), axis=-1, stable=True)
+        ids = jnp.take_along_axis(ids, order, -1)[:, :k]
+        scores = jnp.take_along_axis(scores, order, -1)[:, :k]
+        w = jnp.maximum(scores, 0.0)
+        return kbm.fs_update_neighbors(fs, node_ids, ids, w)
+
+    return maker_step

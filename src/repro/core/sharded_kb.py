@@ -1,0 +1,216 @@
+"""Mesh-sharded Knowledge Bank — the TPU-native translation of the paper's
+"sharded and deployed in a distributed fashion" bank (§3.2).
+
+Rows are sharded across EVERY mesh axis (512-way on the multi-pod mesh). The
+RPC fan-out/fan-in of the original becomes:
+
+- lookup : each shard gathers the ids it owns (clamped local gather, zeros
+           elsewhere) and the results are combined with one ``psum`` whose
+           payload is O(B*K*D) — constant in the bank size N. Pending lazy
+           gradients are applied owner-side first, fused into the same op.
+- update / lazy_grad : owner-masked scatter, no communication at all.
+- nn_search : per-shard blocked top-k (Pallas kernel on TPU), then an
+           all-gather of the (B, k) candidate sets and a global re-top-k —
+           the hierarchical ScaNN-sharding pattern, payload O(B*k*shards).
+
+Semantics are bit-identical to ``repro.core.knowledge_bank`` (tested by
+tests/test_sharded_kb.py); both share ``pending_delta``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.knowledge_bank import KBState, pending_delta
+from repro.sharding.partition import DistContext
+
+
+def kb_axes(dist: DistContext) -> Tuple[str, ...]:
+    """Every mesh axis: the bank shards over all of them."""
+    axes = (dist.data_axis, dist.model_axis)
+    if dist.pod_axis:
+        axes = (dist.pod_axis,) + axes
+    return axes
+
+
+def kb_pspecs(dist: DistContext) -> KBState:
+    """PartitionSpec tree for a KBState on this mesh."""
+    ax = kb_axes(dist)
+    return KBState(table=P(ax, None), version=P(ax), grad_sum=P(ax, None),
+                   grad_cnt=P(ax), grad_sqnorm=P(ax), norm_ema=P(ax),
+                   step=P())
+
+
+def _owner_bounds(n_rows_local: int, axes):
+    """(offset, n_local) of this shard's row range inside the global table."""
+    idx = 0
+    for a in axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx * n_rows_local, n_rows_local
+
+
+# ---------------------------------------------------------------------------
+# lookup (+ fused lazy apply)
+# ---------------------------------------------------------------------------
+
+def sharded_kb_lookup(kb: KBState, ids: jnp.ndarray, dist: DistContext, *,
+                      lazy_lr: float = 0.1, zmax: float = 3.0,
+                      apply_pending: bool = True):
+    """ids: any shape, replicated. Returns (values (..., D) replicated, kb')."""
+    axes = kb_axes(dist)
+    specs = kb_pspecs(dist)
+
+    def body(table, version, gsum, gcnt, gsq, ids):
+        flat = ids.reshape(-1)
+        off, n_loc = _owner_bounds(table.shape[0], axes)
+        lid_raw = flat - off
+        mine = (lid_raw >= 0) & (lid_raw < n_loc)
+        lid = jnp.clip(lid_raw, 0, n_loc - 1)          # for gathers
+        lid_w = jnp.where(mine, lid_raw, n_loc)        # scatters: OOB dropped
+        rows = table[lid].astype(jnp.float32)
+        if apply_pending:
+            delta = pending_delta(gsum[lid], gcnt[lid], gsq[lid],
+                                  lazy_lr=lazy_lr, zmax=zmax)
+            rows = rows + jnp.where(mine[:, None], delta, 0.0)
+            table = table.at[lid_w].set(rows.astype(table.dtype), mode="drop")
+            version = version.at[lid_w].add((gcnt[lid] > 0).astype(jnp.int32),
+                                            mode="drop")
+            gsum = gsum.at[lid_w].set(0.0, mode="drop")
+            gcnt = gcnt.at[lid_w].set(0.0, mode="drop")
+            gsq = gsq.at[lid_w].set(0.0, mode="drop")
+        vals = jnp.where(mine[:, None], rows, 0.0)
+        vals = jax.lax.psum(vals, axes)
+        return vals, table, version, gsum, gcnt, gsq
+
+    vals, table, version, gsum, gcnt, gsq = jax.shard_map(
+        body, mesh=dist.mesh,
+        in_specs=(specs.table, specs.version, specs.grad_sum, specs.grad_cnt,
+                  specs.grad_sqnorm, P(*([None] * ids.ndim))),
+        out_specs=(P(None, None), specs.table, specs.version,
+                   specs.grad_sum, specs.grad_cnt, specs.grad_sqnorm),
+        check_vma=False,
+    )(kb.table, kb.version, kb.grad_sum, kb.grad_cnt, kb.grad_sqnorm, ids)
+    vals = vals.reshape(*ids.shape, -1)
+    return vals, kb._replace(table=table, version=version, grad_sum=gsum,
+                             grad_cnt=gcnt, grad_sqnorm=gsq)
+
+
+# ---------------------------------------------------------------------------
+# update / lazy grad (owner-masked scatter, zero communication)
+# ---------------------------------------------------------------------------
+
+def sharded_kb_update(kb: KBState, ids, values, dist: DistContext) -> KBState:
+    axes = kb_axes(dist)
+    specs = kb_pspecs(dist)
+
+    def body(table, version, gsum, gcnt, gsq, ids, values):
+        flat = ids.reshape(-1)
+        vals = values.reshape(flat.shape[0], -1)
+        off, n_loc = _owner_bounds(table.shape[0], axes)
+        lid = flat - off
+        mine = (lid >= 0) & (lid < n_loc)
+        lid = jnp.where(mine, lid, n_loc)              # OOB -> dropped
+        table = table.at[lid].set(vals.astype(table.dtype), mode="drop")
+        version = version.at[lid].add(1, mode="drop")
+        gsum = gsum.at[lid].set(0.0, mode="drop")
+        gcnt = gcnt.at[lid].set(0.0, mode="drop")
+        gsq = gsq.at[lid].set(0.0, mode="drop")
+        return table, version, gsum, gcnt, gsq
+
+    table, version, gsum, gcnt, gsq = jax.shard_map(
+        body, mesh=dist.mesh,
+        in_specs=(specs.table, specs.version, specs.grad_sum, specs.grad_cnt,
+                  specs.grad_sqnorm, P(*([None] * ids.ndim)),
+                  P(*([None] * values.ndim))),
+        out_specs=(specs.table, specs.version, specs.grad_sum,
+                   specs.grad_cnt, specs.grad_sqnorm),
+        check_vma=False,
+    )(kb.table, kb.version, kb.grad_sum, kb.grad_cnt, kb.grad_sqnorm, ids,
+      values)
+    return kb._replace(table=table, version=version, grad_sum=gsum,
+                       grad_cnt=gcnt, grad_sqnorm=gsq, step=kb.step + 1)
+
+
+def sharded_kb_lazy_grad(kb: KBState, ids, grads, dist: DistContext,
+                         *, zmax: float = 0.0) -> KBState:
+    from repro.core.knowledge_bank import _EMA_DECAY
+    axes = kb_axes(dist)
+    specs = kb_pspecs(dist)
+
+    def body(gsum, gcnt, gsq, ema, ids, grads):
+        flat = ids.reshape(-1)
+        g = grads.reshape(flat.shape[0], -1).astype(jnp.float32)
+        off, n_loc = _owner_bounds(gsum.shape[0], axes)
+        lid_raw = flat - off
+        mine = (lid_raw >= 0) & (lid_raw < n_loc)
+        lid_g = jnp.clip(lid_raw, 0, n_loc - 1)
+        lid = jnp.where(mine, lid_raw, n_loc)
+        sq = jnp.sum(g * g, -1)
+        if zmax and zmax > 0:  # entry-side outlier clip vs persistent EMA
+            e = ema[lid_g]
+            cap = zmax * jnp.sqrt(jnp.maximum(e, 1e-30))
+            nrm = jnp.sqrt(jnp.maximum(sq, 1e-30))
+            scale = jnp.where(e > 0, jnp.minimum(1.0, cap / nrm), 1.0)
+            g = g * scale[:, None]
+            sq = sq * scale * scale
+        gsum = gsum.at[lid].add(g, mode="drop")
+        gcnt = gcnt.at[lid].add(1.0, mode="drop")
+        gsq = gsq.at[lid].add(sq, mode="drop")
+        new_ema = jnp.where(ema[lid_g] > 0,
+                            _EMA_DECAY * ema[lid_g] + (1 - _EMA_DECAY) * sq,
+                            sq)
+        ema = ema.at[lid].set(new_ema, mode="drop")
+        return gsum, gcnt, gsq, ema
+
+    gsum, gcnt, gsq, ema = jax.shard_map(
+        body, mesh=dist.mesh,
+        in_specs=(specs.grad_sum, specs.grad_cnt, specs.grad_sqnorm,
+                  specs.norm_ema, P(*([None] * ids.ndim)),
+                  P(*([None] * grads.ndim))),
+        out_specs=(specs.grad_sum, specs.grad_cnt, specs.grad_sqnorm,
+                   specs.norm_ema),
+        check_vma=False,
+    )(kb.grad_sum, kb.grad_cnt, kb.grad_sqnorm, kb.norm_ema, ids, grads)
+    return kb._replace(grad_sum=gsum, grad_cnt=gcnt, grad_sqnorm=gsq,
+                       norm_ema=ema)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical nn search
+# ---------------------------------------------------------------------------
+
+def sharded_kb_nn_search(kb: KBState, queries, k: int, dist: DistContext,
+                         use_kernel: bool = False):
+    """queries: (B, D) replicated -> (scores (B,k), ids (B,k)) replicated.
+    Local top-k per shard, all-gather of candidates, global re-top-k."""
+    axes = kb_axes(dist)
+    specs = kb_pspecs(dist)
+
+    def body(table, queries):
+        off, n_loc = _owner_bounds(table.shape[0], axes)
+        kk = min(k, n_loc)
+        if use_kernel:
+            from repro.kernels.ops import nn_search_topk
+            ls, li = nn_search_topk(queries, table, kk)
+        else:
+            scores = queries.astype(jnp.float32) @ table.T.astype(jnp.float32)
+            ls, li = jax.lax.top_k(scores, kk)
+        li = li + off
+        # gather candidates from every shard: (B, k*n_shards)
+        for a in axes:
+            ls = jax.lax.all_gather(ls, a, axis=1, tiled=True)
+            li = jax.lax.all_gather(li, a, axis=1, tiled=True)
+        gs, gi = jax.lax.top_k(ls, k)
+        ids = jnp.take_along_axis(li, gi, axis=1)
+        return gs, ids
+
+    return jax.shard_map(
+        body, mesh=dist.mesh,
+        in_specs=(specs.table, P(None, None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False,
+    )(kb.table, queries)

@@ -1,0 +1,165 @@
+"""Model Trainer (paper §3.3): the main training job plus the "communication
+module" that talks to the Knowledge Bank.
+
+Three step builders:
+
+- ``make_carls_train_step``     : CE loss + graph regularizer on neighbor
+  embeddings FETCHED from the KB (constant cost in neighbor count — the
+  paper's headline property). Gradients w.r.t. the fetched embeddings flow
+  into the bank through the lazy-update cache; optionally the trainer pushes
+  its own fresh sample embeddings ("synchronous maker" mode).
+- ``make_inline_baseline_step`` : the paper's comparison point — neighbor
+  embeddings are recomputed in-trainer every step, so cost grows linearly
+  with the number of neighbors.
+- ``make_async_train_fns``      : the variant used by the asynchronous host
+  runtime, where KB traffic happens outside the jitted step (device<->server).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import knowledge_bank as kbm
+from repro.core import sharded_kb as skb
+from repro.models.losses import chunked_xent, graph_reg_loss, masked_mean_pool
+from repro.models.model import LM
+from repro.optim import AdamW
+from repro.sharding.partition import DistContext
+
+
+def _extra_from_batch(batch: Dict) -> Dict:
+    return {k: batch[k] for k in ("patch_embs", "frames") if k in batch}
+
+
+def model_loss(model: LM, params, batch, dist, nbr_emb=None,
+               reg_weight: float = 0.0, xent_chunk: int = 512):
+    """Shared loss: LM cross-entropy (+ MoE aux) (+ CARLS graph reg)."""
+    cfg = model.cfg
+    h, prefix, aux, _ = model.hidden(params, batch["tokens"],
+                                     _extra_from_batch(batch), dist)
+    h_text = h[:, prefix:] if prefix else h
+    out_emb = model.out_embed(params)
+    ce, metrics = chunked_xent(h_text, out_emb, batch["labels"],
+                               batch["mask"], chunk=xent_chunk)
+    pooled = masked_mean_pool(h_text, batch["mask"])
+    loss = ce + 0.01 * aux
+    metrics = dict(metrics, ce=ce, aux=aux)
+    if nbr_emb is not None and reg_weight > 0:
+        reg = graph_reg_loss(pooled, nbr_emb, batch["neighbor_weights"])
+        loss = loss + reg_weight * reg
+        metrics["graph_reg"] = reg
+    return loss, (metrics, pooled)
+
+
+def make_carls_train_step(model: LM, optimizer: AdamW, dist: DistContext,
+                          *, trainer_push: bool = True,
+                          xent_chunk: int = 512):
+    """Returns step(params, opt_state, kb, batch) -> (params, opt_state, kb,
+    metrics). The KB is threaded through the step (in-graph CARLS: the
+    technique as a first-class training-loop feature)."""
+    cfg = model.cfg
+    cc = cfg.carls
+
+    def lookup(kb, ids):
+        if dist.mesh is not None:
+            return skb.sharded_kb_lookup(kb, ids, dist, lazy_lr=cc.lazy_lr,
+                                         zmax=cc.outlier_zmax,
+                                         apply_pending=cc.lazy_update)
+        return kbm.kb_lookup(kb, ids, lazy_lr=cc.lazy_lr,
+                             zmax=cc.outlier_zmax,
+                             apply_pending=cc.lazy_update)
+
+    def lazy_grad(kb, ids, g):
+        if dist.mesh is not None:
+            return skb.sharded_kb_lazy_grad(kb, ids, g, dist,
+                                            zmax=cc.outlier_zmax)
+        return kbm.kb_lazy_grad(kb, ids, g, zmax=cc.outlier_zmax)
+
+    def update(kb, ids, vals):
+        if dist.mesh is not None:
+            return skb.sharded_kb_update(kb, ids, vals, dist)
+        return kbm.kb_update(kb, ids, vals)
+
+    def step(params, opt_state, kb, batch):
+        nbr_ids = batch["neighbor_ids"]
+        nbr_emb, kb = lookup(kb, nbr_ids)
+
+        def loss_fn(p, nbr):
+            return model_loss(model, p, batch, dist, nbr_emb=nbr,
+                              reg_weight=cc.reg_weight,
+                              xent_chunk=xent_chunk)
+
+        (loss, (metrics, pooled)), (gp, gn) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(params, nbr_emb)
+        # DynamicEmbedding-style: embedding grads go to the bank's lazy cache
+        kb = lazy_grad(kb, nbr_ids, gn)
+        if trainer_push:
+            kb = update(kb, batch["sample_ids"], pooled)
+        params, opt_state, gnorm = optimizer.update(gp, opt_state, params)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       kb_pending=kb.grad_cnt.sum())
+        return params, opt_state, kb, metrics
+
+    return step
+
+
+def make_inline_baseline_step(model: LM, optimizer: AdamW, dist: DistContext,
+                              *, num_neighbors: int, xent_chunk: int = 512):
+    """Paper's baseline: encode the K neighbors inside the trainer. Work
+    grows linearly with K (batch['neighbor_tokens']: (B, K, S))."""
+    cfg = model.cfg
+    cc = cfg.carls
+
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            nt = batch["neighbor_tokens"][:, :num_neighbors]
+            B, K, S = nt.shape
+            nh, npref, _, _ = model.hidden(p, nt.reshape(B * K, S), {}, dist)
+            nmask = jnp.ones((B * K, S), jnp.float32)
+            nbr = masked_mean_pool(nh, nmask).reshape(B, K, -1)
+            nbr = jax.lax.stop_gradient(nbr)
+            return model_loss(model, p, batch, dist, nbr_emb=nbr,
+                              reg_weight=cc.reg_weight,
+                              xent_chunk=xent_chunk)
+
+        (loss, (metrics, pooled)), gp = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, gnorm = optimizer.update(gp, opt_state, params)
+        return params, opt_state, dict(metrics, loss=loss, grad_norm=gnorm)
+
+    return step
+
+
+def make_async_train_fns(model: LM, optimizer: AdamW, dist: DistContext,
+                         *, reg_weight: Optional[float] = None,
+                         xent_chunk: int = 512):
+    """For the host async runtime: the jitted core takes neighbor embeddings
+    as an *input* (fetched from the KB server between steps) and returns the
+    gradient w.r.t. them (pushed to the server's lazy cache afterwards)."""
+    cfg = model.cfg
+    rw = cfg.carls.reg_weight if reg_weight is None else reg_weight
+
+    @jax.jit
+    def train_core(params, opt_state, batch, nbr_emb):
+        def loss_fn(p, nbr):
+            return model_loss(model, p, batch, dist, nbr_emb=nbr,
+                              reg_weight=rw, xent_chunk=xent_chunk)
+
+        (loss, (metrics, pooled)), (gp, gn) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(params, nbr_emb)
+        params, opt_state, gnorm = optimizer.update(gp, opt_state, params)
+        return params, opt_state, pooled, gn, dict(metrics, loss=loss,
+                                                   grad_norm=gnorm)
+
+    @jax.jit
+    def embed_fn(params, tokens):
+        h, prefix, _, _ = model.hidden(params, tokens, {}, dist)
+        mask = jnp.ones(tokens.shape, jnp.float32)
+        return masked_mean_pool(h[:, prefix:] if prefix else h, mask)
+
+    return train_core, embed_fn

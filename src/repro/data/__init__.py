@@ -1,0 +1,3 @@
+from repro.data.pipeline import PairedCorpus, SyntheticGraphCorpus
+
+__all__ = ["PairedCorpus", "SyntheticGraphCorpus"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each with a
+pure-jnp oracle in ref.py and a jitted wrapper in ops.py (interpret=True on
+CPU; pass interpret=False on real TPUs):
+
+- nn_search        : blocked top-k MIPS over a bank shard (ScaNN -> MXU)
+- flash_attention  : block-triangular causal/windowed flash attention
+- kb_gather        : embedding lookup as blocked one-hot MXU matmul
+- rwkv_wkv         : RWKV6 WKV recurrence, state in VMEM scratch
+- lazy_apply       : fused KB lazy-update application (paper §3.2 hot path)
+- mamba_scan       : chunked selective scan, state in VMEM (ds x less HBM)
+"""

@@ -1,0 +1,105 @@
+"""Blocked top-k MIPS Pallas kernel — the ScaNN-shard adapted to TPU (§3.2).
+
+Design (DESIGN.md §3 item 3): instead of ScaNN's CPU-side anisotropic
+quantization, a TPU shard scores its rows *densely* on the MXU in
+(QB x NB) VMEM tiles and maintains a running top-k per query in VMEM
+scratch. The k best are extracted with k iterative max+mask passes (k is
+small and static), which lowers to pure VPU ops — no sort, no top_k
+primitive needed inside the kernel.
+
+Grid: (num_query_blocks, num_bank_blocks); the bank axis is the sequential
+("arbitrary") dimension so the running top-k scratch carries across it.
+VMEM per step: QB*D + NB*D + QB*NB + 2*QB*k floats — sized so QB=NB=256,
+D<=1024 stays well under 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG = -1e30
+
+
+def _merge_topk(scores, ids, best_s, best_i, k: int):
+    """scores/ids: (QB, M) candidates; best_s/best_i: (QB, k) running.
+    Returns updated (best_s, best_i). Ties prefer lower id (stable)."""
+    all_s = jnp.concatenate([best_s, scores], axis=1)
+    all_i = jnp.concatenate([best_i, ids], axis=1)
+    out_s, out_i = [], []
+    for _ in range(k):
+        # argmax with lowest-id tie-break: order by (score, -id)
+        m = jnp.max(all_s, axis=1, keepdims=True)
+        is_max = all_s >= m
+        cand_id = jnp.where(is_max, all_i, jnp.iinfo(jnp.int32).max)
+        sel_id = jnp.min(cand_id, axis=1, keepdims=True)
+        sel = is_max & (all_i == sel_id)
+        # take the first selected column
+        first = jnp.cumsum(sel.astype(jnp.int32), axis=1) == 1
+        sel = sel & first
+        out_s.append(m[:, 0])
+        out_i.append(sel_id[:, 0])
+        all_s = jnp.where(sel, NEG, all_s)
+    return jnp.stack(out_s, 1), jnp.stack(out_i, 1)
+
+
+def _nn_kernel(q_ref, bank_ref, os_ref, oi_ref, bs_ref, bi_ref, *, k: int,
+               nb_block: int, n_total: int):
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _():
+        bs_ref[...] = jnp.full_like(bs_ref, NEG)
+        bi_ref[...] = jnp.full_like(bi_ref, jnp.iinfo(jnp.int32).max)
+
+    q = q_ref[...].astype(jnp.float32)                    # (QB, D)
+    b = bank_ref[...].astype(jnp.float32)                 # (NB, D)
+    scores = jax.lax.dot_general(q, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    base = nb * nb_block
+    ids = base + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    # mask padding rows beyond the true bank size
+    scores = jnp.where(ids < n_total, scores, NEG)
+    bs, bi = _merge_topk(scores, ids, bs_ref[...], bi_ref[...], k)
+    bs_ref[...] = bs
+    bi_ref[...] = bi
+
+    @pl.when(nb == pl.num_programs(1) - 1)
+    def _():
+        os_ref[...] = bs_ref[...]
+        oi_ref[...] = bi_ref[...]
+
+
+def nn_search_pallas(queries, bank, k: int, *, q_block: int = 128,
+                     n_block: int = 256, interpret: bool = True):
+    """queries: (B, D); bank: (N, D) -> (scores (B, k), ids (B, k))."""
+    B, D = queries.shape
+    N = bank.shape[0]
+    qb = min(q_block, B)
+    nb = min(n_block, N)
+    # pad to block multiples
+    Bp = -(-B // qb) * qb
+    Np = -(-N // nb) * nb
+    qp = jnp.pad(queries, ((0, Bp - B), (0, 0)))
+    bp = jnp.pad(bank, ((0, Np - N), (0, 0)))
+    grid = (Bp // qb, Np // nb)
+    kern = functools.partial(_nn_kernel, k=k, nb_block=nb, n_total=N)
+    out_s, out_i = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((qb, D), lambda i, j: (i, 0)),
+                  pl.BlockSpec((nb, D), lambda i, j: (j, 0))],
+        out_specs=[pl.BlockSpec((qb, k), lambda i, j: (i, 0)),
+                   pl.BlockSpec((qb, k), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((Bp, k), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, k), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((qb, k), jnp.float32),
+                        pltpu.VMEM((qb, k), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qp, bp)
+    return out_s[:B], out_i[:B]

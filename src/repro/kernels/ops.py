@@ -1,0 +1,61 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; interpret mode
+executes the kernel body with jax ops, validating logic + BlockSpecs). On a
+real TPU pass ``interpret=False`` — the call sites in the model/KB layers
+thread a single flag through.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.kb_gather import kb_gather_pallas
+from repro.kernels.nn_search import nn_search_pallas
+from repro.kernels.rwkv_wkv import rwkv_wkv_pallas
+
+
+@partial(jax.jit, static_argnames=("k", "interpret"))
+def nn_search_topk(queries, bank, k: int, interpret: bool = True):
+    return nn_search_pallas(queries, bank, k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, interpret: bool = True):
+    """q/k/v: (B, H, S, d) -> (B, H, S, d)."""
+    B, H, S, d = q.shape
+    f = lambda a: a.reshape(B * H, S, d)
+    out = flash_attention_pallas(f(q), f(k), f(v), causal=causal,
+                                 window=window, softcap=softcap,
+                                 interpret=interpret)
+    return out.reshape(B, H, S, d)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def kb_gather(table, ids, interpret: bool = True):
+    return kb_gather_pallas(table, ids, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def rwkv_wkv(r, k, v, w, u, interpret: bool = True):
+    return rwkv_wkv_pallas(r, k, v, w, u, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("lazy_lr", "zmax", "interpret"))
+def lazy_apply(table, grad_sum, grad_cnt, grad_sqnorm, *,
+               lazy_lr: float = 0.1, zmax: float = 3.0,
+               interpret: bool = True):
+    from repro.kernels.lazy_apply import lazy_apply_pallas
+    return lazy_apply_pallas(table, grad_sum, grad_cnt, grad_sqnorm,
+                             lazy_lr=lazy_lr, zmax=zmax, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def mamba_scan(delta, bm, cm, x, A, interpret: bool = True):
+    from repro.kernels.mamba_scan import mamba_scan_pallas
+    return mamba_scan_pallas(delta, bm, cm, x, A, interpret=interpret)

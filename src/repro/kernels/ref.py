@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def nn_search_ref(queries, bank, k: int):
+    """Top-k MIPS. queries: (B, D); bank: (N, D) -> (scores (B,k), ids (B,k)).
+    Ties broken by lower id (matches the kernel's merge order)."""
+    scores = queries.astype(jnp.float32) @ bank.T.astype(jnp.float32)
+    return jax.lax.top_k(scores, k)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0):
+    """q: (B, H, S, d); k/v: (B, H, S, d) (heads already repeated)."""
+    B, H, S, d = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(
+        q.dtype)
+
+
+def kb_gather_ref(table, ids):
+    """table: (N, D); ids: (B,) -> (B, D)."""
+    return table[ids]
+
+
+def lazy_apply_ref(table, grad_sum, grad_cnt, grad_sqnorm, *,
+                   lazy_lr: float = 0.1, zmax: float = 3.0):
+    """kb_flush semantics (knowledge_bank.pending_delta inlined)."""
+    from repro.core.knowledge_bank import pending_delta
+    delta = pending_delta(grad_sum, grad_cnt, grad_sqnorm, lazy_lr=lazy_lr,
+                          zmax=zmax)
+    new = (table.astype(jnp.float32) + delta).astype(table.dtype)
+    return (new, jnp.zeros_like(grad_sum), jnp.zeros_like(grad_cnt),
+            jnp.zeros_like(grad_sqnorm))
+
+
+def mamba_scan_ref(delta, bm, cm, x, A):
+    """delta/x: (B,S,di); bm/cm: (B,S,ds); A: (di,ds) -> y (B,S,di) f32."""
+    B, S, di = delta.shape
+
+    def step(h, inp):
+        d_t, b_t, c_t, x_t = inp
+        a_t = jnp.exp(d_t[..., None].astype(jnp.float32) * A[None])
+        h = a_t * h + (d_t * x_t.astype(jnp.float32))[..., None] * \
+            b_t[:, None, :].astype(jnp.float32)
+        return h, jnp.einsum("bds,bs->bd", h, c_t.astype(jnp.float32))
+
+    tr = lambda a: a.transpose(1, 0, 2)
+    h0 = jnp.zeros((B, di, A.shape[-1]), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (tr(delta), tr(bm), tr(cm), tr(x)))
+    return ys.transpose(1, 0, 2)
+
+
+def rwkv_wkv_ref(r, k, v, w, u):
+    """RWKV6 WKV. r/k/v/w: (B, S, H, d); u: (H, d) -> (B, S, H, d) f32."""
+    B, S, H, d = r.shape
+
+    def step(S_st, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhi,bhj->bhij", k_t.astype(jnp.float32),
+                        v_t.astype(jnp.float32))
+        y = jnp.einsum("bhi,bhij->bhj", r_t.astype(jnp.float32),
+                       S_st + u[None, :, :, None] * kv)
+        return S_st * w_t.astype(jnp.float32)[..., None] + kv, y
+
+    tr = lambda a: a.transpose(1, 0, 2, 3)
+    S0 = jnp.zeros((B, H, d, d), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, (tr(r), tr(k), tr(v), tr(w)))
+    return ys.transpose(1, 0, 2, 3)

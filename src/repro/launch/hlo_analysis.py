@@ -1,0 +1,318 @@
+"""Roofline-term extraction from compiled HLO.
+
+Why not ``compiled.cost_analysis()`` alone: XLA's aggregate cost analysis
+counts each ``while`` body ONCE, so scan-over-layers models under-report
+FLOPs/bytes by the layer count, and collective traffic inside scans is
+invisible. This module parses ``compiled.as_text()`` (post-optimization,
+post-SPMD-partitioning => all numbers are PER DEVICE) and walks the call
+graph, multiplying each while body by its ``known_trip_count``.
+
+Counted:
+- flops       : every ``dot`` op (2 * numel(out) * contracted elems); model
+                FLOPs are >99% dots. Elementwise flops are ignored (they are
+                bandwidth-, not compute-, limited anyway).
+- hbm bytes   : operand + result bytes of materialized top-level ops
+                (fusion boundaries, dots, copies, gathers/scatters,
+                slices/updates, converts, collectives...). Fusion internals
+                are register traffic and not counted — this approximates
+                XLA's own "bytes accessed" convention.
+- wire bytes  : per-collective link traffic with ring-algorithm factors:
+                all-reduce 2(n-1)/n * S, all-gather/reduce-scatter
+                (n-1)/n * S_full, all-to-all (n-1)/n * S,
+                collective-permute S.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops whose operands/results are real HBM traffic at fusion boundaries
+_MATERIAL = ("fusion", "dot", "copy", "gather", "scatter", "dynamic-slice",
+             "dynamic-update-slice", "convert", "reduce", "transpose",
+             "concatenate", "pad", "slice", "broadcast", "iota", "reverse",
+             "convolution", "select-and-scatter", "sort", "rng",
+             "custom-call") + _COLLECTIVES
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'f32[8,16]' token (0 for tuples/opaque/token)."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _shape_numel(shape_str: str) -> Tuple[int, List[int]]:
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0, []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return math.prod(dims) if dims else 1, dims
+
+
+@dataclass
+class OpCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+
+    def __iadd__(self, o: "OpCost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.wire_bytes += o.wire_bytes
+        for k, v in o.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0) + v
+        for k, v in o.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0) + v
+        return self
+
+    def scaled(self, m: float) -> "OpCost":
+        return OpCost(self.flops * m, self.hbm_bytes * m, self.wire_bytes * m,
+                      {k: v * m for k, v in self.collective_counts.items()},
+                      {k: v * m for k, v in self.collective_bytes.items()})
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)(?:\.clone)? \([^)]*\)"
+                          r" -> .* \{$")
+_CALL_REFS = re.compile(r"(?:body|to_apply|calls|condition)=%?([\w\.\-]+)")
+_BRANCH_REFS = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def parse_computations(hlo_text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None and "=" in s:
+            comps[cur].append(s)
+    return comps
+
+
+def _entry_name(hlo_text: str) -> Optional[str]:
+    m = re.search(r"^ENTRY %?([\w\.\-]+)", hlo_text, re.M)
+    if m:
+        return m.group(1)
+    m = re.search(r"entry_computation_name=([\w\.\-]+)", hlo_text)
+    return m.group(1) if m else None
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_OLD_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return max(total_devices, 1)
+
+
+def _op_kind(line: str) -> Optional[str]:
+    # "%name = TYPE opkind(...)" — opkind is the token before '('
+    m = re.search(r"=\s*(?:\([^)]*\)|[\w\[\],{}]+)\s+([\w\-]+)\(", line)
+    return m.group(1) if m else None
+
+
+def _result_shape(line: str) -> str:
+    m = re.search(r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[\d,]*\})?))",
+                  line)
+    return m.group(1) if m else ""
+
+
+_NAME_RE = re.compile(r"^(?:ROOT )?%?([\w\.\-]+)\s*=")
+
+
+def _op_name(line: str) -> Optional[str]:
+    m = _NAME_RE.match(line)
+    return m.group(1) if m else None
+
+
+def _operand_names(line: str) -> List[str]:
+    m = re.search(r"[\w\-]+\((.*)$", line)
+    if not m:
+        return []
+    return re.findall(r"%([\w\.\-]+)", m.group(1))
+
+
+def _operand_shapes(line: str, symtab: Dict[str, str]) -> List[str]:
+    return [symtab.get(n, "") for n in _operand_names(line)]
+
+
+def _dot_flops(line: str, symtab: Dict[str, str]) -> float:
+    out_numel, _ = _shape_numel(_result_shape(line).lstrip("("))
+    ops = _operand_shapes(line, symtab)
+    if not ops or not ops[0]:
+        return 0.0
+    _, lhs_dims = _shape_numel(ops[0])
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contract = 1
+    if mc and mc.group(1):
+        for d in mc.group(1).split(","):
+            contract *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+    return 2.0 * out_numel * contract
+
+
+def _line_cost(line: str, kind: str, total_devices: int,
+               symtab: Dict[str, str]) -> OpCost:
+    c = OpCost()
+    res = _result_shape(line)
+    res_b = (sum(_shape_bytes(s) for s in
+                 re.findall(r"\w+\[[\d,]*\]", res)))
+    opnd_b = sum(_shape_bytes(re.sub(r"\{[\d,]*\}", "", s))
+                 for s in _operand_shapes(line, symtab) if s)
+    if kind == "dot":
+        c.flops = _dot_flops(line, symtab)
+    if kind in _COLLECTIVES:
+        n = _group_size(line, total_devices)
+        if kind == "all-reduce":
+            wire = 2.0 * (n - 1) / n * res_b
+        elif kind == "all-gather":
+            wire = (n - 1) / n * res_b
+        elif kind == "reduce-scatter":
+            wire = (n - 1) / n * res_b * n   # input = n x output
+        elif kind == "all-to-all":
+            wire = (n - 1) / n * res_b
+        else:  # collective-permute
+            wire = float(res_b)
+        c.wire_bytes = wire
+        c.collective_counts[kind] = 1
+        c.collective_bytes[kind] = wire
+    c.hbm_bytes = float(res_b + opnd_b)
+    return c
+
+
+def analyze_hlo(hlo_text: str, total_devices: int) -> OpCost:
+    comps = parse_computations(hlo_text)
+    entry = _entry_name(hlo_text)
+    if entry is None or entry not in comps:
+        entry = next(iter(comps)) if comps else None
+    memo: Dict[str, OpCost] = {}
+
+    symtabs: Dict[str, Dict[str, str]] = {}
+    for cname, lines in comps.items():
+        st = {}
+        for line in lines:
+            nm = _op_name(line)
+            if nm:
+                st[nm] = re.sub(r"\{[\d,]*\}", "", _result_shape(line))
+        symtabs[cname] = st
+
+    def comp_cost(name: str, stack=(), count_bytes=True) -> OpCost:
+        key = (name, count_bytes)
+        if key in memo:
+            return memo[key]
+        if name not in comps or name in stack:
+            return OpCost()
+        total = OpCost()
+        st = symtabs[name]
+        for line in comps[name]:
+            kind = _op_kind(line)
+            if kind is None:
+                continue
+            if kind not in ("while", "call", "conditional", "fusion"):
+                lc = _line_cost(line, kind, total_devices, st)
+                if not count_bytes:
+                    lc.hbm_bytes = 0.0  # fusion internals: register traffic
+                if kind in _MATERIAL or kind in _COLLECTIVES or \
+                        kind == "dot":
+                    total += lc
+                elif lc.flops:
+                    total += lc
+                continue
+            # ops that reference other computations
+            names = _CALL_REFS.findall(line)
+            for br in _BRANCH_REFS.findall(line):
+                names += [x.strip().lstrip("%") for x in br.split(",")]
+            mult = 1.0
+            if kind == "while":
+                mt = _TRIP_RE.search(line)
+                mult = float(mt.group(1)) if mt else 1.0
+            inner_bytes = count_bytes and kind != "fusion"
+            for cn in names:
+                sub = comp_cost(cn, stack + (name,), inner_bytes)
+                total += sub.scaled(mult if kind == "while" else 1.0)
+            if kind == "fusion":
+                lc = _line_cost(line, kind, total_devices, st)
+                lc.flops = 0.0
+                if not count_bytes:
+                    lc.hbm_bytes = 0.0
+                total += lc
+        memo[key] = total
+        return total
+
+    return comp_cost(entry) if entry else OpCost()
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+V5E_PEAK_FLOPS = 197e12       # bf16 per chip
+V5E_HBM_BW = 819e9            # bytes/s per chip
+V5E_ICI_BW = 50e9             # bytes/s per link
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    collective_counts: Dict[str, int]
+    collective_bytes: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+
+    def to_dict(self):
+        return dict(self.__dict__)
+
+
+def roofline_from_cost(c: OpCost, *, model_flops_per_device: float = 0.0
+                       ) -> Roofline:
+    ct = c.flops / V5E_PEAK_FLOPS
+    mt = c.hbm_bytes / V5E_HBM_BW
+    lt = c.wire_bytes / V5E_ICI_BW
+    terms = {"compute": ct, "memory": mt, "collective": lt}
+    bn = max(terms, key=terms.get)
+    return Roofline(flops=c.flops, hbm_bytes=c.hbm_bytes,
+                    wire_bytes=c.wire_bytes,
+                    collective_counts=dict(c.collective_counts),
+                    collective_bytes=dict(c.collective_bytes),
+                    compute_s=ct, memory_s=mt, collective_s=lt,
+                    bottleneck=bn,
+                    model_flops=model_flops_per_device,
+                    useful_ratio=(model_flops_per_device / c.flops
+                                  if c.flops else 0.0))

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing never touches jax
+device state. The dry-run sets XLA_FLAGS for 512 host devices before any
+import; real launches get real TPU topologies.
+
+- single pod : (data=16, model=16) = 256 chips (one v5e pod)
+- multi pod  : (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+  pure data parallelism with params replicated across it, so a pod can be
+  detached to run knowledge-maker programs (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, found {len(devices)}; "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before importing jax")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_host_mesh(shape=None, axes=("data", "model")) -> Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (1, n)
+    dev = np.asarray(jax.devices()[:int(np.prod(shape))]).reshape(shape)
+    return Mesh(dev, axes)

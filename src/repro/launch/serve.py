@@ -1,0 +1,74 @@
+"""Serving launcher: batched prefill + decode on real devices.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+
+Runs a reduced config end-to-end: prefill the prompt batch, then greedy
+decode. Full-size serve programs (decode_32k / long_500k) are exercised via
+the dry-run lowering of the same ``decode_step``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.sharding.partition import DistContext
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="yi-6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    dist = DistContext()
+    params = model.init(jax.random.key(args.seed))
+    rng = np.random.default_rng(args.seed)
+    B = args.batch
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                    (B, args.prompt_len)), jnp.int32)
+    extra = {}
+    if cfg.frontend == "vision":
+        extra["patch_embs"] = jnp.zeros(
+            (B, cfg.num_frontend_tokens, cfg.d_model), jnp.float32)
+    if cfg.frontend == "audio":
+        extra["frames"] = jnp.zeros(
+            (B, cfg.num_frontend_tokens, cfg.d_model), jnp.float32)
+
+    t0 = time.perf_counter()
+    cache, _ = model.prefill(params, toks, extra, dist,
+                             cache_len=args.prompt_len + args.gen +
+                             (cfg.num_frontend_tokens
+                              if cfg.frontend == "vision" else 0) + 1)
+    jax.block_until_ready(cache["t"])
+    t_prefill = time.perf_counter() - t0
+
+    step = jax.jit(lambda p, c, t: model.decode_step(p, c, t, extra, dist))
+    last = toks[:, -1:]
+    out = []
+    t0 = time.perf_counter()
+    for _ in range(args.gen):
+        logits, cache = step(params, cache, last)
+        last = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(np.asarray(last))
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+    gen = np.concatenate(out, axis=1)
+    print(f"arch={cfg.name} prefill({B}x{args.prompt_len})={t_prefill*1e3:.0f}ms"
+          f" decode {args.gen} tok: {t_decode/args.gen*1e3:.1f} ms/tok")
+    print("generated:", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x input-shape)
+combination — the dry-run's inputs. No device allocation happens here.
+
+``input_specs(cfg, shape)`` returns, per the shape kind:
+- train   : the full CARLS training batch (tokens/labels/mask, sample ids,
+            neighbor ids/weights, modality-frontend stub embeddings).
+- prefill : (tokens, extra) for the prompt-processing step.
+- decode  : (cache, token, extra) for one-token serve_step with a
+            seq_len-sized KV cache (ring/window cache for long_500k on
+            attention archs; O(1) recurrent state for SSM layers).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.model import LM
+from repro.sharding.partition import DistContext, batch_pspec, cache_pspecs
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _frontend_extra(cfg: ModelConfig, B: int) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "vision":
+        return {"patch_embs": SDS((B, cfg.num_frontend_tokens, cfg.d_model),
+                                  dt)}
+    if cfg.frontend == "audio":
+        return {"frames": SDS((B, cfg.num_frontend_tokens, cfg.d_model), dt)}
+    return {}
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    K = cfg.carls.num_neighbors
+    batch = {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+        "mask": SDS((B, S), jnp.float32),
+        "sample_ids": SDS((B,), jnp.int32),
+        "neighbor_ids": SDS((B, K), jnp.int32),
+        "neighbor_weights": SDS((B, K), jnp.float32),
+    }
+    batch.update(_frontend_extra(cfg, B))
+    return batch
+
+
+def train_batch_shardings(cfg: ModelConfig, shape: InputShape,
+                          dist: DistContext) -> Dict:
+    return batch_shardings_for(train_batch_specs(cfg, shape), cfg,
+                               shape.global_batch, dist)
+
+
+def decode_cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    """Full cache for decode_32k; ring/window cache for long_500k (the
+    sub-quadratic serve variant for attention archs)."""
+    if shape.seq_len > cfg.serve_long_window:
+        return cfg.serve_long_window
+    return shape.seq_len
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, model: LM
+                 ) -> Tuple[Dict, SDS, Dict]:
+    B = shape.global_batch
+    C = decode_cache_len(cfg, shape)
+    frames = cfg.num_frontend_tokens if cfg.frontend == "audio" else 0
+    cache = model.cache_shapes(B, C, frames=frames)
+    token = SDS((B, 1), jnp.int32)
+    return cache, token, _frontend_extra(cfg, B)
+
+
+def prefill_specs(cfg: ModelConfig, shape: InputShape) -> Tuple[SDS, Dict]:
+    B, S = shape.global_batch, shape.seq_len
+    return SDS((B, S), jnp.int32), _frontend_extra(cfg, B)
+
+
+def batch_shardings_for(tree, cfg: ModelConfig, B: int, dist: DistContext):
+    """Leading-batch-dim shardings for a (possibly nested) spec tree."""
+    bp = batch_pspec(dist, B)
+    b = tuple(bp)
+
+    def f(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(dist.mesh, P())
+        return NamedSharding(dist.mesh, P(*(b + (None,) * (nd - len(b)))))
+
+    return jax.tree.map(f, tree)

@@ -1,0 +1,101 @@
+"""Training launcher: end-to-end CARLS training on real devices.
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+      --steps 100 --batch 8 --seq 64
+
+On this CPU container only --reduced configs are runnable; the full configs
+go through the dry-run (repro.launch.dryrun). The loop is the in-graph CARLS
+step: KB lookup -> loss(CE + graph reg) -> lazy grad push -> AdamW, with
+periodic checkpointing and a maker refresh pass (synchronous-maker mode; the
+thread-async mode lives in repro.core.async_runtime and examples/).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import DiskCheckpointStore
+from repro.configs import ARCH_IDS, get_config
+from repro.core import (kb_create, make_carls_train_step,
+                        make_embedding_refresh)
+from repro.data import SyntheticGraphCorpus
+from repro.models import build_model
+from repro.optim import AdamW, warmup_cosine
+from repro.sharding.partition import DistContext
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="yi-6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--nodes", type=int, default=2048)
+    ap.add_argument("--maker-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.layers:
+        cfg = cfg.replace(num_layers=args.layers)
+    if args.d_model:
+        cfg = cfg.replace(d_model=args.d_model,
+                          head_dim=args.d_model // cfg.num_heads or 32)
+    cfg = cfg.replace(carls=cfg.carls.__class__(
+        **{**cfg.carls.__dict__, "kb_entries": args.nodes}))
+    model = build_model(cfg)
+    dist = DistContext()
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"(reduced={args.reduced})")
+
+    params = model.init(jax.random.key(args.seed))
+    n_par = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"actual params: {n_par/1e6:.1f}M")
+    opt = AdamW(lr=warmup_cosine(args.lr, args.steps // 10, args.steps),
+                weight_decay=0.01)
+    opt_state = opt.init(params)
+    kb = kb_create(args.nodes, cfg.d_model, key=jax.random.key(1))
+    corpus = SyntheticGraphCorpus(
+        num_nodes=args.nodes, vocab_size=cfg.vocab_size,
+        seq_len=args.seq + 1, neighbors_per_node=cfg.carls.num_neighbors)
+    step_fn = jax.jit(make_carls_train_step(model, opt, dist),
+                      donate_argnums=(0, 1, 2))
+    maker_fn = jax.jit(make_embedding_refresh(model, dist),
+                       donate_argnums=(1,))
+    ckpts = DiskCheckpointStore(args.ckpt_dir) if args.ckpt_dir else None
+
+    rng = np.random.default_rng(args.seed + 1)
+    t0 = time.perf_counter()
+    for step in range(args.steps):
+        b = corpus.batch(rng, args.batch)
+        jb = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt_state, kb, m = step_fn(params, opt_state, kb, jb)
+        if (step + 1) % args.maker_every == 0:
+            ids = rng.integers(0, args.nodes, args.batch).astype(np.int32)
+            toks = corpus.node_tokens(ids)[:, :-1]
+            kb = maker_fn(params, kb, jnp.asarray(ids), jnp.asarray(toks))
+        if ckpts and (step + 1) % args.ckpt_every == 0:
+            ckpts.save(step + 1, params)
+        if step < 3 or (step + 1) % 10 == 0:
+            print(f"step {step+1:5d} loss={float(m['loss']):.4f} "
+                  f"acc={float(m['acc']):.3f} reg={float(m['graph_reg']):.4f}"
+                  f" gnorm={float(m['grad_norm']):.2f}", flush=True)
+    dt = time.perf_counter() - t0
+    print(f"done: {args.steps} steps in {dt:.1f}s "
+          f"({dt/args.steps*1e3:.0f} ms/step)")
+
+
+if __name__ == "__main__":
+    main()

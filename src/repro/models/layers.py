@@ -1,0 +1,259 @@
+"""Shared neural layers: norms, rotary embeddings, GQA attention (naive +
+chunked-online-softmax "jax flash"), SwiGLU, initializers.
+
+All functions are pure; parameters are plain pytrees of jnp arrays. Weight
+matrices follow the (d_in, d_out) convention so the sharding rules in
+``repro.sharding.partition`` can key off rank + name.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, dtype, scale: float = 1.0,
+               batch_dims: tuple = ()) -> jnp.ndarray:
+    """Truncated-normal fan-in init, optionally stacked over batch_dims."""
+    shape = (*batch_dims, d_in, d_out)
+    std = scale / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, *, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, N, hd); positions: (B, S) or (S,)."""
+    if theta <= 0.0:  # arch without rope (whisper)
+        return x
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(seq: int, d: int, offset=0) -> jnp.ndarray:
+    """Whisper-style sinusoidal absolute position encodings (S, D)."""
+    pos = jnp.arange(seq, dtype=jnp.float32) + offset
+    half = d // 2
+    inv = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                  * (math.log(10000.0) / max(half - 1, 1)))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _soft_cap(scores: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0.0:
+        return jnp.tanh(scores / cap) * cap
+    return scores
+
+
+def _repeat_kv(k: jnp.ndarray, num_heads: int) -> jnp.ndarray:
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating groups."""
+    kv = k.shape[-2]
+    if kv == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // kv, axis=-2)
+
+
+def naive_attention(q, k, v, *, causal: bool, window: int = 0,
+                    softcap: float = 0.0,
+                    q_offset: int = 0,
+                    kv_positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Reference attention. q: (B,Sq,H,hd), k/v: (B,Skv,KV,hd).
+
+    ``q_offset``: absolute position of q[0] (for decode: Skv-1).
+    ``kv_positions``: (B, Skv) absolute positions for ring-buffer caches.
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    scores = _soft_cap(scores, softcap)
+    qpos = jnp.arange(Sq) + q_offset                    # (Sq,)
+    if kv_positions is None:
+        kpos = jnp.arange(Skv)[None, :]                 # (1, Skv)
+    else:
+        kpos = kv_positions                             # (B, Skv)
+    mask = jnp.ones((1, Sq, Skv) if kv_positions is None else (B, Sq, Skv),
+                    bool)
+    if causal:
+        mask &= qpos[None, :, None] >= kpos[:, None, :]
+    if window and window > 0:
+        mask &= qpos[None, :, None] - kpos[:, None, :] < window
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _pick_chunk(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target, preferring powers of two
+    (handles VLM prefix lengths like 33024 = 2^8 * 129)."""
+    target = min(target, S)
+    if S % target == 0:
+        return target
+    c = 1
+    while c * 2 <= target and S % (c * 2) == 0:
+        c *= 2
+    best = c
+    for d in range(target, 0, -1):       # any divisor beats a tiny pow2
+        if S % d == 0:
+            best = max(best, d)
+            break
+    return best
+
+
+def flash_attention_jax(q, k, v, *, causal: bool, window: int = 0,
+                        softcap: float = 0.0, q_chunk: int = 1024,
+                        kv_chunk: int = 1024) -> jnp.ndarray:
+    """Chunked online-softmax attention in pure JAX (lax.scan over q and kv
+    chunks). Memory O(q_chunk * kv_chunk); never materializes (Sq, Skv).
+
+    Causality is enforced by masking (upper-triangular kv chunks still run:
+    a known 2x FLOP overhead of static-shape blockwise attention in XLA; the
+    Pallas kernel in repro.kernels.flash_attention removes it with a
+    block-triangular grid).
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    q_chunk = _pick_chunk(Sq, q_chunk)
+    kv_chunk = _pick_chunk(Skv, kv_chunk)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 3, 2, 4)  # (nq,B,H,qc,hd)
+    kr = k.reshape(B, nk, kv_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, nk, kv_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q
+        qblk = qblk.astype(jnp.float32) * scale
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk.astype(jnp.float32))
+            s = _soft_cap(s, softcap)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            msk = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                msk &= qpos[:, None] >= kpos[None, :]
+            if window and window > 0:
+                msk &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(msk[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qr))
+    # (nq, B, H, qc, hd) -> (B, Sq, H, hd)
+    return outs.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, hd)
+
+
+def attention(q, k, v, *, causal: bool, window: int = 0, softcap: float = 0.0,
+              impl: str = "auto", q_offset: int = 0,
+              kv_positions=None) -> jnp.ndarray:
+    """Dispatch. ``auto``: flash for long sequences, naive for short/decode."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    if impl == "naive" or (impl == "auto" and (Sq * Skv < 2048 * 2048
+                                               or Sq == 1 or kv_positions is not None)):
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, q_offset=q_offset,
+                               kv_positions=kv_positions)
+    assert q_offset == 0 and kv_positions is None
+    return flash_attention_jax(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+
+
+def decode_attention(q, k_cache, v_cache, kv_positions, *, window: int = 0,
+                     softcap: float = 0.0, q_position=None) -> jnp.ndarray:
+    """Single-token attention over a (possibly ring-buffer) cache.
+
+    q: (B, 1, H, hd); caches: (B, C, KV, hd); kv_positions: (B, C) absolute
+    positions of cache slots (-1 = empty). q_position: (B,) absolute position
+    of the new token.
+    """
+    B, _, H, hd = q.shape
+    k = _repeat_kv(k_cache, H)
+    v = _repeat_kv(v_cache, H)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    scores = _soft_cap(scores, softcap)
+    valid = kv_positions >= 0
+    if q_position is not None:
+        valid &= kv_positions <= q_position[:, None]
+        if window and window > 0:
+            valid &= q_position[:, None] - kv_positions < window
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# feed-forward
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jnp.ndarray, wi: jnp.ndarray, wg: jnp.ndarray,
+           wo: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., D); wi/wg: (D, F); wo: (F, D)."""
+    h = jax.nn.silu(x @ wg) * (x @ wi)
+    return h @ wo

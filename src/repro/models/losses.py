@@ -1,0 +1,87 @@
+"""Losses: sequence-chunked softmax cross-entropy (keeps the (B, S, V) logits
+tensor from ever materializing — only (B, chunk, V) lives at once, and the
+backward pass recomputes per chunk), z-loss, and contrastive loss for the
+two-tower paradigm (paper §4.3)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_xent(hidden, out_embed, labels, mask, *, chunk: int = 512,
+                 z_loss: float = 1e-4):
+    """hidden: (B, S, D); out_embed: (V, D); labels/mask: (B, S).
+    Returns (mean nll over masked tokens, metrics dict)."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    if S % chunk != 0:  # pad to a multiple (mask handles correctness)
+        pad = chunk - S % chunk
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        S += pad
+    nc = S // chunk
+    hs = hidden.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        h_c, l_c, m_c = xs
+        logits = (h_c @ out_embed.T).astype(jnp.float32)       # (B, c, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        nll = (logz - ll) * m_c
+        zl = jnp.square(logz) * m_c
+        acc = (jnp.argmax(logits, -1) == l_c) * m_c
+        nll_s, zl_s, n_s, acc_s = carry
+        return (nll_s + nll.sum(), zl_s + zl.sum(), n_s + m_c.sum(),
+                acc_s + acc.sum()), None
+
+    init = (jnp.float32(0), jnp.float32(0), jnp.float32(0), jnp.float32(0))
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (nll, zl, n, acc), _ = jax.lax.scan(body, init, (hs, ls, ms))
+    n = jnp.maximum(n, 1.0)
+    loss = nll / n + z_loss * zl / n
+    return loss, {"nll": nll / n, "acc": acc / n, "tokens": n}
+
+
+def masked_mean_pool(hidden, mask):
+    """hidden: (B, S, D); mask: (B, S) -> (B, D) fp32, l2-normalized."""
+    m = mask.astype(jnp.float32)
+    s = jnp.einsum("bsd,bs->bd", hidden.astype(jnp.float32), m)
+    emb = s / jnp.maximum(m.sum(-1, keepdims=True), 1.0)
+    return emb / jnp.maximum(jnp.linalg.norm(emb, axis=-1, keepdims=True),
+                             1e-6)
+
+
+def graph_reg_loss(pooled, nbr_emb, nbr_weights):
+    """Paper §4.1 graph regularizer: weighted pairwise distance between a
+    node's embedding and its (KB-served) neighbor embeddings.
+
+    pooled: (B, D); nbr_emb: (B, K, D); nbr_weights: (B, K) (0 = missing)."""
+    d = pooled[:, None, :] - nbr_emb.astype(jnp.float32)
+    dist = jnp.sum(jnp.square(d), axis=-1)                     # (B, K)
+    w = nbr_weights.astype(jnp.float32)
+    return jnp.sum(dist * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def contrastive_loss(emb_a, emb_b, temperature: float = 0.07,
+                     extra_negatives=None):
+    """Symmetric InfoNCE over in-batch pairs + optional KB-served negative
+    pool (paper §4.3 'scale up the number of random negatives').
+
+    emb_a/emb_b: (B, D) l2-normalized; extra_negatives: (N, D)."""
+    logits = emb_a @ emb_b.T / temperature                     # (B, B)
+    if extra_negatives is not None:
+        neg = emb_a @ extra_negatives.T / temperature          # (B, N)
+        logits_a = jnp.concatenate([logits, neg], axis=1)
+    else:
+        logits_a = logits
+    labels = jnp.arange(emb_a.shape[0])
+    la = -jnp.take_along_axis(jax.nn.log_softmax(logits_a, -1),
+                              labels[:, None], 1).mean()
+    lb = -jnp.take_along_axis(jax.nn.log_softmax(logits.T, -1),
+                              labels[:, None], 1).mean()
+    return 0.5 * (la + lb)

@@ -1,0 +1,337 @@
+"""Generic language model over all assigned architecture families.
+
+One class drives all 10 archs: layers are grouped into scan units (size =
+``cfg.group_size()``) whose per-position pattern ``(mixer, ffn_kind)`` comes
+from the config. Dense = 1-position groups of (attn, swiglu); grok/kimi =
+(attn, moe); rwkv6 = (rwkv6, swiglu); jamba = 8-position groups mixing mamba,
+attn, swiglu and moe; whisper adds a bidirectional encoder and per-layer
+cross-attention; internvl consumes stub patch embeddings as a prefix.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models import transformer as T
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.spec = self._group_spec()
+
+    # ------------------------------------------------------------------
+    def _group_spec(self) -> List[Tuple[str, str]]:
+        cfg = self.cfg
+        pat = cfg.layer_pattern()
+        gs = cfg.group_size()
+        assert len(pat) == gs or len(pat) == cfg.attn_every, (pat, gs)
+        # extend mixer pattern to the (possibly lcm-extended) group size
+        mixers = [pat[i % len(pat)] for i in range(gs)]
+        spec = []
+        for p in range(gs):
+            if cfg.is_moe and (p % cfg.moe_every == cfg.moe_every - 1):
+                ffn = "moe"
+            elif cfg.arch_type == "audio":
+                ffn = "gelu"
+            else:
+                ffn = "swiglu"
+            spec.append((mixers[p], ffn))
+        return spec
+
+    @property
+    def num_groups(self) -> int:
+        return self.cfg.num_groups()
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        G = self.num_groups
+        D = cfg.d_model
+        dt = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(key, 4 + len(self.spec) * 4)
+        params: Dict = {
+            "embed": {"tok": L.embed_init(keys[0], cfg.vocab_size, D, dtype=dt)},
+            "final_norm": jnp.zeros((D,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["out_embed"] = L.embed_init(keys[1], cfg.vocab_size, D,
+                                               dtype=dt)
+        groups: Dict = {}
+        ki = 4
+        for p, (mixer, ffnk) in enumerate(self.spec):
+            gp: Dict = {"ln1": jnp.zeros((G, D), jnp.float32),
+                        "ln2": jnp.zeros((G, D), jnp.float32)}
+            if mixer == "attn":
+                gp["attn"] = T.attn_init(keys[ki], cfg, batch_dims=(G,))
+            elif mixer == "mamba":
+                gp["mamba"] = ssm.mamba_init(keys[ki], cfg, batch_dims=(G,))
+            elif mixer == "rwkv6":
+                gp["rwkv6"] = ssm.rwkv6_init(keys[ki], cfg, batch_dims=(G,))
+            ki += 1
+            fkey = "moe" if ffnk == "moe" else "ffn"
+            gp[fkey] = T.ffn_init(keys[ki], cfg, ffnk, batch_dims=(G,))
+            ki += 1
+            if cfg.cross_attention:
+                gp["ln_ca"] = jnp.zeros((G, D), jnp.float32)
+                gp["cross"] = T.attn_init(keys[ki], cfg, batch_dims=(G,))
+                ki += 1
+            groups[f"pos{p}"] = gp
+        params["groups"] = groups
+        if cfg.cross_attention:
+            params["enc"] = T.encoder_init(keys[2], cfg)
+        return params
+
+    def out_embed(self, params):
+        return params.get("out_embed", params["embed"]["tok"])
+
+    # ------------------------------------------------------------------
+    # train / prefill forward
+    # ------------------------------------------------------------------
+    def hidden(self, params, tokens, extra, dist, *, impl="auto",
+               collect_cache=False):
+        """tokens: (B, S) int32. Returns (h (B,S_tot,D), prefix_len, aux_loss,
+        cache_ys or None)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        h = params["embed"]["tok"][tokens]
+        prefix = 0
+        enc_out = None
+        if cfg.frontend == "vision":
+            patch = extra["patch_embs"].astype(h.dtype)      # (B, Pf, D)
+            prefix = patch.shape[1]
+            h = jnp.concatenate([patch, h], axis=1)
+        elif cfg.frontend == "audio":
+            enc_out = T.encoder_apply(params["enc"], extra["frames"], cfg,
+                                      dist)
+        if cfg.rope_theta <= 0.0:  # sinusoidal absolute positions (whisper)
+            h = h + L.sinusoid_positions(h.shape[1], cfg.d_model)[None].astype(
+                h.dtype)
+        S_tot = h.shape[1]
+        positions = jnp.arange(S_tot)
+        spec = self.spec
+        # Megatron-style sequence parallelism: the residual stream between
+        # blocks is sharded (batch over dp, sequence over 'model'), so the
+        # per-layer scan residuals saved for backward are 1/model_size the
+        # size, and TP boundary collectives become (S/model)-sized
+        # all-gather/reduce-scatter pairs instead of full all-reduces.
+        dp_spec = None
+        if dist.mesh is not None:
+            seq_ax = (dist.model_axis
+                      if (dist.strategy == "tp"
+                          and S_tot % max(dist.model_size, 1) == 0) else None)
+            dp_spec = P(dist.dp_axes, seq_ax, None)
+
+        def group_body(h, gp):
+            aux = jnp.float32(0)
+            cache_ys = {}
+            for p, (mixer, ffnk) in enumerate(spec):
+                lp = gp[f"pos{p}"]
+                hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+                if mixer == "attn":
+                    a, (k, v) = T.attn_apply(lp["attn"], hn, cfg,
+                                             positions=positions,
+                                             window=cfg.window, impl=impl,
+                                             dist=dist)
+                    if collect_cache:
+                        cache_ys[f"pos{p}"] = {"k": k, "v": v}
+                elif mixer == "mamba":
+                    a, st = ssm.mamba_apply_state(lp["mamba"], hn, cfg,
+                                                  dist=dist)
+                    if collect_cache:
+                        cache_ys[f"pos{p}"] = st
+                else:
+                    a, st = ssm.rwkv6_apply_state(lp["rwkv6"], hn, cfg,
+                                                  dist=dist)
+                    if collect_cache:
+                        cache_ys[f"pos{p}"] = st
+                h = h + a
+                if cfg.cross_attention:
+                    ck, cv = T.cross_kv(lp["cross"], enc_out, cfg)
+                    hc = L.rms_norm(h, lp["ln_ca"], cfg.norm_eps)
+                    h = h + T.cross_attn_apply(lp["cross"], hc, ck, cv, cfg)
+                    if collect_cache:
+                        cache_ys[f"pos{p}"]["ck"] = ck
+                        cache_ys[f"pos{p}"]["cv"] = cv
+                hn2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+                fkey = "moe" if ffnk == "moe" else "ffn"
+                f, al = T.ffn_apply(lp[fkey], hn2, cfg, ffnk, dist)
+                h = h + f
+                if dp_spec is not None:
+                    h = dist.constrain(h, dp_spec)
+                aux = aux + al
+            return h, (aux, cache_ys)
+
+        body = group_body
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots"
+                      else jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(group_body, policy=policy)
+        h, (auxs, cache_ys) = jax.lax.scan(body, h, params["groups"])
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return h, prefix, auxs.sum(), (cache_ys if collect_cache else None)
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def cache_shapes(self, B: int, C: int, *, frames: int = 0):
+        """ShapeDtypeStruct pytree of the decode cache (for dry-run lowering
+        and init). C = cache length for attention layers."""
+        cfg = self.cfg
+        G = self.num_groups
+        KV, hd = cfg.num_kv_heads, cfg.head_dim_
+        dt = jnp.dtype(cfg.dtype)
+        sds = jax.ShapeDtypeStruct
+        di = cfg.ssm_expand * cfg.d_model
+        ds = cfg.ssm_state_dim
+        Hn = cfg.d_model // cfg.rwkv_head_dim
+        groups = {}
+        has_attn = False
+        for p, (mixer, _) in enumerate(self.spec):
+            if mixer == "attn":
+                has_attn = True
+                ent = {"k": sds((G, B, C, KV, hd), dt),
+                       "v": sds((G, B, C, KV, hd), dt)}
+            elif mixer == "mamba":
+                ent = {"h": sds((G, B, di, ds), jnp.float32),
+                       "conv_buf": sds((G, B, cfg.ssm_conv_width - 1, di), dt)}
+            else:
+                ent = {"S": sds((G, B, Hn, cfg.rwkv_head_dim,
+                                 cfg.rwkv_head_dim), jnp.float32),
+                       "x_prev": sds((G, B, cfg.d_model), dt)}
+            if cfg.cross_attention:
+                ent["ck"] = sds((G, B, frames, KV, hd), dt)
+                ent["cv"] = sds((G, B, frames, KV, hd), dt)
+            groups[f"pos{p}"] = ent
+        cache = {"groups": groups, "t": sds((), jnp.int32)}
+        if has_attn:
+            cache["pos"] = sds((B, C), jnp.int32)
+        return cache
+
+    def init_cache(self, B: int, C: int, *, frames: int = 0):
+        shapes = self.cache_shapes(B, C, frames=frames)
+
+        def mk(s):
+            return jnp.zeros(s.shape, s.dtype)
+
+        cache = jax.tree_util.tree_map(mk, shapes)
+        if "pos" in cache:
+            cache["pos"] = jnp.full(cache["pos"].shape, -1, jnp.int32)
+        return cache
+
+    def decode_step(self, params, cache, token, extra, dist):
+        """token: (B, 1) int32. Returns (logits (B, 1, V), cache)."""
+        cfg = self.cfg
+        B = token.shape[0]
+        t = cache["t"]
+        h = params["embed"]["tok"][token]                    # (B, 1, D)
+        if cfg.rope_theta <= 0.0:
+            h = h + L.sinusoid_positions(1, cfg.d_model, offset=t)[None].astype(
+                h.dtype)
+        spec = self.spec
+        kv_pos = cache.get("pos")
+        if kv_pos is not None:
+            C = kv_pos.shape[1]
+            slot = t % C
+            kv_pos = jax.lax.dynamic_update_slice(
+                kv_pos, jnp.full((B, 1), t, jnp.int32), (0, slot))
+
+        def group_body(h, xs):
+            gp, gc = xs
+            new_c = {}
+            for p, (mixer, ffnk) in enumerate(spec):
+                lp = gp[f"pos{p}"]
+                cc = gc[f"pos{p}"]
+                hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+                if mixer == "attn":
+                    a, kc, vc = T.attn_decode(lp["attn"], hn, cc["k"],
+                                              cc["v"], kv_pos, t, cfg,
+                                              window=self._serve_window(
+                                                  cc["k"].shape[1]))
+                    nc = {"k": kc, "v": vc}
+                elif mixer == "mamba":
+                    a, nc = ssm.mamba_decode(lp["mamba"], hn,
+                                             {"h": cc["h"],
+                                              "conv_buf": cc["conv_buf"]}, cfg)
+                else:
+                    a, nc = ssm.rwkv6_decode(lp["rwkv6"], hn,
+                                             {"S": cc["S"],
+                                              "x_prev": cc["x_prev"]}, cfg)
+                h = h + a
+                if cfg.cross_attention:
+                    hc = L.rms_norm(h, lp["ln_ca"], cfg.norm_eps)
+                    ck, cv = cc["ck"], cc["cv"]
+                    h = h + T.cross_attn_apply(lp["cross"], hc, ck, cv, cfg)
+                    nc["ck"], nc["cv"] = ck, cv
+                hn2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+                fkey = "moe" if ffnk == "moe" else "ffn"
+                f, _ = T.ffn_apply(lp[fkey], hn2, cfg, ffnk, dist, decode=True)
+                h = h + f
+                new_c[f"pos{p}"] = nc
+            return h, new_c
+
+        h, new_groups = jax.lax.scan(group_body, h,
+                                     (params["groups"], cache["groups"]))
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = h @ self.out_embed(params).T
+        new_cache = {"groups": new_groups, "t": t + 1}
+        if kv_pos is not None:
+            new_cache["pos"] = kv_pos
+        return logits, new_cache
+
+    def _serve_window(self, cache_len: int) -> int:
+        """Ring caches shorter than the context imply a sliding window equal
+        to the cache length; full caches use the config's train window."""
+        cfg = self.cfg
+        if cache_len <= cfg.serve_long_window:
+            return cache_len
+        return cfg.window
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, tokens, extra, dist, *, cache_len=None):
+        """Run the full prompt, return (cache, last_hidden). Test/example
+        path (the dry-run lowers decode_step directly)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        h, prefix, _, cache_ys = self.hidden(params, tokens, extra, dist,
+                                             impl="auto", collect_cache=True)
+        S_tot = S + prefix
+        C = cache_len or S_tot + 64
+        frames = extra["frames"].shape[1] if cfg.frontend == "audio" else 0
+        cache = self.init_cache(B, C, frames=frames)
+        for pk, ent in cache_ys.items():
+            tgt = cache["groups"][pk]
+            if "k" in ent:                       # attn: (G, B, S_tot, KV, hd)
+                tgt["k"] = tgt["k"].at[:, :, :S_tot].set(ent["k"].astype(
+                    tgt["k"].dtype))
+                tgt["v"] = tgt["v"].at[:, :, :S_tot].set(ent["v"].astype(
+                    tgt["v"].dtype))
+            if "h" in ent:
+                tgt["h"] = ent["h"]
+                tgt["conv_buf"] = ent["conv_buf"].astype(tgt["conv_buf"].dtype)
+            if "S" in ent:
+                tgt["S"] = ent["S"]
+                tgt["x_prev"] = ent["x_prev"].astype(tgt["x_prev"].dtype)
+            if "ck" in ent:
+                tgt["ck"] = ent["ck"].astype(tgt["ck"].dtype)
+                tgt["cv"] = ent["cv"].astype(tgt["cv"].dtype)
+        if "pos" in cache:
+            pos = jnp.where(jnp.arange(cache["pos"].shape[1]) < S_tot,
+                            jnp.arange(cache["pos"].shape[1]), -1)
+            cache["pos"] = jnp.broadcast_to(pos, cache["pos"].shape).astype(
+                jnp.int32)
+        cache["t"] = jnp.int32(S_tot)
+        return cache, h
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)

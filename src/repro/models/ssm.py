@@ -1,0 +1,297 @@
+"""State-space / attention-free mixers: Mamba (selective SSM, jamba's
+recurrent layer) and RWKV6 "Finch" (data-dependent decay WKV).
+
+Both expose:  <name>_init(key, cfg, batch_dims) -> params,
+              <name>_apply(params, x, cfg)      -> y            (train, scan over time)
+              <name>_decode(params, x1, state, cfg) -> (y1, state)
+              <name>_init_state(cfg, B, dtype)  -> state pytree
+
+Training uses an exact ``lax.scan`` over time with O(B*di*ds) carry — the
+(L, di, ds) state tensor is never materialized. On real TPUs the hot path is
+the Pallas kernel in ``repro.kernels.rwkv_wkv`` (state kept in VMEM/VREGs,
+time loop inside the kernel); the scan here is the portable/oracle path.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _pick_chunk, dense_init
+
+
+def _checkpointed_time_scan(step, h0, xs, *, chunk_target: int = 128,
+                            unroll: int = 4):
+    """Time recurrence as scan-of-checkpointed-chunks.
+
+    A flat scan over S steps makes the backward pass save O(S) copies of the
+    recurrent state (ruinous HBM traffic at S=4k-500k). Chunking saves state
+    only at S/chunk boundaries and recomputes inside each chunk (+1 forward
+    of elementwise work); ``unroll`` fuses consecutive steps into one XLA
+    loop body so the state stays in registers between them."""
+    S = jax.tree.leaves(xs)[0].shape[0]
+    c = _pick_chunk(S, chunk_target)
+    nc = S // c
+
+    def chunk_fn(h, xc):
+        return jax.lax.scan(step, h, xc, unroll=min(unroll, c))
+
+    if nc == 1:
+        return chunk_fn(h0, xs)
+    xs_c = jax.tree.map(lambda a: a.reshape(nc, c, *a.shape[1:]), xs)
+    h_fin, ys = jax.lax.scan(jax.checkpoint(chunk_fn), h0, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(S, *a.shape[2:]), ys)
+    return h_fin, ys
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return di, dt_rank, cfg.ssm_state_dim
+
+
+def mamba_init(key, cfg: ModelConfig, batch_dims=()):
+    di, dtr, ds = _mamba_dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    a_log = jnp.broadcast_to(jnp.log(a), (*batch_dims, di, ds))
+    return {
+        "w_in":    dense_init(ks[0], D, 2 * di, dtype=dt, batch_dims=batch_dims),
+        "conv":    dense_init(ks[1], cfg.ssm_conv_width, di, dtype=dt,
+                              batch_dims=batch_dims),        # (w, di)
+        "conv_b":  jnp.zeros((*batch_dims, di), dt),
+        "w_xdb":   dense_init(ks[2], di, dtr + 2 * ds, dtype=dt,
+                              batch_dims=batch_dims),
+        "w_dt":    dense_init(ks[3], dtr, di, dtype=dt, batch_dims=batch_dims),
+        "dt_bias": jnp.full((*batch_dims, di), -4.6, dt),     # softplus^-1(0.01)
+        "a_log":   a_log.astype(jnp.float32),
+        "d_skip":  jnp.ones((*batch_dims, di), jnp.float32),
+        "w_out":   dense_init(ks[4], di, D, dtype=dt, batch_dims=batch_dims),
+    }
+
+
+def _causal_conv(x, conv_w, conv_b):
+    """x: (B, S, di); conv_w: (w, di) depthwise causal conv."""
+    w = conv_w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(w):
+        shift = w - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi * conv_w[i][None, None, :]
+    return out + conv_b[None, None, :]
+
+
+def _mamba_core(params, xin, z, cfg):
+    """Shared projections: xin (B,S,di) post-conv. Returns per-step tensors."""
+    _, dtr, ds = _mamba_dims(cfg)
+    xdb = xin @ params["w_xdb"]
+    dt_in, Bm, Cm = jnp.split(xdb, [dtr, dtr + ds], axis=-1)
+    delta = jax.nn.softplus((dt_in @ params["w_dt"]).astype(jnp.float32)
+                            + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["a_log"])                             # (di, ds)
+    return delta, Bm.astype(jnp.float32), Cm.astype(jnp.float32), A
+
+
+def mamba_apply_state(params, x, cfg: ModelConfig, dist=None):
+    """x: (B, S, D) -> (y (B, S, D), final state {h, conv_buf}).
+
+    The time recurrence is sequential in S, so under a mesh the channel
+    dim di is sharded over 'model' (full S per device) — the per-step
+    tensors (B, S, di) would otherwise replicate and dominate HBM."""
+    B, S, D = x.shape
+    di, _, ds = _mamba_dims(cfg)
+
+    def chan(t):  # (…, di)-sharded constraint
+        if (dist is None or dist.mesh is None or di % dist.model_size
+                or dist.strategy != "tp"):
+            return t
+        from jax.sharding import PartitionSpec as P
+        return dist.constrain(
+            t, P(dist.dp_axes, *([None] * (t.ndim - 3)), None,
+                 dist.model_axis))
+
+    xz = chan(x @ params["w_in"])
+    xin_raw, z = jnp.split(xz, 2, axis=-1)
+    xin = jax.nn.silu(_causal_conv(xin_raw, params["conv"], params["conv_b"]))
+    delta, Bm, Cm, A = _mamba_core(params, xin, z, cfg)
+    delta = chan(delta)
+
+    def step(h, inp):
+        d_t, b_t, c_t, x_t = inp                              # (B,di),(B,ds),(B,ds),(B,di)
+        a_t = jnp.exp(d_t[..., None] * A[None])               # (B, di, ds)
+        h = a_t * h + (d_t * x_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+        y_t = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y_t
+
+    xs = (delta.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
+          Cm.transpose(1, 0, 2), xin.transpose(1, 0, 2))
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h_fin, ys = _checkpointed_time_scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + params["d_skip"][None, None] * xin.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["w_out"]
+    w = cfg.ssm_conv_width
+    buf = jnp.pad(xin_raw, ((0, 0), (w - 1, 0), (0, 0)))[:, S:S + w - 1]
+    if S >= w - 1:
+        buf = xin_raw[:, S - (w - 1):]
+    state = {"h": h_fin, "conv_buf": buf}
+    return y, state
+
+
+def mamba_apply(params, x, cfg: ModelConfig):
+    return mamba_apply_state(params, x, cfg)[0]
+
+
+def mamba_init_state(cfg: ModelConfig, B: int, dtype):
+    di, _, ds = _mamba_dims(cfg)
+    return {"h": jnp.zeros((B, di, ds), jnp.float32),
+            "conv_buf": jnp.zeros((B, cfg.ssm_conv_width - 1, di), dtype)}
+
+
+def mamba_decode(params, x1, state, cfg: ModelConfig):
+    """x1: (B, 1, D); state: {h, conv_buf} -> (y1, state)."""
+    B = x1.shape[0]
+    xz = x1[:, 0] @ params["w_in"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    # causal conv over [buf, xin]
+    w = params["conv"].shape[0]
+    seq = jnp.concatenate([state["conv_buf"], xin[:, None, :]], axis=1)  # (B,w,di)
+    conv = jnp.einsum("bwd,wd->bd", seq, params["conv"]) + params["conv_b"]
+    xin_c = jax.nn.silu(conv)
+    delta, Bm, Cm, A = _mamba_core(params, xin_c[:, None, :], z, cfg)
+    d_t, b_t, c_t = delta[:, 0], Bm[:, 0], Cm[:, 0]
+    a_t = jnp.exp(d_t[..., None] * A[None])
+    h = a_t * state["h"] + (d_t * xin_c.astype(jnp.float32))[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, c_t) + params["d_skip"] * xin_c.astype(jnp.float32)
+    y = (y.astype(x1.dtype) * jax.nn.silu(z)) @ params["w_out"]
+    new_state = {"h": h, "conv_buf": seq[:, 1:]}
+    return y[:, None, :], new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+_RWKV_LORA = 64
+
+
+def rwkv6_init(key, cfg: ModelConfig, batch_dims=()):
+    D = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    Hn = D // hd
+    ks = jax.random.split(key, 10)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "mu":      (jax.random.uniform(ks[0], (*batch_dims, 5, D), jnp.float32)
+                    ).astype(dt),                              # token-shift lerps
+        "w_r":     dense_init(ks[1], D, D, dtype=dt, batch_dims=batch_dims),
+        "w_k":     dense_init(ks[2], D, D, dtype=dt, batch_dims=batch_dims),
+        "w_v":     dense_init(ks[3], D, D, dtype=dt, batch_dims=batch_dims),
+        "w_g":     dense_init(ks[4], D, D, dtype=dt, batch_dims=batch_dims),
+        # low-rank data-dependent decay (the "6" in rwkv6)
+        "dec_a":   dense_init(ks[5], D, _RWKV_LORA, dtype=dt,
+                              batch_dims=batch_dims),
+        "dec_b":   dense_init(ks[6], _RWKV_LORA, D, dtype=dt,
+                              batch_dims=batch_dims),
+        "dec_0":   jnp.full((*batch_dims, D), -2.0, jnp.float32),
+        "u":       (jax.random.normal(ks[7], (*batch_dims, Hn, hd), jnp.float32)
+                    * 0.1).astype(jnp.float32),                # per-head bonus
+        "ln_x":    jnp.zeros((*batch_dims, D), jnp.float32),   # per-head groupnorm
+        "w_o":     dense_init(ks[8], D, D, dtype=dt, batch_dims=batch_dims),
+    }
+
+
+def _rwkv_projections(params, x, x_prev, cfg):
+    """x, x_prev: (B, S, D). Returns r,k,v,g: (B,S,Hn,hd); w decays (B,S,Hn,hd)."""
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    Hn = D // hd
+    mu = params["mu"].astype(x.dtype)                          # (5, D)
+    xs = x[None] + mu[:, None, None, :] * (x_prev - x)[None]   # (5, B, S, D)
+    xr, xk, xv, xg, xw = xs
+    r = (xr @ params["w_r"]).reshape(B, S, Hn, hd)
+    k = (xk @ params["w_k"]).reshape(B, S, Hn, hd)
+    v = (xv @ params["w_v"]).reshape(B, S, Hn, hd)
+    g = jax.nn.silu(xg @ params["w_g"]).reshape(B, S, Hn, hd)
+    dec = (params["dec_0"].astype(jnp.float32)
+           + (jnp.tanh(xw @ params["dec_a"]) @ params["dec_b"]).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dec)).reshape(B, S, Hn, hd)           # in (0, 1)
+    return r, k, v, g, w
+
+
+def _rwkv_group_norm(y, scale, eps=1e-5):
+    """Per-head rms norm. y: (B, S, Hn, hd); scale: (D,)."""
+    B, S, Hn, hd = y.shape
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + eps)
+    return (y.reshape(B, S, Hn * hd)
+            * (1.0 + scale.astype(jnp.float32))[None, None, :])
+
+
+def rwkv6_apply_state(params, x, cfg: ModelConfig, dist=None):
+    """x: (B, S, D) -> (y, final state {S, x_prev}). Exact WKV via lax.scan.
+    Under a mesh, heads shard over 'model' (time scan needs full S)."""
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    Hn = D // hd
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :S]
+    r, k, v, g, w = _rwkv_projections(params, x, x_prev, cfg)
+    if dist is not None and dist.mesh is not None and \
+            dist.strategy == "tp" and Hn % max(dist.model_size, 1) == 0:
+        from jax.sharding import PartitionSpec as P
+        hs = P(dist.dp_axes, None, dist.model_axis, None)
+        r, k, v, g, w = (dist.constrain(t, hs) for t in (r, k, v, g, w))
+    u = params["u"]                                            # (Hn, hd)
+
+    def step(S_st, inp):
+        r_t, k_t, v_t, w_t = inp                               # (B, Hn, hd)
+        kv = jnp.einsum("bhi,bhj->bhij", k_t.astype(jnp.float32),
+                        v_t.astype(jnp.float32))
+        y_t = jnp.einsum("bhi,bhij->bhj", r_t.astype(jnp.float32),
+                         S_st + u[None, :, :, None] * kv)
+        S_st = S_st * w_t.astype(jnp.float32)[..., None] + kv
+        return S_st, y_t
+
+    tr = lambda a: a.transpose(1, 0, 2, 3)
+    S0 = jnp.zeros((B, Hn, hd, hd), jnp.float32)
+    S_fin, ys = _checkpointed_time_scan(step, S0, (tr(r), tr(k), tr(v),
+                                                   tr(w)))
+    y = ys.transpose(1, 0, 2, 3)                               # (B, S, Hn, hd)
+    y = _rwkv_group_norm(y, params["ln_x"])
+    y = (y.astype(x.dtype) * g.reshape(B, S, D)) @ params["w_o"]
+    return y, {"S": S_fin, "x_prev": x[:, -1]}
+
+
+def rwkv6_apply(params, x, cfg: ModelConfig):
+    return rwkv6_apply_state(params, x, cfg)[0]
+
+
+def rwkv6_init_state(cfg: ModelConfig, B: int, dtype):
+    hd = cfg.rwkv_head_dim
+    Hn = cfg.d_model // hd
+    return {"S": jnp.zeros((B, Hn, hd, hd), jnp.float32),
+            "x_prev": jnp.zeros((B, cfg.d_model), dtype)}
+
+
+def rwkv6_decode(params, x1, state, cfg: ModelConfig):
+    B, _, D = x1.shape
+    hd = cfg.rwkv_head_dim
+    Hn = D // hd
+    r, k, v, g, w = _rwkv_projections(params, x1,
+                                      state["x_prev"][:, None, :], cfg)
+    r_t, k_t, v_t, w_t = r[:, 0], k[:, 0], v[:, 0], w[:, 0]
+    kv = jnp.einsum("bhi,bhj->bhij", k_t.astype(jnp.float32),
+                    v_t.astype(jnp.float32))
+    y = jnp.einsum("bhi,bhij->bhj", r_t.astype(jnp.float32),
+                   state["S"] + params["u"][None, :, :, None] * kv)
+    S_new = state["S"] * w_t.astype(jnp.float32)[..., None] + kv
+    y = _rwkv_group_norm(y[:, None], params["ln_x"])
+    y = (y.astype(x1.dtype) * g.reshape(B, 1, D)) @ params["w_o"]
+    return y, {"S": S_new, "x_prev": x1[:, 0]}

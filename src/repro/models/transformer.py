@@ -1,0 +1,180 @@
+"""Attention mixer, feed-forward blocks, and the whisper-style encoder.
+
+Parameter naming matters: ``repro.sharding.partition`` keys its rules off
+these names (wq/wk/wv/wo, wi/wg/wo, moe subtree, ...).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+
+
+# ---------------------------------------------------------------------------
+# attention mixer
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, batch_dims=()):
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    dt = jnp.dtype(cfg.dtype)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(kq, D, H * hd, dtype=dt, batch_dims=batch_dims),
+        "wk": L.dense_init(kk, D, KV * hd, dtype=dt, batch_dims=batch_dims),
+        "wv": L.dense_init(kv, D, KV * hd, dtype=dt, batch_dims=batch_dims),
+        "wo": L.dense_init(ko, H * hd, D, dtype=dt, batch_dims=batch_dims,
+                           scale=1.0 / max(cfg.num_layers, 1) ** 0.5),
+    }
+
+
+def _qkv(params, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    k = (x @ params["wk"]).reshape(B, S, KV, hd)
+    v = (x @ params["wv"]).reshape(B, S, KV, hd)
+    return q, k, v
+
+
+def attn_apply(params, x, cfg: ModelConfig, *, positions, causal=True,
+               window=0, impl="auto", dist=None):
+    """Full-sequence attention (train / prefill). x: (B, S, D).
+
+    With a mesh + sequence-parallel residuals, q is pinned to
+    (batch=dp, S=full, heads='model') and k/v to fully-replicated heads
+    (GQA KV heads are few and cheap to all-gather) — one gather on entry,
+    one reduce-scatter at the block-boundary constraint on exit, and the
+    flash scan runs on head-sharded local tiles with no resharding."""
+    from jax.sharding import PartitionSpec as P
+    q, k, v = _qkv(params, x, cfg)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    S = x.shape[1]
+    if (dist is not None and dist.mesh is not None
+            and dist.strategy == "tp"
+            and cfg.num_heads >= max(dist.model_size, 1) and S > 1):
+        # uneven head counts (minitron 24H on 16) still shard: GSPMD pads
+        m = dist.model_axis
+        q = dist.constrain(q, P(dist.dp_axes, None, m, None))
+        k = dist.constrain(k, P(dist.dp_axes, None, None, None))
+        v = dist.constrain(v, P(dist.dp_axes, None, None, None))
+    out = L.attention(q, k, v, causal=causal, window=window,
+                      softcap=cfg.logit_softcap, impl=impl)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, -1) @ params["wo"], (k, v)
+
+
+def attn_decode(params, x1, kc, vc, kv_pos, t, cfg: ModelConfig, *,
+                window=0):
+    """One-token decode against a (ring-buffer) cache.
+
+    x1: (B,1,D); kc/vc: (B,C,KV,hd); kv_pos: (B,C) absolute positions
+    (-1 empty); t: scalar absolute position of the new token.
+    Returns (y1, kc, vc) with the new token written at slot t % C.
+    """
+    B = x1.shape[0]
+    C = kc.shape[1]
+    q, k, v = _qkv(params, x1, cfg)
+    tpos = jnp.full((B,), t, jnp.int32)
+    q = L.apply_rope(q, tpos[:, None], cfg.rope_theta)
+    k = L.apply_rope(k, tpos[:, None], cfg.rope_theta)
+    slot = t % C
+    kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, slot, 0, 0))
+    kv_pos = jax.lax.dynamic_update_slice(
+        kv_pos, jnp.full((B, 1), t, kv_pos.dtype), (0, slot))
+    out = L.decode_attention(q, kc, vc, kv_pos, window=window,
+                             softcap=cfg.logit_softcap, q_position=tpos)
+    return out.reshape(B, 1, -1) @ params["wo"], kc, vc
+
+
+def cross_attn_apply(params, x, ck, cv, cfg: ModelConfig):
+    """Cross-attention to precomputed encoder K/V. x: (B,S,D);
+    ck/cv: (B,F,KV,hd)."""
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim_
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    kv_pos = jnp.zeros((B, ck.shape[1]), jnp.int32)
+    out = L.decode_attention(q, ck, cv, kv_pos, q_position=None)
+    return out.reshape(B, S, -1) @ params["wo"]
+
+
+def cross_kv(params, enc_out, cfg: ModelConfig):
+    B, F, _ = enc_out.shape
+    KV, hd = cfg.num_kv_heads, cfg.head_dim_
+    k = (enc_out @ params["wk"]).reshape(B, F, KV, hd)
+    v = (enc_out @ params["wv"]).reshape(B, F, KV, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# feed-forward
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, cfg: ModelConfig, kind: str, batch_dims=()):
+    D, F = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    if kind == "moe":
+        E = cfg.num_experts
+        return {"wr": L.dense_init(ks[0], D, E, dtype=dt, batch_dims=batch_dims),
+                "wi": L.dense_init(ks[1], D, F, dtype=dt,
+                                   batch_dims=(*batch_dims, E)),
+                "wg": L.dense_init(ks[2], D, F, dtype=dt,
+                                   batch_dims=(*batch_dims, E)),
+                "wo": L.dense_init(ks[3], F, D, dtype=dt,
+                                   batch_dims=(*batch_dims, E))}
+    if kind == "gelu":
+        return {"wi": L.dense_init(ks[0], D, F, dtype=dt, batch_dims=batch_dims),
+                "wo": L.dense_init(ks[1], F, D, dtype=dt, batch_dims=batch_dims)}
+    return {"wi": L.dense_init(ks[0], D, F, dtype=dt, batch_dims=batch_dims),
+            "wg": L.dense_init(ks[1], D, F, dtype=dt, batch_dims=batch_dims),
+            "wo": L.dense_init(ks[2], F, D, dtype=dt, batch_dims=batch_dims)}
+
+
+def ffn_apply(params, x, cfg: ModelConfig, kind: str, dist,
+              decode: bool = False):
+    """Returns (y, aux_loss)."""
+    if kind == "moe":
+        return moe_mod.moe_apply(x, params, cfg=cfg, dist=dist, decode=decode)
+    if kind == "gelu":
+        return jax.nn.gelu(x @ params["wi"]) @ params["wo"], jnp.float32(0)
+    return L.swiglu(x, params["wi"], params["wg"], params["wo"]), jnp.float32(0)
+
+
+# ---------------------------------------------------------------------------
+# whisper-style bidirectional encoder
+# ---------------------------------------------------------------------------
+
+def encoder_init(key, cfg: ModelConfig):
+    EL = cfg.enc_layers
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": jnp.zeros((EL, cfg.d_model), jnp.float32),
+            "attn": attn_init(k1, cfg, batch_dims=(EL,)),
+            "ln2": jnp.zeros((EL, cfg.d_model), jnp.float32),
+            "ffn": ffn_init(k2, cfg, "gelu", batch_dims=(EL,)),
+            "ln_out": jnp.zeros((cfg.d_model,), jnp.float32)}
+
+
+def encoder_apply(params, frames, cfg: ModelConfig, dist):
+    """frames: (B, F, D) precomputed frame embeddings (STUB frontend)."""
+    B, F, D = frames.shape
+    h = frames + L.sinusoid_positions(F, D)[None].astype(frames.dtype)
+    positions = jnp.arange(F)
+
+    def body(h, lp):
+        a, _ = attn_apply(lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                          cfg, positions=positions, causal=False, impl="naive")
+        h = h + a
+        f, _ = ffn_apply(lp["ffn"], L.rms_norm(h, lp["ln2"], cfg.norm_eps),
+                         cfg, "gelu", dist)
+        return h + f, None
+
+    xs = {k: params[k] for k in ("ln1", "attn", "ln2", "ffn")}
+    h, _ = jax.lax.scan(body, h, xs)           # scan over stacked (EL, ...)
+    return L.rms_norm(h, params["ln_out"], cfg.norm_eps)

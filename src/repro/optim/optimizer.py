@@ -1,0 +1,104 @@
+"""Optimizers written from scratch (no optax): AdamW with optional
+low-precision moments (needed to fit the 314B/398B/1T configs), global-norm
+clipping, and warmup-cosine / warmup-stable-decay schedules."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moments_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.moments_dtype)
+        z = lambda p: jnp.zeros(p.shape, dt)
+        return AdamWState(count=jnp.int32(0),
+                          mu=jax.tree.map(z, params),
+                          nu=jax.tree.map(z, params))
+
+    def update(self, grads, state: AdamWState, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm and self.clip_norm > 0:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gn = global_norm(grads)
+        count = state.count + 1
+        b1, b2 = self.b1, self.b2
+        dt = jnp.dtype(self.moments_dtype)
+
+        def upd(g, m, v, p):
+            m32 = m.astype(jnp.float32) * b1 + g * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + jnp.square(g) * (1 - b2)
+            mhat = m32 / (1 - b1 ** count)
+            vhat = v32 / (1 - b2 ** count)
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - self.lr(count) * step
+            return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, AdamWState(count=count, mu=new_m, nu=new_v), gn
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  min_frac: float = 0.1) -> Callable:
+    def lr(count):
+        count = count.astype(jnp.float32)
+        warm = peak_lr * count / max(warmup, 1)
+        prog = jnp.clip((count - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (min_frac + (1 - min_frac)
+                         * 0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(count < warmup, warm, cos)
+    return lr
+
+
+def warmup_stable_decay(peak_lr: float, warmup: int, total: int,
+                        decay_frac: float = 0.2) -> Callable:
+    decay_start = int(total * (1 - decay_frac))
+
+    def lr(count):
+        count = count.astype(jnp.float32)
+        warm = peak_lr * count / max(warmup, 1)
+        prog = jnp.clip((count - decay_start) / max(total - decay_start, 1),
+                        0.0, 1.0)
+        dec = peak_lr * (1.0 - 0.9 * prog)
+        return jnp.where(count < warmup, warm,
+                         jnp.where(count < decay_start, peak_lr, dec))
+    return lr
+
+
+def constant_lr(v: float) -> Callable:
+    return lambda count: jnp.float32(v)

@@ -1,0 +1,4 @@
+from repro.sharding.partition import (DistContext, batch_pspec, cache_pspecs,
+                                      param_pspecs)
+
+__all__ = ["DistContext", "batch_pspec", "cache_pspecs", "param_pspecs"]

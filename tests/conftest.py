@@ -1,0 +1,7 @@
+# NOTE: deliberately NO XLA_FLAGS here — smoke tests and benches must see the
+# real single CPU device. Multi-device behaviour is tested via subprocesses
+# (tests/test_sharded_kb.py) and the dry-run launcher.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,97 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (DiskCheckpointStore, MemoryCheckpointStore,
+                              flatten_params, unflatten_params)
+from repro.data import PairedCorpus, SyntheticGraphCorpus
+
+
+def test_corpus_deterministic():
+    c1 = SyntheticGraphCorpus(num_nodes=128, seed=7)
+    c2 = SyntheticGraphCorpus(num_nodes=128, seed=7)
+    ids = np.arange(10)
+    np.testing.assert_array_equal(c1.node_tokens(ids), c2.node_tokens(ids))
+    np.testing.assert_array_equal(c1.neighbor_table, c2.neighbor_table)
+
+
+def test_neighbors_same_cluster():
+    c = SyntheticGraphCorpus(num_nodes=256, num_clusters=4, seed=1)
+    for i in range(0, 256, 17):
+        nbrs = c.neighbor_table[i]
+        nbrs = nbrs[nbrs >= 0]
+        assert (c.clusters[nbrs] == c.clusters[i]).all()
+        assert (nbrs != i).all()
+
+
+def test_cluster_tokens_disjoint_ranges():
+    c = SyntheticGraphCorpus(num_nodes=64, vocab_size=512, num_clusters=4,
+                             seed=2)
+    a = c.clusters.argmin()
+    b = c.clusters.argmax()
+    ta = c.node_tokens(np.array([a]))[0][::2]   # cluster-specific positions
+    tb = c.node_tokens(np.array([b]))[0][::2]
+    assert set(ta.tolist()).isdisjoint(set(tb.tolist()))
+
+
+def test_batch_fields_and_labeled_only():
+    c = SyntheticGraphCorpus(num_nodes=128, labeled_frac=0.25, seed=3)
+    rng = np.random.default_rng(0)
+    b = c.batch(rng, 16)
+    assert b["tokens"].shape == (16, c.seq_len - 1)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    bl = c.batch(rng, 8, labeled_only=True)
+    assert set(bl["sample_ids"].tolist()) <= set(c.labeled_ids.tolist())
+
+
+def test_label_noise_rate():
+    c = SyntheticGraphCorpus(num_nodes=4096, label_noise=0.3, seed=4)
+    rate = (c.noisy_labels != c.true_labels).mean()
+    assert 0.15 < rate < 0.35   # ~0.3 * (C-1)/C
+
+
+def test_paired_corpus_modalities_disjoint():
+    c = PairedCorpus(num_pairs=64, vocab_size=512, seed=0)
+    ids = np.arange(8)
+    ta = c._tokens(ids, 0)
+    tb = c._tokens(ids, 1)
+    assert ta.max() < 256 and tb.min() >= 256
+
+
+def test_disk_checkpoint_roundtrip(tmp_path):
+    params = {"a": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+              "b": jnp.ones((4,), jnp.bfloat16)}
+    store = DiskCheckpointStore(str(tmp_path), keep=2)
+    store.save(10, params)
+    store.save(20, params)
+    store.save(30, params)
+    assert store.steps() == [20, 30]        # pruned to keep=2
+    step, loaded = store.load_latest(params)
+    assert step == 30
+    np.testing.assert_array_equal(np.asarray(loaded["a"]["w"]),
+                                  np.asarray(params["a"]["w"]))
+    assert loaded["b"].dtype == jnp.bfloat16
+
+
+def test_memory_checkpoint_latest():
+    store = MemoryCheckpointStore(keep=2)
+    assert store.load_latest() == (None, None)
+    store.save(1, {"x": 1})
+    store.save(5, {"x": 5})
+    store.save(9, {"x": 9})
+    step, p = store.load_latest()
+    assert step == 9 and p["x"] == 9
+    assert store.latest_step() == 9
+
+
+def test_flatten_unflatten_identity():
+    params = {"g": {"pos0": {"wq": jnp.ones((2, 3, 4))}},
+              "emb": jnp.zeros((5,))}
+    flat = flatten_params(params)
+    back = unflatten_params(params, flat)
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()),
+        params, back))

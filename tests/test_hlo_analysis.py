@@ -1,0 +1,72 @@
+"""The roofline extractor vs known-cost programs (single device => no
+forced device count needed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (OpCost, analyze_hlo, parse_computations,
+                                       roofline_from_cost)
+
+
+def _cost_of(f, *args):
+    txt = jax.jit(f).lower(*args).compile().as_text()
+    return analyze_hlo(txt, 1)
+
+
+def test_matmul_flops_exact():
+    a = jnp.ones((64, 32))
+    b = jnp.ones((32, 48))
+    c = _cost_of(lambda a, b: a @ b, a, b)
+    assert c.flops == pytest.approx(2 * 64 * 32 * 48, rel=0.01)
+
+
+def test_scan_trip_count_multiplies():
+    x = jnp.ones((32, 32))
+
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        return jax.lax.scan(body, x, None, length=11)[0]
+
+    c = _cost_of(f, x)
+    assert c.flops == pytest.approx(11 * 2 * 32 ** 3, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    x = jnp.ones((16, 16))
+
+    def f(x):
+        def inner(c, _):
+            return c @ c, None
+
+        def outer(c, _):
+            return jax.lax.scan(inner, c, None, length=3)[0], None
+
+        return jax.lax.scan(outer, x, None, length=5)[0]
+
+    c = _cost_of(f, x)
+    assert c.flops == pytest.approx(15 * 2 * 16 ** 3, rel=0.01)
+
+
+def test_hbm_bytes_at_least_io():
+    a = jnp.ones((256, 256))
+    c = _cost_of(lambda a: a + 1.0, a)
+    assert c.hbm_bytes >= 2 * 256 * 256 * 4   # read + write
+
+
+def test_bottleneck_selection():
+    r = roofline_from_cost(OpCost(flops=197e12, hbm_bytes=1.0, wire_bytes=0))
+    assert r.bottleneck == "compute" and r.compute_s == pytest.approx(1.0)
+    r = roofline_from_cost(OpCost(flops=1.0, hbm_bytes=819e9, wire_bytes=0))
+    assert r.bottleneck == "memory"
+    r = roofline_from_cost(OpCost(flops=1.0, hbm_bytes=1.0, wire_bytes=50e9))
+    assert r.bottleneck == "collective"
+    assert r.collective_s == pytest.approx(1.0)
+
+
+def test_parse_computations_finds_entry():
+    a = jnp.ones((8, 8))
+    txt = jax.jit(lambda a: a @ a).lower(a).compile().as_text()
+    comps = parse_computations(txt)
+    assert any("main" in k for k in comps)

@@ -1,0 +1,181 @@
+"""Knowledge-bank unit + property tests: lazy-update semantics (§3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (feature_store_create, fs_lookup_neighbors,
+                        fs_update_labels, fs_update_neighbors, kb_create,
+                        kb_flush, kb_lazy_grad, kb_lookup, kb_nn_search,
+                        kb_update)
+
+N, D = 64, 8
+
+
+def make_kb(seed=0):
+    return kb_create(N, D, key=jax.random.key(seed))
+
+
+def test_lookup_returns_rows():
+    kb = make_kb()
+    ids = jnp.array([0, 5, 63])
+    vals, kb2 = kb_lookup(kb, ids)
+    np.testing.assert_allclose(vals, np.asarray(kb.table)[ids], atol=1e-6)
+
+
+def test_update_overwrites_and_bumps_version():
+    kb = make_kb()
+    ids = jnp.array([1, 2])
+    vals = jnp.ones((2, D))
+    kb2 = kb_update(kb, ids, vals)
+    np.testing.assert_allclose(kb2.table[ids], 1.0)
+    assert kb2.version[1] == 1 and kb2.version[2] == 1
+    assert kb2.version[0] == 0
+
+
+def test_lazy_grad_applied_on_next_lookup():
+    kb = make_kb()
+    ids = jnp.array([3])
+    g = jnp.full((1, D), 2.0)
+    kb = kb_lazy_grad(kb, ids, g)
+    # value unchanged until lookup
+    assert float(kb.grad_cnt[3]) == 1.0
+    np.testing.assert_allclose(kb.table[3], make_kb().table[3])
+    vals, kb = kb_lookup(kb, ids, lazy_lr=0.5, zmax=100.0)
+    expected = np.asarray(make_kb().table[3]) - 0.5 * 2.0
+    np.testing.assert_allclose(vals[0], expected, atol=1e-5)
+    np.testing.assert_allclose(kb.table[3], expected, atol=1e-5)
+    assert float(kb.grad_cnt[3]) == 0.0  # cache cleared
+
+
+def test_lazy_update_averages_multiple_grads():
+    """Paper: 'update is based on the average of all cached gradients' —
+    NOT the sum, and not last-writer-wins."""
+    kb = make_kb()
+    ids = jnp.array([7])
+    kb = kb_lazy_grad(kb, ids, jnp.full((1, D), 1.0))
+    kb = kb_lazy_grad(kb, ids, jnp.full((1, D), 3.0))
+    vals, _ = kb_lookup(kb, ids, lazy_lr=1.0, zmax=100.0)
+    expected = np.asarray(make_kb().table[7]) - 2.0   # mean(1, 3)
+    np.testing.assert_allclose(vals[0], expected, atol=1e-5)
+
+
+def test_outlier_rejection_clips_avg_norm():
+    """Average gradient norm is capped at zmax * rms contribution norm."""
+    kb = make_kb()
+    ids = jnp.array([9])
+    g = jnp.zeros((1, D)).at[0, 0].set(100.0)
+    kb = kb_lazy_grad(kb, ids, g)
+    vals_clip, _ = kb_lookup(kb, ids, lazy_lr=1.0, zmax=0.01)
+    vals_raw, _ = kb_lookup(kb_lazy_grad(make_kb(), ids, g), ids,
+                            lazy_lr=1.0, zmax=1e9)
+    base = np.asarray(make_kb().table[9])
+    delta_clip = np.linalg.norm(vals_clip[0] - base)
+    delta_raw = np.linalg.norm(vals_raw[0] - base)
+    assert delta_clip <= 0.011 * 100.0 + 1e-4
+    assert delta_raw > delta_clip
+
+
+def test_entry_side_outlier_rejection():
+    """A 100x corrupted gradient arriving after normal ones is clipped to
+    the EMA scale, so the cached average stays near the clean mean."""
+    kb = make_kb()
+    ids = jnp.array([11])
+    clean = jnp.full((1, D), 1.0)
+    kb = kb_lazy_grad(kb, ids, clean, zmax=2.0)
+    kb = kb_lazy_grad(kb, ids, clean, zmax=2.0)
+    kb = kb_lazy_grad(kb, ids, 100.0 * clean, zmax=2.0)   # outlier
+    avg = np.asarray(kb.grad_sum[11]) / float(kb.grad_cnt[11])
+    assert np.linalg.norm(avg) < 2.0 * np.linalg.norm(clean)
+    # without entry clip the outlier dominates
+    kb2 = make_kb()
+    for g in (clean, clean, 100.0 * clean):
+        kb2 = kb_lazy_grad(kb2, ids, g, zmax=0.0)
+    avg2 = np.asarray(kb2.grad_sum[11]) / float(kb2.grad_cnt[11])
+    assert np.linalg.norm(avg2) > 10 * np.linalg.norm(avg)
+
+
+def test_flush_equals_lookup_application():
+    kb = make_kb()
+    ids = jnp.array([4, 8])
+    g = jax.random.normal(jax.random.key(1), (2, D))
+    kb1 = kb_lazy_grad(kb, ids, g)
+    flushed = kb_flush(kb1, lazy_lr=0.3, zmax=3.0)
+    looked, kb2 = kb_lookup(kb1, ids, lazy_lr=0.3, zmax=3.0)
+    np.testing.assert_allclose(flushed.table[ids], kb2.table[ids], atol=1e-6)
+    assert float(flushed.grad_cnt.sum()) == 0.0
+
+
+def test_update_discards_pending_grads():
+    kb = make_kb()
+    ids = jnp.array([5])
+    kb = kb_lazy_grad(kb, ids, jnp.ones((1, D)))
+    kb = kb_update(kb, ids, jnp.zeros((1, D)))
+    assert float(kb.grad_cnt[5]) == 0.0
+    vals, _ = kb_lookup(kb, ids)
+    np.testing.assert_allclose(vals[0], 0.0)
+
+
+def test_nn_search_exact():
+    kb = make_kb()
+    q = jnp.asarray(np.asarray(kb.table)[[10, 20]])
+    scores, ids = kb_nn_search(kb, q, 1)
+    # nearest neighbor of a row under MIPS need not be itself, but with
+    # random gaussian rows it almost surely is (largest self-dot)
+    full = np.asarray(kb.table) @ np.asarray(q).T
+    np.testing.assert_array_equal(np.asarray(ids)[:, 0], full.argmax(0))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, N - 1), min_size=1, max_size=10),
+       st.floats(0.01, 2.0), st.integers(1, 5))
+def test_property_lazy_average_invariant(id_list, lr, reps):
+    """For any id multiset and any repetition count: after lookup, the row
+    moved by exactly -lr * clip(mean(grads)) and the cache is empty."""
+    kb = make_kb()
+    ids = jnp.asarray(np.array(id_list, np.int32))
+    rng = np.random.default_rng(0)
+    gs = [rng.normal(size=(len(id_list), D)).astype(np.float32)
+          for _ in range(reps)]
+    for g in gs:
+        kb = kb_lazy_grad(kb, ids, jnp.asarray(g))
+    vals, kb2 = kb_lookup(kb, ids, lazy_lr=lr, zmax=1e9)
+    # compute expected means per unique id
+    base = np.asarray(make_kb().table)
+    sums = np.zeros((N, D)); cnts = np.zeros(N)
+    for g in gs:
+        for j, i in enumerate(id_list):
+            sums[i] += g[j]; cnts[i] += 1
+    exp = base.copy()
+    nz = cnts > 0
+    exp[nz] -= lr * sums[nz] / cnts[nz, None]
+    np.testing.assert_allclose(np.asarray(kb2.table)[nz], exp[nz], atol=1e-4)
+    assert float(kb2.grad_cnt.sum()) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 8))
+def test_property_nn_search_matches_numpy(bq, k):
+    kb = make_kb(3)
+    q = jax.random.normal(jax.random.key(bq), (bq, D))
+    scores, ids = kb_nn_search(kb, q, k)
+    ref = np.asarray(q) @ np.asarray(kb.table).T
+    order = np.argsort(-ref, axis=1)[:, :k]
+    np.testing.assert_allclose(np.sort(scores, axis=1),
+                               np.sort(np.take_along_axis(ref, order, 1), 1),
+                               atol=1e-5)
+
+
+def test_feature_store_roundtrip_and_gating():
+    fs = feature_store_create(16, 4)
+    ids = jnp.array([2, 3])
+    nbr = jnp.array([[1, 5, 6, 7], [0, 2, 8, 9]], jnp.int32)
+    w = jnp.ones((2, 4))
+    fs = fs_update_neighbors(fs, ids, nbr, w)
+    got_n, got_w = fs_lookup_neighbors(fs, ids, 4)
+    np.testing.assert_array_equal(got_n, nbr)
+    fs = fs_update_labels(fs, ids, jnp.array([1, 2]), jnp.array([0.9, 0.4]))
+    fs2 = fs_update_labels(fs, ids, jnp.array([5, 6]), jnp.array([0.5, 0.8]))
+    assert int(fs2.labels[2]) == 1      # 0.5 < 0.9: rejected
+    assert int(fs2.labels[3]) == 6      # 0.8 > 0.4: accepted

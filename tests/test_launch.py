@@ -1,0 +1,108 @@
+"""Launch-layer tests: specs construction, reduced end-to-end train/serve
+drivers, and a small-mesh dry-run lowering in a subprocess."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, get_shape
+from repro.launch import specs as S
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", list(INPUT_SHAPES))
+def test_input_specs_constructible(arch, shape):
+    """All 40 (arch x shape) spec sets build without allocation."""
+    cfg = get_config(arch)
+    shp = get_shape(shape)
+    if shp.kind == "train":
+        b = S.train_batch_specs(cfg, shp)
+        assert b["tokens"].shape == (shp.global_batch, shp.seq_len)
+    elif shp.kind == "prefill":
+        t, e = S.prefill_specs(cfg, shp)
+        assert t.shape == (shp.global_batch, shp.seq_len)
+    else:
+        model = build_model(cfg)
+        cache, tok, extra = S.decode_specs(cfg, shp, model)
+        assert tok.shape == (shp.global_batch, 1)
+        C = S.decode_cache_len(cfg, shp)
+        if shp.name == "long_500k":
+            assert C <= cfg.serve_long_window     # sub-quadratic serve
+        for k, ent in cache["groups"].items():
+            for name, leaf in ent.items():
+                assert leaf.shape[1] == shp.global_batch
+
+
+def test_train_driver_runs_and_learns(capsys):
+    from repro.launch.train import main
+    main(["--arch", "yi-6b", "--steps", "12", "--batch", "4", "--seq", "32",
+          "--layers", "2", "--nodes", "256", "--lr", "3e-3"])
+    out = capsys.readouterr().out
+    assert "done:" in out
+    losses = [float(l.split("loss=")[1].split()[0])
+              for l in out.splitlines() if "loss=" in l]
+    assert losses[-1] < losses[0]
+
+
+def test_serve_driver_runs(capsys):
+    from repro.launch.serve import main
+    main(["--arch", "rwkv6-7b", "--batch", "2", "--prompt-len", "16",
+          "--gen", "4"])
+    out = capsys.readouterr().out
+    assert "generated:" in out
+
+
+def test_checkpoint_roundtrip_through_train_driver(tmp_path, capsys):
+    from repro.launch.train import main
+    main(["--arch", "granite-34b", "--steps", "4", "--batch", "2",
+          "--seq", "16", "--layers", "2", "--nodes", "128",
+          "--ckpt-dir", str(tmp_path), "--ckpt-every", "2"])
+    import glob
+    assert glob.glob(str(tmp_path / "ckpt_*.npz"))
+
+
+_DRYRUN_SMALL = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    from jax.sharding import Mesh
+    import repro.launch.dryrun as DR
+    import repro.launch.mesh as M
+    # shrink the production mesh for the test
+    def small_mesh(*, multi_pod=False):
+        shape = (2, 2, 2) if multi_pod else (2, 4)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        dev = np.asarray(jax.devices()[:8 if multi_pod else 8]).reshape(shape)
+        return Mesh(dev, axes)
+    M.make_production_mesh = small_mesh
+    DR.make_production_mesh = small_mesh
+    import dataclasses
+    import repro.configs as C
+    cfg = C.get_config("yi-6b").reduced()
+    orig = DR.dryrun_config
+    DR.dryrun_config = lambda a: cfg.replace(carls=dataclasses.replace(
+        cfg.carls, kb_entries=512))
+    import repro.configs.base as B
+    B.INPUT_SHAPES["train_4k"] = B.InputShape("train_4k", 64, 8, "train")
+    B.INPUT_SHAPES["decode_32k"] = B.InputShape("decode_32k", 64, 8, "decode")
+    for shp in ("train_4k", "decode_32k"):
+        for mp in (False, True):
+            rec = DR.run_one("yi-6b", shp, mp)
+            assert rec["roofline"]["flops"] > 0, rec
+            print("DRYRUN_OK", shp, mp, rec["memory"]["peak_per_device_gib"])
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_pipeline_small_mesh_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _DRYRUN_SMALL], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.stdout.count("DRYRUN_OK") == 4, r.stdout + r.stderr

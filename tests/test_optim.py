@@ -1,0 +1,61 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (AdamW, constant_lr, global_norm, warmup_cosine,
+                         warmup_stable_decay)
+
+
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(lr=constant_lr(0.1), weight_decay=0.0, clip_norm=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, _ = opt.update(g, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_weight_decay_shrinks_params():
+    opt = AdamW(lr=constant_lr(0.1), weight_decay=1.0, clip_norm=0.0)
+    params = {"w": jnp.array([1.0])}
+    state = opt.init(params)
+    g = {"w": jnp.zeros(1)}
+    p2, _, _ = opt.update(g, state, params)
+    assert float(p2["w"][0]) < 1.0
+
+
+def test_clip_norm_bounds_update():
+    opt = AdamW(lr=constant_lr(1.0), weight_decay=0.0, clip_norm=1e-3)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    g = {"w": jnp.full((4,), 1e6)}
+    _, _, gn = opt.update(g, state, params)
+    assert float(gn) > 1e5  # reported norm is pre-clip
+
+
+def test_bf16_moments_roundtrip():
+    opt = AdamW(lr=constant_lr(0.01), moments_dtype="bfloat16")
+    params = {"w": jnp.ones(8)}
+    state = opt.init(params)
+    assert state.mu["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones(8)}
+    p2, s2, _ = opt.update(g, state, params)
+    assert s2.mu["w"].dtype == jnp.bfloat16
+    assert float(p2["w"][0]) < 1.0
+
+
+def test_schedules_monotone_regions():
+    lr = warmup_cosine(1.0, 10, 100)
+    assert float(lr(jnp.int32(1))) < float(lr(jnp.int32(9)))
+    assert float(lr(jnp.int32(10))) >= float(lr(jnp.int32(50)))
+    assert float(lr(jnp.int32(50))) >= float(lr(jnp.int32(99)))
+    lr2 = warmup_stable_decay(1.0, 10, 100)
+    assert abs(float(lr2(jnp.int32(40))) - 1.0) < 1e-6
+    assert float(lr2(jnp.int32(99))) < 1.0
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6

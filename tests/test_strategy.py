@@ -1,0 +1,48 @@
+"""Strategy selection + FSDP partition rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.models import build_model
+from repro.sharding.partition import DistContext, param_pspecs
+
+
+def choose(arch, shape):
+    from repro.launch.dryrun import choose_strategy, dryrun_config
+    return choose_strategy(dryrun_config(arch), INPUT_SHAPES[shape], 256)
+
+
+def test_strategy_selection_rules():
+    assert choose("yi-6b", "train_4k") == "fsdp"
+    assert choose("minitron-4b", "train_4k") == "fsdp"
+    assert choose("rwkv6-7b", "train_4k") == "fsdp"
+    assert choose("grok-1-314b", "train_4k") == "tp"       # MoE
+    assert choose("command-r-plus-104b", "train_4k") == "tp"  # >20B
+    assert choose("whisper-tiny", "train_4k") == "tp"      # enc-dec, d384
+    assert choose("yi-6b", "decode_32k") == "tp"           # serve shapes
+    assert choose("yi-6b", "prefill_32k") == "tp"
+
+
+def test_fsdp_pspecs_shard_over_both_axes():
+    cfg = get_config("yi-6b")
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    dist = DistContext(strategy="fsdp")
+    specs = param_pspecs(params, cfg, dist)
+    wq = specs["groups"]["pos0"]["attn"]["wq"]
+    assert wq == P(None, ("data", "model"), None)
+    assert specs["embed"]["tok"] == P(("data", "model"), None)
+    # norms replicated
+    assert specs["final_norm"] == P(None)
+    assert specs["groups"]["pos0"]["ln1"] == P(None, None)
+
+
+def test_fsdp_dp_axes_include_model():
+    d = DistContext(strategy="fsdp")
+    assert d.dp_axes == ("data", "model")
+    d2 = DistContext(strategy="fsdp", pod_axis="pod")
+    assert d2.dp_axes == ("pod", "data", "model")
+    assert DistContext().dp_axes == ("data",)
