@@ -9,6 +9,7 @@ Suites:
   lazy_update      : §3.2   — lazy average + outlier rejection stability
   two_tower        : §4.3   — KB-scaled negative pools
   nn_search_bench  : §3.2   — NN lookup + constant-latency sharding
+  kb_serving       : §3.2   — request-coalescing server vs per-call lock
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ import sys
 import traceback
 
 SUITES = ["neighbor_scaling", "staleness", "lazy_update", "two_tower",
-          "nn_search_bench", "dynamic_graph"]
+          "nn_search_bench", "dynamic_graph", "kb_serving"]
 
 
 def main(argv=None) -> None:

@@ -5,9 +5,12 @@ Components wired together:
 - Model Trainer  : tiny llama-style LM + graph regularizer (main thread)
 - Knowledge Maker: 2 daemon threads re-encoding nodes with the latest
                    checkpoint and pushing embeddings
-- Knowledge Bank : thread-safe server with lazy gradient updates
+- Knowledge Bank : request-coalescing server over the pluggable KB engine
+                   (concurrent trainer+maker calls merge into one jitted
+                   batched device op per queue drain; lazy gradient updates
+                   applied on next lookup)
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [dense|pallas]
 """
 import os
 import sys
@@ -23,16 +26,18 @@ from repro.models import build_model
 
 
 def main():
+    kb_backend = sys.argv[1] if len(sys.argv) > 1 else "dense"
     cfg = get_config("yi-6b").reduced().replace(num_layers=2)
     model = build_model(cfg)
     corpus = SyntheticGraphCorpus(
         num_nodes=1024, vocab_size=cfg.vocab_size, seq_len=33,
         num_clusters=8, neighbors_per_node=cfg.carls.num_neighbors)
 
-    print("=== CARLS async training: trainer + 2 knowledge makers ===")
+    print(f"=== CARLS async training: trainer + 2 knowledge makers "
+          f"(kb engine: {kb_backend}) ===")
     res = run_async_training(model, corpus, steps=60, batch_size=16,
                              num_makers=2, maker_batch=64, ckpt_period=5,
-                             lr=2e-3, seed=0)
+                             lr=2e-3, seed=0, kb_backend=kb_backend)
     print(f"loss: {res.losses[0]:.4f} -> {np.mean(res.losses[-5:]):.4f}")
     print(f"graph-reg: {res.reg_losses[0]:.4f} -> "
           f"{np.mean(res.reg_losses[-5:]):.4f}")
@@ -42,6 +47,10 @@ def main():
           f"{res.mean_staleness:.2f}")
     print(f"mean trainer step: {np.mean(res.step_times[2:])*1e3:.1f} ms "
           f"(independent of maker load — that's the point)")
+    m = res.server.metrics
+    print(f"kb server: {m['requests']} requests -> {m['dispatches']} device "
+          f"dispatches (coalescing x{res.server.coalescing_factor:.1f}, "
+          f"longest merged run {m['max_run']})")
 
     # the bank now holds model-space node embeddings; same-cluster nodes
     # should be closer than cross-cluster ones

@@ -1,0 +1,61 @@
+"""Version-tolerance shims for the jax APIs this repo depends on.
+
+The repo targets the jax_pallas toolchain across jax versions whose public
+surface moved between releases:
+
+- ``shard_map``: top-level ``jax.shard_map`` (new) vs
+  ``jax.experimental.shard_map.shard_map`` (<= 0.4.x), whose replication-check
+  kwarg was renamed ``check_rep`` -> ``check_vma``.
+- Pallas TPU compiler params: ``pltpu.CompilerParams`` (new) vs
+  ``pltpu.TPUCompilerParams`` (<= 0.4.x).
+
+Everything that shards or lowers kernels imports from here, never from jax
+directly, so a toolchain bump touches exactly one file.
+"""
+from __future__ import annotations
+
+import jax
+import jax.experimental.pallas.tpu as pltpu
+
+# --- shard_map -------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):                     # jax >= 0.6
+    _shard_map_impl = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:                                             # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the new-style signature on every jax version."""
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **{_CHECK_KW: check_vma})
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``: older jax returns a
+    one-element list of dicts, newer returns the dict directly."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def axis_size(name: str):
+    """``jax.lax.axis_size`` fallback: psum of 1 over the named axis."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+# --- pallas compiler params ------------------------------------------------
+
+if hasattr(pltpu, "CompilerParams"):              # jax >= 0.6
+    CompilerParams = pltpu.CompilerParams
+elif hasattr(pltpu, "TPUCompilerParams"):         # jax 0.4.x
+    CompilerParams = pltpu.TPUCompilerParams
+else:                                             # fail at import, with a name
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; update repro.compat for this jax version")

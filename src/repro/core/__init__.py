@@ -5,9 +5,12 @@ from repro.core.knowledge_bank import (FeatureStore, KBState,
                                        fs_update_labels, fs_update_neighbors,
                                        kb_create, kb_flush, kb_lazy_grad,
                                        kb_lookup, kb_nn_search, kb_update)
-from repro.core.sharded_kb import (kb_axes, kb_pspecs, sharded_kb_lazy_grad,
-                                   sharded_kb_lookup, sharded_kb_nn_search,
-                                   sharded_kb_update)
+from repro.core.sharded_kb import (kb_axes, kb_pspecs, sharded_kb_flush,
+                                   sharded_kb_lazy_grad, sharded_kb_lookup,
+                                   sharded_kb_nn_search, sharded_kb_update)
+from repro.core.kb_engine import (DenseBackend, KBBackend, KBEngine,
+                                  PallasBackend, ShardedBackend,
+                                  make_backend)
 from repro.core.trainer import (make_async_train_fns, make_carls_train_step,
                                 make_inline_baseline_step, model_loss)
 from repro.core.knowledge_maker import (graph_agreement_labels,
@@ -21,8 +24,10 @@ __all__ = [
     "FeatureStore", "KBState", "feature_store_create", "fs_lookup_neighbors",
     "fs_update_labels", "fs_update_neighbors", "kb_create", "kb_flush",
     "kb_lazy_grad", "kb_lookup", "kb_nn_search", "kb_update",
-    "kb_axes", "kb_pspecs", "sharded_kb_lazy_grad", "sharded_kb_lookup",
-    "sharded_kb_nn_search", "sharded_kb_update",
+    "kb_axes", "kb_pspecs", "sharded_kb_flush", "sharded_kb_lazy_grad",
+    "sharded_kb_lookup", "sharded_kb_nn_search", "sharded_kb_update",
+    "DenseBackend", "KBBackend", "KBEngine", "PallasBackend",
+    "ShardedBackend", "make_backend",
     "make_async_train_fns", "make_carls_train_step",
     "make_inline_baseline_step", "model_loss",
     "graph_agreement_labels", "make_embed_fn", "make_embedding_refresh",

@@ -1,35 +1,58 @@
-"""Asynchronous host runtime: real trainer / knowledge-maker concurrency.
+"""Asynchronous host runtime: trainer / knowledge-maker concurrency over a
+request-coalescing Knowledge-Bank server.
 
-This is the faithful execution model of the paper's Figure 1 on one host:
+This is the execution model of the paper's Figure 1 on one host, rebuilt on
+the pluggable KB engine (``repro.core.kb_engine``):
 
-- ``KnowledgeBankServer``  : thread-safe bank (embedding table + feature
-  store + lazy-gradient cache) with version counters and staleness metrics —
-  the stand-in for the sharded Bigtable/DynamicEmbedding servers.
-- ``MakerLoop`` (thread)   : repeatedly loads the LATEST checkpoint published
+- ``KnowledgeBankServer``: the stand-in for the sharded DynamicEmbedding /
+  Bigtable servers. Concurrent trainer/maker calls do NOT each pay a locked
+  device round-trip: every call enqueues an (op, ids, payload) future, and a
+  dispatcher thread drains the queue and executes ONE jitted batched op per
+  maximal FIFO run of same-op requests. N concurrent clients cost one device
+  dispatch — the RPC-amortization trick CARLS' DynamicEmbedding servers and
+  TF-GNN's bulk graph services use, in-process. Set ``coalesce=False`` for
+  the per-call locked baseline (kept as the benchmark ablation).
+- ``MakerLoop`` (thread): repeatedly loads the LATEST checkpoint published
   by the trainer, re-encodes a round-robin slice of nodes, and pushes
   embeddings. Runs concurrently with — and never blocks — training.
-- ``run_async_training``   : the trainer loop. Each step it (1) looks up
+- ``run_async_training``: the trainer loop. Each step it (1) looks up
   neighbor features + embeddings from the server, (2) runs the jitted train
   core, (3) hands the neighbor-embedding gradients back to the server's lazy
   cache, (4) periodically publishes a checkpoint.
 
+Why coalescing is legal: the engine's batched ops are deterministic under
+duplicate ids, version counters bump once per touched row per call, and a
+client blocks on its future before issuing its next request — so per-client
+program order is preserved. A merged run is equivalent to a serial
+interleaving of its requests for lookup / update / flush / nn_search, and
+for lazy_grad with entry-side clipping off (cache adds commute). With
+entry-side clipping ON (zmax > 0), a merged lazy_grad run clips every
+contribution against the pre-drain norm EMA and advances the EMA one step
+on the pooled mean — same-row contributions from different clients are
+treated as one unordered batch rather than two sequenced ones. That is the
+paper's own model (§3.2 caches trainer gradients with no ordering
+guarantee); the clip cap differs from a serial schedule only in the decay
+weighting of one EMA step, never in which gradients are cached.
+
 Asynchrony knobs: number of maker threads, maker batch size, checkpoint
 publish period (== the paper's "data freshness" axis, measured and reported
-as `staleness` = trainer_step - ckpt_step_used_by_maker).
+as `staleness` = trainer_step - ckpt_step_used_by_maker), and the KB engine
+backend (dense | sharded | pallas).
 """
 from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import MemoryCheckpointStore
-from repro.core import knowledge_bank as kbm
+from repro.core.kb_engine import KBEngine
 from repro.core.trainer import make_async_train_fns
 from repro.data.pipeline import SyntheticGraphCorpus
 from repro.models.model import LM
@@ -37,75 +60,250 @@ from repro.optim import AdamW
 from repro.sharding.partition import DistContext
 
 
-class KnowledgeBankServer:
-    """Thread-safe knowledge bank with the same lazy-update semantics as the
-    functional ops (it *uses* them, under a lock)."""
+class _Request:
+    """One queued client call; ``event`` fires when ``result`` is ready.
+    ``meta`` carries the op's step tag (lookup: trainer_step; update:
+    src_step) so staleness accounting happens in execution order."""
 
-    def __init__(self, num_entries: int, dim: int, *, lazy_lr: float = 0.1,
-                 zmax: float = 3.0, lazy_update: bool = True):
-        self._kb = kbm.kb_create(num_entries, dim)
-        self._lock = threading.RLock()
-        self.lazy_lr, self.zmax, self.lazy_update = lazy_lr, zmax, lazy_update
+    __slots__ = ("op", "ids", "payload", "k", "shape", "meta", "event",
+                 "result", "error")
+
+    def __init__(self, op, ids=None, payload=None, k=None, shape=None,
+                 meta=0):
+        self.op, self.ids, self.payload, self.k = op, ids, payload, k
+        self.shape, self.meta = shape, meta
+        self.event = threading.Event()
+        self.result = None
+        self.error = None
+
+    def wait(self):
+        self.event.wait()
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+
+def _mergeable(prev: _Request, r: _Request) -> bool:
+    """Can ``r`` join the run started by ``prev`` as one batched op?"""
+    if prev.op != r.op:
+        return False
+    if r.op in ("lookup", "update", "lazy_grad"):
+        return True
+    return r.op == "nn" and prev.k == r.k
+
+
+class KnowledgeBankServer:
+    """Thread-safe KB server with request coalescing over a ``KBEngine``.
+
+    Public surface is unchanged from the per-call era (lookup / update /
+    lazy_grad / flush / nn_search / table_snapshot + staleness metrics);
+    what changed is the execution model — see the module docstring."""
+
+    def __init__(self, num_entries: Optional[int] = None,
+                 dim: Optional[int] = None, *,
+                 engine: Optional[KBEngine] = None, backend="dense",
+                 dist: Optional[DistContext] = None,
+                 lazy_lr: float = 0.1, zmax: float = 3.0,
+                 lazy_update: bool = True, coalesce: bool = True,
+                 coalesce_window_s: float = 0.0, max_coalesce: int = 256):
+        if engine is None:
+            engine = KBEngine(num_entries, dim, backend=backend, dist=dist,
+                              lazy_lr=lazy_lr, zmax=zmax,
+                              lazy_update=lazy_update)
+        self.engine = engine
+        self.coalesce = coalesce
+        self.coalesce_window_s = coalesce_window_s
+        self.max_coalesce = max_coalesce
         # row -> trainer step of the checkpoint that produced the row
-        self._row_src_step = np.full((num_entries,), -1, np.int64)
+        self._row_src_step = np.full((engine.num_entries,), -1, np.int64)
         self.metrics = {"lookups": 0, "updates": 0, "lazy_grads": 0,
                         "rows_served": 0, "stale_rows_served": 0,
-                        "staleness_sum": 0.0}
+                        "staleness_sum": 0.0,
+                        "requests": 0, "dispatches": 0, "max_run": 0}
+        self._mlock = threading.Lock()      # metrics + row_src_step
+        self._elock = threading.Lock()      # engine state (direct path)
+        self._queue: deque = deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        self._dispatcher = None
+        if coalesce:
+            self._dispatcher = threading.Thread(
+                target=self._dispatch_loop, daemon=True, name="kb-dispatch")
+            self._dispatcher.start()
 
-    # -- embedding ops -----------------------------------------------------
+    # -- client API --------------------------------------------------------
+
     def lookup(self, ids: np.ndarray, *, trainer_step: int = 0) -> np.ndarray:
-        with self._lock:
-            vals, self._kb = kbm.kb_lookup(
-                self._kb, jnp.asarray(ids), lazy_lr=self.lazy_lr,
-                zmax=self.zmax, apply_pending=self.lazy_update)
-            flat = np.asarray(ids).reshape(-1)
-            src = self._row_src_step[flat]
-            known = src >= 0
-            self.metrics["lookups"] += 1
-            self.metrics["rows_served"] += flat.size
-            self.metrics["stale_rows_served"] += int(
-                (known & (src < trainer_step)).sum())
-            self.metrics["staleness_sum"] += float(
-                np.maximum(trainer_step - src[known], 0).sum())
-            return np.asarray(vals)
+        ids = np.asarray(ids)
+        return self._submit(_Request("lookup", ids.reshape(-1),
+                                     shape=ids.shape, meta=trainer_step))
 
-    def update(self, ids, values, *, src_step: int = 0):
-        with self._lock:
-            self._kb = kbm.kb_update(self._kb, jnp.asarray(ids),
-                                     jnp.asarray(values))
-            self._row_src_step[np.asarray(ids).reshape(-1)] = src_step
-            self.metrics["updates"] += 1
+    def update(self, ids, values, *, src_step: int = 0) -> None:
+        ids = np.asarray(ids)
+        self._submit(_Request("update", ids.reshape(-1),
+                              np.asarray(values).reshape(ids.size, -1),
+                              meta=src_step))
 
-    def lazy_grad(self, ids, grads):
-        with self._lock:
-            if self.lazy_update:
-                self._kb = kbm.kb_lazy_grad(self._kb, jnp.asarray(ids),
-                                            jnp.asarray(grads),
-                                            zmax=self.zmax)
-            else:  # naive immediate SGD scatter (ablation baseline)
-                flat = jnp.asarray(ids).reshape(-1)
-                g = jnp.asarray(grads).reshape(flat.shape[0], -1)
-                tbl = self._kb.table.at[flat].add(-self.lazy_lr * g)
-                self._kb = self._kb._replace(table=tbl)
-            self.metrics["lazy_grads"] += 1
+    def lazy_grad(self, ids, grads) -> None:
+        ids = np.asarray(ids)
+        self._submit(_Request("lazy_grad", ids.reshape(-1),
+                              np.asarray(grads, np.float32).reshape(
+                                  ids.size, -1)))
 
-    def flush(self):
-        with self._lock:
-            self._kb = kbm.kb_flush(self._kb, lazy_lr=self.lazy_lr,
-                                    zmax=self.zmax)
+    def flush(self) -> None:
+        self._submit(_Request("flush"))
 
     def nn_search(self, queries, k: int):
-        with self._lock:
-            return kbm.kb_nn_search(self._kb, jnp.asarray(queries), k)
+        return self._submit(_Request("nn", payload=np.asarray(queries), k=k))
 
     def table_snapshot(self) -> np.ndarray:
-        with self._lock:
-            return np.asarray(self._kb.table)
+        self._submit(_Request("barrier"))       # drain queued writes first
+        with self._elock:
+            return self.engine.table_snapshot()
+
+    def warmup(self, max_batch: int = 256) -> None:
+        """Pre-compile the engine's jit buckets up to ``max_batch``."""
+        with self._elock:
+            self.engine.warmup(max_batch)
 
     @property
     def mean_staleness(self) -> float:
         served = max(self.metrics["rows_served"], 1)
         return self.metrics["staleness_sum"] / served
+
+    @property
+    def coalescing_factor(self) -> float:
+        """Mean requests per device dispatch (1.0 = no coalescing won)."""
+        return self.metrics["requests"] / max(self.metrics["dispatches"], 1)
+
+    def close(self, timeout_s: float = 60.0) -> None:
+        """Stop the dispatcher after draining; later calls run direct.
+        Raises if the drain does not finish within ``timeout_s`` — metrics
+        and snapshots are only consistent once the dispatcher has exited."""
+        if self._dispatcher is None:
+            return
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self._dispatcher.join(timeout=timeout_s)
+        if self._dispatcher.is_alive():
+            raise RuntimeError(
+                f"KB dispatcher did not drain within {timeout_s}s "
+                f"({len(self._queue)} requests still queued)")
+        self._dispatcher = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- execution ---------------------------------------------------------
+
+    def _submit(self, req: _Request):
+        if req.op != "barrier":         # barriers never dispatch; keep the
+            with self._mlock:           # coalescing_factor ratio honest
+                self.metrics["requests"] += 1
+        if self.coalesce and not self._closed:
+            with self._cond:
+                if not self._closed:        # re-check under the lock
+                    self._queue.append(req)
+                    self._cond.notify()
+                    queued = True
+                else:
+                    queued = False
+            if queued:
+                return req.wait()
+        # per-call locked baseline (and post-close stragglers)
+        with self._elock:
+            self._execute_run([req])
+        return req.wait()
+
+    def _dispatch_loop(self):
+        while True:
+            with self._cond:
+                while not self._queue and not self._closed:
+                    self._cond.wait()
+                if self._closed and not self._queue:
+                    return
+            if self.coalesce_window_s:
+                time.sleep(self.coalesce_window_s)   # let the queue fill
+            with self._cond:
+                batch = [self._queue.popleft()
+                         for _ in range(min(len(self._queue),
+                                            self.max_coalesce))]
+            # maximal FIFO runs of the same op -> one device dispatch each
+            runs: List[List[_Request]] = []
+            for r in batch:
+                if runs and _mergeable(runs[-1][0], r):
+                    runs[-1].append(r)
+                else:
+                    runs.append([r])
+            for run in runs:
+                with self._elock:
+                    self._execute_run(run)
+
+    def _execute_run(self, run: List[_Request]):
+        op = run[0].op
+        try:
+            before = self.engine.dispatches
+            if op == "lookup":
+                ids = np.concatenate([r.ids for r in run])
+                vals = self.engine.lookup(ids)
+                off = 0
+                for r in run:
+                    n = r.ids.size
+                    r.result = vals[off:off + n].reshape(*r.shape, -1)
+                    off += n
+                # staleness is accounted HERE, in execution order, so a
+                # concurrent maker update landing after this run cannot
+                # retag rows this lookup served from the older checkpoint
+                with self._mlock:
+                    for r in run:
+                        src = self._row_src_step[r.ids]
+                        known = src >= 0
+                        self.metrics["lookups"] += 1
+                        self.metrics["rows_served"] += r.ids.size
+                        self.metrics["stale_rows_served"] += int(
+                            (known & (src < r.meta)).sum())
+                        self.metrics["staleness_sum"] += float(
+                            np.maximum(r.meta - src[known], 0).sum())
+            elif op == "update":
+                self.engine.update(
+                    np.concatenate([r.ids for r in run]),
+                    np.concatenate([r.payload for r in run]))
+                with self._mlock:
+                    for r in run:
+                        self._row_src_step[r.ids] = r.meta
+                        self.metrics["updates"] += 1
+            elif op == "lazy_grad":
+                self.engine.lazy_grad(
+                    np.concatenate([r.ids for r in run]),
+                    np.concatenate([r.payload for r in run]))
+                with self._mlock:
+                    self.metrics["lazy_grads"] += len(run)
+            elif op == "flush":
+                self.engine.flush()
+            elif op == "nn":
+                sizes = [r.payload.shape[0] for r in run]
+                scores, ids = self.engine.nn_search(
+                    np.concatenate([r.payload for r in run]), run[0].k)
+                off = 0
+                for r, n in zip(run, sizes):
+                    r.result = (scores[off:off + n], ids[off:off + n])
+                    off += n
+            elif op == "barrier":
+                pass
+            with self._mlock:
+                self.metrics["dispatches"] += self.engine.dispatches - before
+                self.metrics["max_run"] = max(self.metrics["max_run"],
+                                              len(run))
+        except Exception as e:          # deliver, don't kill the dispatcher
+            for r in run:
+                r.error = e
+        finally:
+            for r in run:
+                r.event.set()
 
 
 class MakerLoop(threading.Thread):
@@ -165,6 +363,8 @@ def run_async_training(model: LM, corpus: SyntheticGraphCorpus, *,
                        reg_weight: Optional[float] = None,
                        lazy_update: bool = True,
                        use_makers: bool = True,
+                       kb_backend: str = "dense",
+                       coalesce: bool = True,
                        seed: int = 0) -> AsyncRunResult:
     """End-to-end asynchronous CARLS training on one host."""
     from repro.optim import constant_lr
@@ -175,10 +375,15 @@ def run_async_training(model: LM, corpus: SyntheticGraphCorpus, *,
     opt_state = opt.init(params)
     train_core, embed_fn = make_async_train_fns(model, opt, dist,
                                                 reg_weight=reg_weight)
-    server = KnowledgeBankServer(corpus.num_nodes, cfg.d_model,
-                                 lazy_lr=cfg.carls.lazy_lr,
-                                 zmax=cfg.carls.outlier_zmax,
-                                 lazy_update=lazy_update)
+    kb_dist = None
+    if kb_backend == "sharded":
+        # the bank gets its own meshed context (the trainer's stays as-is)
+        from repro.launch.mesh import make_host_mesh
+        kb_dist = DistContext(mesh=make_host_mesh())
+    server = KnowledgeBankServer(
+        corpus.num_nodes, cfg.d_model, backend=kb_backend, dist=kb_dist,
+        lazy_lr=cfg.carls.lazy_lr, zmax=cfg.carls.outlier_zmax,
+        lazy_update=lazy_update, coalesce=coalesce)
     ckpts = MemoryCheckpointStore()
     ckpts.save(0, params)
     makers = []
@@ -193,24 +398,27 @@ def run_async_training(model: LM, corpus: SyntheticGraphCorpus, *,
 
     rng = np.random.default_rng(seed + 1)
     losses, regs, times = [], [], []
-    for step in range(steps):
-        batch = corpus.batch(rng, batch_size)
-        nbr_emb = server.lookup(batch["neighbor_ids"], trainer_step=step)
-        jb = {k: jnp.asarray(v) for k, v in batch.items()}
-        t0 = time.perf_counter()
-        params, opt_state, pooled, gn, metrics = train_core(
-            params, opt_state, jb, jnp.asarray(nbr_emb))
-        jax.block_until_ready(pooled)
-        times.append(time.perf_counter() - t0)
-        server.lazy_grad(batch["neighbor_ids"], np.asarray(gn))
-        losses.append(float(metrics["loss"]))
-        regs.append(float(metrics.get("graph_reg", 0.0)))
-        if (step + 1) % ckpt_period == 0:
-            ckpts.save(step + 1, params)
-    for mk in makers:
-        mk.stop_event.set()
-    for mk in makers:
-        mk.join(timeout=5.0)
+    try:
+        for step in range(steps):
+            batch = corpus.batch(rng, batch_size)
+            nbr_emb = server.lookup(batch["neighbor_ids"], trainer_step=step)
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            params, opt_state, pooled, gn, metrics = train_core(
+                params, opt_state, jb, jnp.asarray(nbr_emb))
+            jax.block_until_ready(pooled)
+            times.append(time.perf_counter() - t0)
+            server.lazy_grad(batch["neighbor_ids"], np.asarray(gn))
+            losses.append(float(metrics["loss"]))
+            regs.append(float(metrics.get("graph_reg", 0.0)))
+            if (step + 1) % ckpt_period == 0:
+                ckpts.save(step + 1, params)
+    finally:        # a failed step must not leak maker/dispatcher threads
+        for mk in makers:
+            mk.stop_event.set()
+        for mk in makers:
+            mk.join(timeout=5.0)
+        server.close()
     return AsyncRunResult(
         losses=losses, reg_losses=regs, step_times=times,
         maker_refreshes=sum(m.refreshes for m in makers),

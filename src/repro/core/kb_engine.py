@@ -1,0 +1,334 @@
+"""Pluggable Knowledge-Bank engine: one semantics, three execution backends.
+
+The paper's Knowledge Bank (§3.2) is a service contract — lookup / update /
+lazy_grad / flush / nn_search over shared state — not an implementation.
+This module makes that contract explicit:
+
+- ``KBBackend``   : the protocol. Pure functions over the shared ``KBState``
+                    from ``repro.core.knowledge_bank``.
+- ``DenseBackend``: the jnp reference ops (semantics ground truth).
+- ``ShardedBackend``: the mesh-sharded shard_map ops from
+                    ``repro.core.sharded_kb`` (owner-masked scatters, psum
+                    fan-in) — same math, distributed state.
+- ``PallasBackend``: the TPU serving path. ``lookup`` runs the fused
+                    gather + lazy-apply + cache-clear kernel
+                    (``repro.kernels.kb_fused_lookup``) — one HBM pass
+                    instead of six gather/scatters; ``flush`` runs the
+                    fused ``lazy_apply`` kernel; ``nn_search`` the blocked
+                    MIPS kernel. Writes (update / lazy_grad) are plain
+                    scatters with nothing to fuse and stay on the jnp path.
+
+Backends are interchangeable bit-for-bit (tests/test_kb_engine.py drives
+the same op sequence through all three and compares every state leaf).
+
+``KBEngine`` is the stateful shell the host runtime talks to: it owns a
+``KBState``, jits each backend op once, and pads every batch to power-of-two
+jit buckets so arbitrary (and coalesced — see ``repro.core.async_runtime``)
+request sizes hit a bounded set of compiled programs. Padding is free by
+construction: lookups/updates pad with a duplicated real entry (batched ops
+are deterministic under duplicates, version bumps count touched rows once),
+lazy_grads pad with masked-out entries.
+
+The engine itself is NOT thread-safe — concurrency (locking or request
+coalescing) is the server layer's job.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import knowledge_bank as kbm
+from repro.core.knowledge_bank import KBState
+from repro.sharding.partition import DistContext
+
+
+class KBBackend(Protocol):
+    """Functional KB ops over a shared ``KBState``. All ids/grads flat."""
+
+    name: str
+
+    def lookup(self, state: KBState, ids, *, lazy_lr: float, zmax: float,
+               apply_pending: bool = True) -> Tuple[jnp.ndarray, KBState]: ...
+
+    def update(self, state: KBState, ids, values) -> KBState: ...
+
+    def lazy_grad(self, state: KBState, ids, grads, *, zmax: float,
+                  mask=None) -> KBState: ...
+
+    def flush(self, state: KBState, *, lazy_lr: float,
+              zmax: float) -> KBState: ...
+
+    def nn_search(self, state: KBState, queries, k: int,
+                  *, exclude_ids=None) -> Tuple[jnp.ndarray, jnp.ndarray]: ...
+
+
+class DenseBackend:
+    """The jnp reference ops — semantics ground truth for every backend."""
+
+    name = "dense"
+
+    def lookup(self, state, ids, *, lazy_lr, zmax, apply_pending=True):
+        return kbm.kb_lookup(state, ids, lazy_lr=lazy_lr, zmax=zmax,
+                             apply_pending=apply_pending)
+
+    def update(self, state, ids, values):
+        return kbm.kb_update(state, ids, values)
+
+    def lazy_grad(self, state, ids, grads, *, zmax, mask=None):
+        return kbm.kb_lazy_grad(state, ids, grads, zmax=zmax, mask=mask)
+
+    def flush(self, state, *, lazy_lr, zmax):
+        return kbm.kb_flush(state, lazy_lr=lazy_lr, zmax=zmax)
+
+    def nn_search(self, state, queries, k, *, exclude_ids=None):
+        return kbm.kb_nn_search(state, queries, k, exclude_ids=exclude_ids)
+
+
+class ShardedBackend:
+    """Mesh-sharded ops: owner-masked scatters, one psum fan-in per lookup.
+    See repro.core.sharded_kb for the communication analysis."""
+
+    name = "sharded"
+
+    def __init__(self, dist: DistContext, *, use_nn_kernel: bool = False):
+        from repro.core import sharded_kb as skb
+        if dist is None or dist.mesh is None:
+            raise ValueError("ShardedBackend needs a DistContext with a mesh")
+        self.dist = dist
+        self.use_nn_kernel = use_nn_kernel
+        self._skb = skb
+
+    def lookup(self, state, ids, *, lazy_lr, zmax, apply_pending=True):
+        return self._skb.sharded_kb_lookup(state, ids, self.dist,
+                                           lazy_lr=lazy_lr, zmax=zmax,
+                                           apply_pending=apply_pending)
+
+    def update(self, state, ids, values):
+        return self._skb.sharded_kb_update(state, ids, values, self.dist)
+
+    def lazy_grad(self, state, ids, grads, *, zmax, mask=None):
+        return self._skb.sharded_kb_lazy_grad(state, ids, grads, self.dist,
+                                              zmax=zmax, mask=mask)
+
+    def flush(self, state, *, lazy_lr, zmax):
+        return self._skb.sharded_kb_flush(state, self.dist, lazy_lr=lazy_lr,
+                                          zmax=zmax)
+
+    def nn_search(self, state, queries, k, *, exclude_ids=None):
+        if exclude_ids is not None:
+            raise NotImplementedError(
+                "exclude_ids is a dense-path feature (graph builder)")
+        return self._skb.sharded_kb_nn_search(state, queries, k, self.dist,
+                                              use_kernel=self.use_nn_kernel)
+
+
+class PallasBackend:
+    """TPU serving path: fused single-pass kernels for the read-side ops.
+
+    ``interpret=True`` (default) runs the kernel bodies with jax ops — the
+    CPU-container validation mode; pass False on real TPUs."""
+
+    name = "pallas"
+
+    def __init__(self, *, interpret: bool = True, n_block: int = 512):
+        self.interpret = interpret
+        self.n_block = n_block
+
+    def lookup(self, state, ids, *, lazy_lr, zmax, apply_pending=True):
+        from repro.kernels.kb_fused_lookup import kb_fused_lookup_pallas
+        from repro.kernels.kb_gather import kb_gather_pallas
+        flat = ids.reshape(-1)
+        if not apply_pending:
+            vals = kb_gather_pallas(state.table, flat,
+                                    interpret=self.interpret)
+            return vals.astype(jnp.float32).reshape(*ids.shape, -1), state
+        vals, tbl, gsum, gcnt, gsq = kb_fused_lookup_pallas(
+            state.table, state.grad_sum, state.grad_cnt, state.grad_sqnorm,
+            flat, lazy_lr=lazy_lr, zmax=zmax, n_block=self.n_block,
+            interpret=self.interpret)
+        # version is (N,) metadata: bump once per touched row, jnp-side
+        touched = jnp.zeros(state.version.shape, bool).at[flat].set(
+            True, mode="drop")
+        version = state.version + (touched &
+                                   (state.grad_cnt > 0)).astype(jnp.int32)
+        state = state._replace(table=tbl, version=version, grad_sum=gsum,
+                               grad_cnt=gcnt, grad_sqnorm=gsq)
+        return vals.reshape(*ids.shape, -1), state
+
+    def update(self, state, ids, values):
+        return kbm.kb_update(state, ids, values)
+
+    def lazy_grad(self, state, ids, grads, *, zmax, mask=None):
+        return kbm.kb_lazy_grad(state, ids, grads, zmax=zmax, mask=mask)
+
+    def flush(self, state, *, lazy_lr, zmax):
+        from repro.kernels.lazy_apply import lazy_apply_pallas
+        tbl, gsum, gcnt, gsq = lazy_apply_pallas(
+            state.table, state.grad_sum, state.grad_cnt, state.grad_sqnorm,
+            lazy_lr=lazy_lr, zmax=zmax, interpret=self.interpret)
+        return state._replace(
+            table=tbl,
+            version=state.version + (state.grad_cnt > 0).astype(jnp.int32),
+            grad_sum=gsum, grad_cnt=gcnt, grad_sqnorm=gsq,
+            step=state.step + 1)
+
+    def nn_search(self, state, queries, k, *, exclude_ids=None):
+        if exclude_ids is not None:
+            return kbm.kb_nn_search(state, queries, k,
+                                    exclude_ids=exclude_ids)
+        from repro.kernels.nn_search import nn_search_pallas
+        return nn_search_pallas(queries, state.table, k,
+                                interpret=self.interpret)
+
+
+def make_backend(name: str, *, dist: Optional[DistContext] = None,
+                 interpret: bool = True) -> KBBackend:
+    if name == "dense":
+        return DenseBackend()
+    if name == "sharded":
+        return ShardedBackend(dist)
+    if name == "pallas":
+        return PallasBackend(interpret=interpret)
+    raise ValueError(f"unknown KB backend {name!r} "
+                     "(want dense | sharded | pallas)")
+
+
+def _bucket(n: int, minimum: int = 8) -> int:
+    """Next power-of-two jit bucket (>= minimum)."""
+    return max(minimum, 1 << max(n - 1, 0).bit_length())
+
+
+class KBEngine:
+    """Stateful, host-facing shell around a ``KBBackend``.
+
+    numpy in / numpy out; every device call is a jitted batched op over a
+    power-of-two-padded batch, so the compiled-program set stays bounded no
+    matter what request sizes the server coalesces. Single-threaded by
+    contract (see module docstring)."""
+
+    def __init__(self, num_entries: int, dim: int, *,
+                 backend="dense", dist: Optional[DistContext] = None,
+                 lazy_lr: float = 0.1, zmax: float = 3.0,
+                 entry_zmax: Optional[float] = None,
+                 lazy_update: bool = True, interpret: bool = True,
+                 dtype=jnp.float32, key: Optional[jax.Array] = None):
+        self.backend: KBBackend = (backend if not isinstance(backend, str)
+                                   else make_backend(backend, dist=dist,
+                                                     interpret=interpret))
+        self.num_entries, self.dim = num_entries, dim
+        self.lazy_lr, self.zmax, self.lazy_update = lazy_lr, zmax, lazy_update
+        # entry-side (per-contribution EMA) clip; defaults to the apply-side
+        # zmax, matching the per-call server's single knob
+        entry_zmax = zmax if entry_zmax is None else entry_zmax
+        self.state = kbm.kb_create(num_entries, dim, dtype=dtype, key=key)
+        self.dispatches = 0         # device calls issued (bench metric)
+
+        bk = self.backend
+        self._lookup_fn = jax.jit(lambda st, ids: bk.lookup(
+            st, ids, lazy_lr=lazy_lr, zmax=zmax,
+            apply_pending=lazy_update))
+        self._update_fn = jax.jit(lambda st, ids, v: bk.update(st, ids, v))
+        self._lazy_fn = jax.jit(lambda st, ids, g, m: bk.lazy_grad(
+            st, ids, g, zmax=entry_zmax, mask=m))
+        self._flush_fn = jax.jit(lambda st: bk.flush(
+            st, lazy_lr=lazy_lr, zmax=zmax))
+        # ablation baseline: immediate SGD scatter, no cache (lazy_update
+        # off). mask keeps padded entries inert (g * 0).
+        self._immediate_fn = jax.jit(lambda st, ids, g, m: st._replace(
+            table=st.table.at[ids].add(
+                (-lazy_lr * g * m[:, None]).astype(st.table.dtype))))
+        self._nn_fns = {}
+
+    # -- embedding ops -----------------------------------------------------
+
+    def lookup(self, ids) -> np.ndarray:
+        """Fetch rows (applying pending lazy updates first); any id shape."""
+        ids = np.asarray(ids)
+        flat = ids.reshape(-1).astype(np.int32)
+        if flat.size == 0:
+            return np.zeros((*ids.shape, self.dim), np.float32)
+        pad = _bucket(flat.size) - flat.size
+        padded = np.concatenate([flat, np.full(pad, flat[-1], np.int32)])
+        vals, self.state = self._lookup_fn(self.state, jnp.asarray(padded))
+        self.dispatches += 1
+        return np.asarray(vals[:flat.size]).reshape(*ids.shape, -1)
+
+    def update(self, ids, values) -> None:
+        """Direct write (maker push); duplicate ids resolve last-writer-wins
+        (host-side dedupe — device scatter order is unspecified)."""
+        ids = np.asarray(ids).reshape(-1).astype(np.int32)
+        if ids.size == 0:
+            return
+        values = np.asarray(values).reshape(ids.size, -1)
+        _, keep = np.unique(ids[::-1], return_index=True)
+        keep = ids.size - 1 - keep          # last occurrence of each id
+        ids, values = ids[keep], values[keep]
+        pad = _bucket(ids.size) - ids.size
+        ids = np.concatenate([ids, np.full(pad, ids[-1], np.int32)])
+        values = np.concatenate([values, np.repeat(values[-1:], pad, 0)])
+        self.state = self._update_fn(self.state, jnp.asarray(ids),
+                                     jnp.asarray(values))
+        self.dispatches += 1
+
+    def lazy_grad(self, ids, grads) -> None:
+        """Cache gradients (or apply immediately when lazy_update=False)."""
+        ids = np.asarray(ids).reshape(-1).astype(np.int32)
+        if ids.size == 0:
+            return
+        grads = np.asarray(grads, np.float32).reshape(ids.size, -1)
+        n = ids.size
+        pad = _bucket(n) - n
+        ids_p = np.concatenate([ids, np.full(pad, ids[-1], np.int32)])
+        grads_p = np.concatenate([grads, np.zeros((pad, grads.shape[1]),
+                                                  np.float32)])
+        mask = np.concatenate([np.ones(n, np.float32),
+                               np.zeros(pad, np.float32)])
+        fn = self._lazy_fn if self.lazy_update else self._immediate_fn
+        self.state = fn(self.state, jnp.asarray(ids_p), jnp.asarray(grads_p),
+                        jnp.asarray(mask))
+        self.dispatches += 1
+
+    def flush(self) -> None:
+        """Expiration path: apply every pending cached gradient now."""
+        self.state = self._flush_fn(self.state)
+        self.dispatches += 1
+
+    def nn_search(self, queries, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        queries = np.asarray(queries, np.float32)
+        B = queries.shape[0]
+        pad = _bucket(B) - B
+        q = np.concatenate([queries, np.zeros((pad, queries.shape[1]),
+                                              np.float32)])
+        if k not in self._nn_fns:
+            bk = self.backend
+            self._nn_fns[k] = jax.jit(
+                lambda st, q: bk.nn_search(st, q, k))
+        scores, ids = self._nn_fns[k](self.state, jnp.asarray(q))
+        self.dispatches += 1
+        return np.asarray(scores[:B]), np.asarray(ids[:B])
+
+    def warmup(self, max_batch: int = 256) -> None:
+        """Pre-compile the lookup/lazy_grad jit buckets up to ``max_batch``
+        so serving never stalls on a first-request compile (results are
+        discarded; state is untouched)."""
+        b = 8
+        top = _bucket(max_batch)
+        while b <= top:
+            ids = jnp.zeros((b,), jnp.int32)
+            zeros = jnp.zeros((b, self.dim), jnp.float32)
+            mask = jnp.zeros((b,), jnp.float32)
+            self._lookup_fn(self.state, ids)
+            (self._lazy_fn if self.lazy_update
+             else self._immediate_fn)(self.state, ids, zeros, mask)
+            b *= 2
+
+    # -- introspection -----------------------------------------------------
+
+    def table_snapshot(self) -> np.ndarray:
+        return np.asarray(self.state.table)
+
+    def version_snapshot(self) -> np.ndarray:
+        return np.asarray(self.state.version)

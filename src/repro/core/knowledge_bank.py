@@ -1,7 +1,8 @@
-"""Knowledge Bank (paper §3.2) as a functional JAX state.
+"""Knowledge Bank (paper §3.2): the dense reference semantics layer.
 
-The bank stores one row per instance: an embedding, a version counter, and
-the *lazy gradient update* caches. Three op families from the paper:
+This module is the *semantics ground truth* of the pluggable KB engine
+(``repro.core.kb_engine``). It defines the shared ``KBState`` and the
+functional ops every backend must agree with bit-for-bit:
 
 - feature lookup      : ``FeatureStore`` (neighbor ids/weights, labels)
 - embedding lookup/update with back-propagated gradients (DynamicEmbedding-
@@ -16,8 +17,20 @@ Outlier detection keeps O(1) state per row: the averaged gradient's norm is
 clipped at ``zmax * sqrt(mean per-contribution squared norm)``, rejecting
 update mass contributed by abnormally large cached gradients.
 
-The distributed (mesh-sharded) implementation with identical semantics lives
-in ``repro.core.sharded_kb``.
+Batched-call invariants (what makes server-side request coalescing legal —
+see ``repro.core.async_runtime``):
+
+- ops are *deterministic under duplicate ids* within one call: lookups of a
+  repeated id return identical rows, version counters bump once per touched
+  row per call (gather-increment-scatter, not per-occurrence add), and
+  ``kb_lazy_grad`` accumulates per occurrence as before;
+- ``kb_lazy_grad`` takes an optional per-entry 0/1 ``mask`` so a batch can
+  be padded to a fixed jit bucket size without the padding contributing.
+
+The three engine backends build on this layer: ``DenseBackend`` calls these
+ops directly, ``repro.core.sharded_kb`` re-expresses them as owner-masked
+shard_map ops, and the Pallas backend fuses lookup's gather + lazy-apply +
+cache-clear into a single-pass kernel (``repro.kernels.kb_fused_lookup``).
 """
 from __future__ import annotations
 
@@ -117,8 +130,10 @@ def kb_lookup(kb: KBState, ids: jnp.ndarray, *, lazy_lr: float = 0.1,
             grad_sum=kb.grad_sum.at[flat].set(0.0),
             grad_cnt=kb.grad_cnt.at[flat].set(0.0),
             grad_sqnorm=kb.grad_sqnorm.at[flat].set(0.0),
-            version=kb.version.at[flat].add(
-                (kb.grad_cnt[flat] > 0).astype(jnp.int32)),
+            # gather-increment-scatter: +1 per touched row per call, exactly
+            # once even when ids repeat (duplicate writes carry equal values)
+            version=kb.version.at[flat].set(
+                kb.version[flat] + (kb.grad_cnt[flat] > 0).astype(jnp.int32)),
         )
         vals = new_rows.reshape(*ids.shape, -1)
     else:
@@ -134,7 +149,7 @@ def kb_update(kb: KBState, ids: jnp.ndarray, values: jnp.ndarray) -> KBState:
     vals = values.reshape(flat.shape[0], -1)
     return kb._replace(
         table=kb.table.at[flat].set(vals.astype(kb.table.dtype)),
-        version=kb.version.at[flat].add(1),
+        version=kb.version.at[flat].set(kb.version[flat] + 1),
         grad_sum=kb.grad_sum.at[flat].set(0.0),
         grad_cnt=kb.grad_cnt.at[flat].set(0.0),
         grad_sqnorm=kb.grad_sqnorm.at[flat].set(0.0),
@@ -142,34 +157,60 @@ def kb_update(kb: KBState, ids: jnp.ndarray, values: jnp.ndarray) -> KBState:
     )
 
 
-def kb_lazy_grad(kb: KBState, ids: jnp.ndarray, grads: jnp.ndarray,
-                 *, zmax: float = 0.0) -> KBState:
-    """Cache gradients w.r.t. looked-up rows. ids: (...,); grads (..., D).
-    Duplicate ids accumulate (each counts as one cached gradient).
-
-    Entry-side outlier detection (``zmax > 0``): each incoming gradient's
-    norm is clipped at ``zmax * sqrt(norm_ema)`` — a persistent EMA of
-    per-contribution squared norms — so a single corrupted trainer cannot
-    poison the cached average (§3.2 "average of all cached gradients with
-    possible outlier detection")."""
-    flat = ids.reshape(-1)
-    g = grads.reshape(flat.shape[0], -1).astype(jnp.float32)
-    sq = jnp.sum(g * g, axis=-1)
+def lazy_grad_contribution(g, sq, ema, *, zmax: float):
+    """Entry-side outlier clip of one gradient batch against the persistent
+    norm EMA (shared by every backend). Returns clipped (g', sq')."""
     if zmax and zmax > 0:
-        ema = kb.norm_ema[flat]
         cap = zmax * jnp.sqrt(jnp.maximum(ema, 1e-30))
         nrm = jnp.sqrt(jnp.maximum(sq, 1e-30))
         scale = jnp.where(ema > 0, jnp.minimum(1.0, cap / nrm), 1.0)
         g = g * scale[:, None]
         sq = sq * scale * scale
+    return g, sq
+
+
+def ema_step(ema, sq_sum, cnt):
+    """One norm-EMA step per row per call, against the mean clipped squared
+    norm of the call's contributions (``sq_sum / cnt``). Rows with no
+    contribution keep their EMA. One step per CALL (not per occurrence)
+    keeps the update deterministic and bounded under duplicate ids —
+    exactly what a coalesced multi-client batch produces."""
+    mean_sq = sq_sum / jnp.maximum(cnt, 1.0)
+    return jnp.where(cnt > 0,
+                     jnp.where(ema > 0,
+                               _EMA_DECAY * ema + (1 - _EMA_DECAY) * mean_sq,
+                               mean_sq),
+                     ema)
+
+
+def kb_lazy_grad(kb: KBState, ids: jnp.ndarray, grads: jnp.ndarray,
+                 *, zmax: float = 0.0,
+                 mask: Optional[jnp.ndarray] = None) -> KBState:
+    """Cache gradients w.r.t. looked-up rows. ids: (...,); grads (..., D).
+    Duplicate ids accumulate (each counts as one cached gradient); the
+    norm EMA advances one step per touched row per call (see ``ema_step``).
+
+    Entry-side outlier detection (``zmax > 0``): each incoming gradient's
+    norm is clipped at ``zmax * sqrt(norm_ema)`` — a persistent EMA of
+    per-contribution squared norms — so a single corrupted trainer cannot
+    poison the cached average (§3.2 "average of all cached gradients with
+    possible outlier detection").
+
+    ``mask`` (flat 0/1 per entry): entries with mask 0 contribute nothing —
+    this is what lets the coalescing server pad a merged batch to a fixed
+    jit bucket size with throwaway entries."""
+    flat = ids.reshape(-1)
+    g = grads.reshape(flat.shape[0], -1).astype(jnp.float32)
+    sq = jnp.sum(g * g, axis=-1)
+    g, sq = lazy_grad_contribution(g, sq, kb.norm_ema[flat], zmax=zmax)
+    w = jnp.ones_like(sq) if mask is None else mask.reshape(-1)
+    sq_sum = jnp.zeros_like(kb.norm_ema).at[flat].add(sq * w)
+    cnt_in = jnp.zeros_like(kb.norm_ema).at[flat].add(w)
     return kb._replace(
-        grad_sum=kb.grad_sum.at[flat].add(g),
-        grad_cnt=kb.grad_cnt.at[flat].add(1.0),
-        grad_sqnorm=kb.grad_sqnorm.at[flat].add(sq),
-        norm_ema=kb.norm_ema.at[flat].set(
-            jnp.where(kb.norm_ema[flat] > 0,
-                      _EMA_DECAY * kb.norm_ema[flat] + (1 - _EMA_DECAY) * sq,
-                      sq)),
+        grad_sum=kb.grad_sum.at[flat].add(g * w[:, None]),
+        grad_cnt=kb.grad_cnt.at[flat].add(w),
+        grad_sqnorm=kb.grad_sqnorm.at[flat].add(sq * w),
+        norm_ema=ema_step(kb.norm_ema, sq_sum, cnt_in),
     )
 
 

@@ -1,8 +1,9 @@
-"""Mesh-sharded Knowledge Bank — the TPU-native translation of the paper's
-"sharded and deployed in a distributed fashion" bank (§3.2).
+"""Mesh-sharded Knowledge Bank — the engine's ``ShardedBackend`` substrate.
 
-Rows are sharded across EVERY mesh axis (512-way on the multi-pod mesh). The
-RPC fan-out/fan-in of the original becomes:
+This is the TPU-native translation of the paper's "sharded and deployed in a
+distributed fashion" bank (§3.2). Rows are sharded across EVERY mesh axis
+(512-way on the multi-pod mesh). The RPC fan-out/fan-in of the original
+becomes:
 
 - lookup : each shard gathers the ids it owns (clamped local gather, zeros
            elsewhere) and the results are combined with one ``psum`` whose
@@ -13,19 +14,26 @@ RPC fan-out/fan-in of the original becomes:
            all-gather of the (B, k) candidate sets and a global re-top-k —
            the hierarchical ScaNN-sharding pattern, payload O(B*k*shards).
 
-Semantics are bit-identical to ``repro.core.knowledge_bank`` (tested by
-tests/test_sharded_kb.py); both share ``pending_delta``.
+All owner-masked gather/scatter translation lives in ONE helper
+(``OwnerShard``) instead of being re-derived per op: global ids become a
+clamped gather index, a drop-masked scatter index, and an ownership mask.
+
+Semantics are bit-identical to ``repro.core.knowledge_bank`` (the engine's
+dense reference; enforced by tests/test_kb_engine.py and
+tests/test_sharded_kb.py). The shared lazy-update math (``pending_delta``,
+``lazy_grad_contribution``) is imported, never copied.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.knowledge_bank import KBState, pending_delta
+from repro.compat import axis_size, shard_map
+from repro.core.knowledge_bank import (KBState, ema_step,
+                                       lazy_grad_contribution, pending_delta)
 from repro.sharding.partition import DistContext
 
 
@@ -45,12 +53,53 @@ def kb_pspecs(dist: DistContext) -> KBState:
                    step=P())
 
 
-def _owner_bounds(n_rows_local: int, axes):
-    """(offset, n_local) of this shard's row range inside the global table."""
-    idx = 0
-    for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
-    return idx * n_rows_local, n_rows_local
+class OwnerShard:
+    """This shard's view of the global row space — the single copy of the
+    owner-masked gather/scatter pattern every sharded op is built from.
+
+    For a shard owning rows ``[offset, offset + n_local)`` and a replicated
+    flat id vector, precomputes:
+
+    - ``mine``: ownership mask per id
+    - ``gid`` : clamped local index, safe for gathers (foreign lanes read
+                garbage that the caller masks with ``mine``)
+    - ``sid`` : local index with foreign lanes pushed out of bounds, so
+                ``mode="drop"`` scatters silently skip them
+    """
+
+    def __init__(self, n_local: int, axes: Tuple[str, ...],
+                 flat_ids: Optional[jnp.ndarray] = None):
+        idx = 0
+        for a in axes:
+            idx = idx * axis_size(a) + jax.lax.axis_index(a)
+        self.n_local = n_local
+        self.offset = idx * n_local
+        if flat_ids is not None:
+            lid = flat_ids - self.offset
+            self.mine = (lid >= 0) & (lid < n_local)
+            self.gid = jnp.clip(lid, 0, n_local - 1)
+            self.sid = jnp.where(self.mine, lid, n_local)
+
+    def gather(self, arr):
+        return arr[self.gid]
+
+    def set(self, arr, vals):
+        """Owner-masked scatter-set; foreign lanes dropped."""
+        return arr.at[self.sid].set(vals.astype(arr.dtype), mode="drop")
+
+    def add(self, arr, vals):
+        """Owner-masked scatter-add; foreign lanes dropped."""
+        return arr.at[self.sid].add(vals.astype(arr.dtype), mode="drop")
+
+    def bump(self, arr, inc):
+        """Gather-increment-scatter: +inc once per touched row per call,
+        deterministic under duplicate ids (matches dense semantics)."""
+        return self.set(arr, self.gather(arr) + inc)
+
+    def mask(self, vals, fill=0.0):
+        """Zero (or ``fill``) the lanes this shard does not own."""
+        m = self.mine
+        return jnp.where(m[:, None] if vals.ndim == 2 else m, vals, fill)
 
 
 # ---------------------------------------------------------------------------
@@ -65,28 +114,22 @@ def sharded_kb_lookup(kb: KBState, ids: jnp.ndarray, dist: DistContext, *,
     specs = kb_pspecs(dist)
 
     def body(table, version, gsum, gcnt, gsq, ids):
-        flat = ids.reshape(-1)
-        off, n_loc = _owner_bounds(table.shape[0], axes)
-        lid_raw = flat - off
-        mine = (lid_raw >= 0) & (lid_raw < n_loc)
-        lid = jnp.clip(lid_raw, 0, n_loc - 1)          # for gathers
-        lid_w = jnp.where(mine, lid_raw, n_loc)        # scatters: OOB dropped
-        rows = table[lid].astype(jnp.float32)
+        own = OwnerShard(table.shape[0], axes, ids.reshape(-1))
+        rows = own.gather(table).astype(jnp.float32)
         if apply_pending:
-            delta = pending_delta(gsum[lid], gcnt[lid], gsq[lid],
+            cnt = own.gather(gcnt)
+            delta = pending_delta(own.gather(gsum), cnt, own.gather(gsq),
                                   lazy_lr=lazy_lr, zmax=zmax)
-            rows = rows + jnp.where(mine[:, None], delta, 0.0)
-            table = table.at[lid_w].set(rows.astype(table.dtype), mode="drop")
-            version = version.at[lid_w].add((gcnt[lid] > 0).astype(jnp.int32),
-                                            mode="drop")
-            gsum = gsum.at[lid_w].set(0.0, mode="drop")
-            gcnt = gcnt.at[lid_w].set(0.0, mode="drop")
-            gsq = gsq.at[lid_w].set(0.0, mode="drop")
-        vals = jnp.where(mine[:, None], rows, 0.0)
-        vals = jax.lax.psum(vals, axes)
+            rows = rows + own.mask(delta)
+            table = own.set(table, rows)
+            version = own.bump(version, (cnt > 0).astype(jnp.int32))
+            gsum = own.set(gsum, jnp.zeros_like(rows))
+            gcnt = own.set(gcnt, jnp.zeros_like(cnt))
+            gsq = own.set(gsq, jnp.zeros_like(cnt))
+        vals = jax.lax.psum(own.mask(rows), axes)
         return vals, table, version, gsum, gcnt, gsq
 
-    vals, table, version, gsum, gcnt, gsq = jax.shard_map(
+    vals, table, version, gsum, gcnt, gsq = shard_map(
         body, mesh=dist.mesh,
         in_specs=(specs.table, specs.version, specs.grad_sum, specs.grad_cnt,
                   specs.grad_sqnorm, P(*([None] * ids.ndim))),
@@ -110,18 +153,15 @@ def sharded_kb_update(kb: KBState, ids, values, dist: DistContext) -> KBState:
     def body(table, version, gsum, gcnt, gsq, ids, values):
         flat = ids.reshape(-1)
         vals = values.reshape(flat.shape[0], -1)
-        off, n_loc = _owner_bounds(table.shape[0], axes)
-        lid = flat - off
-        mine = (lid >= 0) & (lid < n_loc)
-        lid = jnp.where(mine, lid, n_loc)              # OOB -> dropped
-        table = table.at[lid].set(vals.astype(table.dtype), mode="drop")
-        version = version.at[lid].add(1, mode="drop")
-        gsum = gsum.at[lid].set(0.0, mode="drop")
-        gcnt = gcnt.at[lid].set(0.0, mode="drop")
-        gsq = gsq.at[lid].set(0.0, mode="drop")
-        return table, version, gsum, gcnt, gsq
+        own = OwnerShard(table.shape[0], axes, flat)
+        zero = jnp.zeros((flat.shape[0],), jnp.float32)
+        return (own.set(table, vals),
+                own.bump(version, 1),
+                own.set(gsum, jnp.zeros_like(vals)),
+                own.set(gcnt, zero),
+                own.set(gsq, zero))
 
-    table, version, gsum, gcnt, gsq = jax.shard_map(
+    table, version, gsum, gcnt, gsq = shard_map(
         body, mesh=dist.mesh,
         in_specs=(specs.table, specs.version, specs.grad_sum, specs.grad_cnt,
                   specs.grad_sqnorm, P(*([None] * ids.ndim)),
@@ -136,47 +176,65 @@ def sharded_kb_update(kb: KBState, ids, values, dist: DistContext) -> KBState:
 
 
 def sharded_kb_lazy_grad(kb: KBState, ids, grads, dist: DistContext,
-                         *, zmax: float = 0.0) -> KBState:
-    from repro.core.knowledge_bank import _EMA_DECAY
+                         *, zmax: float = 0.0,
+                         mask: Optional[jnp.ndarray] = None) -> KBState:
     axes = kb_axes(dist)
     specs = kb_pspecs(dist)
 
-    def body(gsum, gcnt, gsq, ema, ids, grads):
+    def body(gsum, gcnt, gsq, ema, ids, grads, *opt):
         flat = ids.reshape(-1)
         g = grads.reshape(flat.shape[0], -1).astype(jnp.float32)
-        off, n_loc = _owner_bounds(gsum.shape[0], axes)
-        lid_raw = flat - off
-        mine = (lid_raw >= 0) & (lid_raw < n_loc)
-        lid_g = jnp.clip(lid_raw, 0, n_loc - 1)
-        lid = jnp.where(mine, lid_raw, n_loc)
+        own = OwnerShard(gsum.shape[0], axes, flat)
         sq = jnp.sum(g * g, -1)
-        if zmax and zmax > 0:  # entry-side outlier clip vs persistent EMA
-            e = ema[lid_g]
-            cap = zmax * jnp.sqrt(jnp.maximum(e, 1e-30))
-            nrm = jnp.sqrt(jnp.maximum(sq, 1e-30))
-            scale = jnp.where(e > 0, jnp.minimum(1.0, cap / nrm), 1.0)
-            g = g * scale[:, None]
-            sq = sq * scale * scale
-        gsum = gsum.at[lid].add(g, mode="drop")
-        gcnt = gcnt.at[lid].add(1.0, mode="drop")
-        gsq = gsq.at[lid].add(sq, mode="drop")
-        new_ema = jnp.where(ema[lid_g] > 0,
-                            _EMA_DECAY * ema[lid_g] + (1 - _EMA_DECAY) * sq,
-                            sq)
-        ema = ema.at[lid].set(new_ema, mode="drop")
-        return gsum, gcnt, gsq, ema
+        g, sq = lazy_grad_contribution(g, sq, own.gather(ema), zmax=zmax)
+        w = opt[0].reshape(-1) if opt else jnp.ones_like(sq)
+        sq_sum = own.add(jnp.zeros_like(ema), sq * w)
+        cnt_in = own.add(jnp.zeros_like(ema), w)
+        return (own.add(gsum, g * w[:, None]),
+                own.add(gcnt, w),
+                own.add(gsq, sq * w),
+                ema_step(ema, sq_sum, cnt_in))
 
-    gsum, gcnt, gsq, ema = jax.shard_map(
-        body, mesh=dist.mesh,
-        in_specs=(specs.grad_sum, specs.grad_cnt, specs.grad_sqnorm,
-                  specs.norm_ema, P(*([None] * ids.ndim)),
-                  P(*([None] * grads.ndim))),
+    in_specs = (specs.grad_sum, specs.grad_cnt, specs.grad_sqnorm,
+                specs.norm_ema, P(*([None] * ids.ndim)),
+                P(*([None] * grads.ndim)))
+    args = (kb.grad_sum, kb.grad_cnt, kb.grad_sqnorm, kb.norm_ema, ids, grads)
+    if mask is not None:
+        in_specs = in_specs + (P(*([None] * mask.ndim)),)
+        args = args + (mask,)
+    gsum, gcnt, gsq, ema = shard_map(
+        body, mesh=dist.mesh, in_specs=in_specs,
         out_specs=(specs.grad_sum, specs.grad_cnt, specs.grad_sqnorm,
                    specs.norm_ema),
         check_vma=False,
-    )(kb.grad_sum, kb.grad_cnt, kb.grad_sqnorm, kb.norm_ema, ids, grads)
+    )(*args)
     return kb._replace(grad_sum=gsum, grad_cnt=gcnt, grad_sqnorm=gsq,
                        norm_ema=ema)
+
+
+def sharded_kb_flush(kb: KBState, dist: DistContext, *, lazy_lr: float = 0.1,
+                     zmax: float = 3.0) -> KBState:
+    """Expiration path: apply every shard's pending cache locally — embar-
+    rassingly parallel, zero communication (each shard owns its rows)."""
+    specs = kb_pspecs(dist)
+
+    def body(table, version, gsum, gcnt, gsq):
+        delta = pending_delta(gsum, gcnt, gsq, lazy_lr=lazy_lr, zmax=zmax)
+        table = (table.astype(jnp.float32) + delta).astype(table.dtype)
+        version = version + (gcnt > 0).astype(jnp.int32)
+        return (table, version, jnp.zeros_like(gsum), jnp.zeros_like(gcnt),
+                jnp.zeros_like(gsq))
+
+    table, version, gsum, gcnt, gsq = shard_map(
+        body, mesh=dist.mesh,
+        in_specs=(specs.table, specs.version, specs.grad_sum, specs.grad_cnt,
+                  specs.grad_sqnorm),
+        out_specs=(specs.table, specs.version, specs.grad_sum,
+                   specs.grad_cnt, specs.grad_sqnorm),
+        check_vma=False,
+    )(kb.table, kb.version, kb.grad_sum, kb.grad_cnt, kb.grad_sqnorm)
+    return kb._replace(table=table, version=version, grad_sum=gsum,
+                       grad_cnt=gcnt, grad_sqnorm=gsq, step=kb.step + 1)
 
 
 # ---------------------------------------------------------------------------
@@ -191,15 +249,15 @@ def sharded_kb_nn_search(kb: KBState, queries, k: int, dist: DistContext,
     specs = kb_pspecs(dist)
 
     def body(table, queries):
-        off, n_loc = _owner_bounds(table.shape[0], axes)
-        kk = min(k, n_loc)
+        own = OwnerShard(table.shape[0], axes)
+        kk = min(k, own.n_local)
         if use_kernel:
             from repro.kernels.ops import nn_search_topk
             ls, li = nn_search_topk(queries, table, kk)
         else:
             scores = queries.astype(jnp.float32) @ table.T.astype(jnp.float32)
             ls, li = jax.lax.top_k(scores, kk)
-        li = li + off
+        li = li + own.offset
         # gather candidates from every shard: (B, k*n_shards)
         for a in axes:
             ls = jax.lax.all_gather(ls, a, axis=1, tiled=True)
@@ -208,7 +266,7 @@ def sharded_kb_nn_search(kb: KBState, queries, k: int, dist: DistContext,
         ids = jnp.take_along_axis(li, gi, axis=1)
         return gs, ids
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=dist.mesh,
         in_specs=(specs.table, P(None, None)),
         out_specs=(P(None, None), P(None, None)),

@@ -1,0 +1,125 @@
+"""Fused KB lookup kernel: gather + lazy-apply + cache-clear in ONE pass.
+
+The serving hot path of the Knowledge Bank (§3.2) is "apply the cached
+gradient average to the requested rows, then return them". Composed from the
+unfused jnp ops that is six HBM passes over the touched state (gather rows,
+gather caches, scatter new rows, scatter three cleared caches); composed
+from ``kb_gather`` + ``lazy_apply`` it is still two kernels and an extra
+round-trip of the row block. This kernel streams each (bank, grad_sum,
+grad_cnt, grad_sqnorm) tile HBM->VMEM exactly once and, per tile:
+
+1. builds the one-hot membership of the requested ids in the tile,
+2. computes the outlier-clipped cached-gradient average (``pending_delta``
+   semantics, same formula as ``repro.core.knowledge_bank``),
+3. writes back the updated table tile and zeroed caches for touched rows,
+4. accumulates ``onehot @ updated_tile`` on the MXU into the (B, D) output
+   (the bandwidth-optimal TPU gather — see kb_gather.py).
+
+Grid: bank tiles, sequential; the (B, D) result lives in VMEM scratch.
+Version counters are (N,) int32 metadata — the caller bumps them with a
+cheap jnp scatter (see ``repro.core.kb_engine.PallasBackend``); fusing them
+here would save nothing measurable against the (N, D) streams.
+
+ids are padded with -1 (matches no row). Duplicate ids are deterministic:
+every occurrence reads the same updated row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.compat import CompilerParams
+
+
+def _fused_kernel(ids_ref, tbl_ref, gsum_ref, gcnt_ref, gsq_ref,
+                  o_tbl_ref, o_gsum_ref, o_gcnt_ref, o_gsq_ref, o_vals_ref,
+                  acc_ref, *, n_block: int, lazy_lr: float, zmax: float):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ids = ids_ref[...]                                      # (B,)
+    base = j * n_block
+    rows = base + jax.lax.broadcasted_iota(
+        jnp.int32, (ids.shape[0], n_block), 1)
+    onehot = (ids[:, None] == rows).astype(jnp.float32)     # (B, NB)
+    touched = (jnp.sum(onehot, axis=0) > 0)[:, None]        # (NB, 1)
+
+    tbl = tbl_ref[...].astype(jnp.float32)                  # (NB, D)
+    gsum = gsum_ref[...]
+    gcnt = gcnt_ref[...]                                    # (NB, 1)
+    gsq = gsq_ref[...]
+
+    # pending_delta, verbatim semantics of the dense reference
+    cnt = jnp.maximum(gcnt, 1.0)
+    avg = gsum / cnt
+    avg_norm = jnp.sqrt(jnp.sum(avg * avg, -1, keepdims=True))
+    rms = jnp.sqrt(gsq / cnt)
+    cap = zmax * jnp.maximum(rms, 1e-12)
+    scale = jnp.minimum(1.0, cap / jnp.maximum(avg_norm, 1e-12))
+    apply = touched & (gcnt > 0)
+    new_tbl = jnp.where(apply, tbl - lazy_lr * avg * scale, tbl)
+
+    o_tbl_ref[...] = new_tbl.astype(o_tbl_ref.dtype)
+    o_gsum_ref[...] = jnp.where(touched, 0.0, gsum)
+    o_gcnt_ref[...] = jnp.where(touched, 0.0, gcnt)
+    o_gsq_ref[...] = jnp.where(touched, 0.0, gsq)
+    acc_ref[...] += jax.lax.dot_general(
+        onehot, new_tbl, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(0) - 1)
+    def _():
+        o_vals_ref[...] = acc_ref[...]
+
+
+def kb_fused_lookup_pallas(table, grad_sum, grad_cnt, grad_sqnorm, ids, *,
+                           lazy_lr: float = 0.1, zmax: float = 3.0,
+                           n_block: int = 512, interpret: bool = True):
+    """table/grad_sum: (N, D); grad_cnt/grad_sqnorm: (N,); ids: (B,) int32.
+
+    Returns (vals (B, D) f32, new_table, new_grad_sum, new_grad_cnt,
+    new_grad_sqnorm) — ``kb_lookup(..., apply_pending=True)`` semantics for
+    everything except the version counter (bumped by the caller)."""
+    N, D = table.shape
+    B = ids.shape[0]
+    nb = min(n_block, N)
+    Bp = -(-B // 8) * 8
+    Np = -(-N // nb) * nb
+    idp = jnp.pad(ids.astype(jnp.int32), (0, Bp - B), constant_values=-1)
+    pad = lambda a: jnp.pad(a, ((0, Np - N),) + ((0, 0),) * (a.ndim - 1))
+    cnt2 = grad_cnt[:, None]
+    sq2 = grad_sqnorm[:, None]
+    kern = functools.partial(_fused_kernel, n_block=nb, lazy_lr=lazy_lr,
+                             zmax=zmax)
+    out = pl.pallas_call(
+        kern,
+        grid=(Np // nb,),
+        in_specs=[pl.BlockSpec((Bp,), lambda j: (0,)),
+                  pl.BlockSpec((nb, D), lambda j: (j, 0)),
+                  pl.BlockSpec((nb, D), lambda j: (j, 0)),
+                  pl.BlockSpec((nb, 1), lambda j: (j, 0)),
+                  pl.BlockSpec((nb, 1), lambda j: (j, 0))],
+        out_specs=[pl.BlockSpec((nb, D), lambda j: (j, 0)),
+                   pl.BlockSpec((nb, D), lambda j: (j, 0)),
+                   pl.BlockSpec((nb, 1), lambda j: (j, 0)),
+                   pl.BlockSpec((nb, 1), lambda j: (j, 0)),
+                   pl.BlockSpec((Bp, D), lambda j: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((Np, D), table.dtype),
+                   jax.ShapeDtypeStruct((Np, D), jnp.float32),
+                   jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, D), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((Bp, D), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(idp, pad(table), pad(grad_sum), pad(cnt2), pad(sq2))
+    new_tbl, gsum, gcnt, gsq, vals = out
+    return (vals[:B], new_tbl[:N], gsum[:N], gcnt[:N, 0], gsq[:N, 0])

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.compat import CompilerParams
+
 
 def _gather_kernel(ids_ref, bank_ref, o_ref, acc_ref, *, n_block: int):
     nb = pl.program_id(1)
@@ -60,7 +62,7 @@ def kb_gather_pallas(table, ids, *, id_block: int = 256, n_block: int = 512,
         out_specs=pl.BlockSpec((ib, D), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Bp, D), table.dtype),
         scratch_shapes=[pltpu.VMEM((ib, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(idp, tp)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.compat import CompilerParams
+
 
 def _lazy_apply_kernel(tbl_ref, gsum_ref, gcnt_ref, gsq_ref,
                        out_tbl_ref, out_gsum_ref, out_gcnt_ref, out_gsq_ref,
@@ -66,7 +68,7 @@ def lazy_apply_pallas(table, grad_sum, grad_cnt, grad_sqnorm, *,
                    jax.ShapeDtypeStruct((Np, D), jnp.float32),
                    jax.ShapeDtypeStruct((Np, 1), jnp.float32),
                    jax.ShapeDtypeStruct((Np, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(pad(table), pad(grad_sum), pad(cnt2), pad(sq2))

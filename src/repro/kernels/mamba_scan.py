@@ -19,6 +19,8 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.compat import CompilerParams
+
 
 def _mamba_kernel(delta_ref, bm_ref, cm_ref, x_ref, a_ref, o_ref, h_ref, *,
                   seq_block: int):
@@ -69,7 +71,7 @@ def mamba_scan_pallas(delta, bm, cm, x, A, *, di_block: int = 512,
         out_specs=pl.BlockSpec((1, sb, db), lambda b, d, s: (b, s, d)),
         out_shape=jax.ShapeDtypeStruct((B, S, di), jnp.float32),
         scratch_shapes=[pltpu.VMEM((db, ds), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(delta, bm, cm, x, A)

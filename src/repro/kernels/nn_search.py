@@ -21,6 +21,8 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.compat import CompilerParams
+
 NEG = -1e30
 
 
@@ -98,7 +100,7 @@ def nn_search_pallas(queries, bank, k: int, *, q_block: int = 128,
                    jax.ShapeDtypeStruct((Bp, k), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((qb, k), jnp.float32),
                         pltpu.VMEM((qb, k), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qp, bp)

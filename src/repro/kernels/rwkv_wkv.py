@@ -17,6 +17,8 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.compat import CompilerParams
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
                 seq_block: int):
@@ -63,7 +65,7 @@ def rwkv_wkv_pallas(r, k, v, w, u, *, seq_block: int = 512,
         out_specs=pl.BlockSpec((1, sb, 1, d), lambda b, h, s: (b, s, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, S, H, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u)

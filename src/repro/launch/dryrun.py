@@ -177,7 +177,8 @@ def model_flops_analytic(cfg: ModelConfig, shape: InputShape) -> float:
 def analyze(lowered, compiled, cfg: ModelConfig, shape: InputShape,
             dist: DistContext) -> Dict:
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis
+    ca = cost_analysis(compiled)
     cost = analyze_hlo(compiled.as_text(), dist.num_devices)
     mf = model_flops_analytic(cfg, shape) / dist.num_devices
     rl = roofline_from_cost(cost, model_flops_per_device=mf)

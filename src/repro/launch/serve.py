@@ -1,15 +1,24 @@
-"""Serving launcher: batched prefill + decode on real devices.
+"""Serving launcher: batched LM prefill + decode, or the Knowledge-Bank
+serving mode.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \
       --batch 4 --prompt-len 32 --gen 16
 
-Runs a reduced config end-to-end: prefill the prompt batch, then greedy
-decode. Full-size serve programs (decode_32k / long_500k) are exercised via
-the dry-run lowering of the same ``decode_step``.
+  PYTHONPATH=src python -m repro.launch.serve --kb --kb-backend pallas \
+      --clients 8
+
+LM mode runs a reduced config end-to-end: prefill the prompt batch, then
+greedy decode. Full-size serve programs (decode_32k / long_500k) are
+exercised via the dry-run lowering of the same ``decode_step``.
+
+KB mode stands up the request-coalescing KnowledgeBankServer on the chosen
+engine backend and drives it with concurrent lookup/lazy_grad clients —
+the Figure-1 serving topology without the trainer attached.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import jax
@@ -21,6 +30,44 @@ from repro.models import build_model
 from repro.sharding.partition import DistContext
 
 
+def serve_kb(args) -> None:
+    """Concurrent-client KB serving demo on the coalescing server."""
+    from repro.core import KnowledgeBankServer
+    rng = np.random.default_rng(args.seed)
+    server = KnowledgeBankServer(args.kb_entries, args.kb_dim,
+                                 backend=args.kb_backend,
+                                 coalesce=not args.no_coalesce)
+    server.update(np.arange(args.kb_entries),
+                  rng.normal(size=(args.kb_entries, args.kb_dim))
+                  .astype(np.float32))
+    server.warmup(args.batch * args.clients)
+
+    def client(t: int, n_calls: int):
+        crng = np.random.default_rng(args.seed + 1 + t)
+        for _ in range(n_calls):
+            ids = crng.integers(0, args.kb_entries, (args.batch,))
+            vals = server.lookup(ids)
+            server.lazy_grad(ids, 0.01 * vals)
+
+    threads = [threading.Thread(target=client, args=(t, args.gen))
+               for t in range(args.clients)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    dt = time.perf_counter() - t0
+    server.close()
+    calls = args.clients * args.gen * 2
+    print(f"kb-serve backend={args.kb_backend} "
+          f"coalesce={not args.no_coalesce} clients={args.clients}: "
+          f"{calls / dt:.0f} req/s "
+          f"({dt / calls * 1e6:.0f} us/req, "
+          f"coalescing x{server.coalescing_factor:.1f}, "
+          f"{server.metrics['dispatches']} device dispatches for "
+          f"{server.metrics['requests']} requests)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="yi-6b")
@@ -28,7 +75,20 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kb", action="store_true",
+                    help="serve the knowledge bank instead of the LM")
+    ap.add_argument("--kb-backend", choices=["dense", "pallas"],
+                    default="dense")
+    ap.add_argument("--kb-entries", type=int, default=4096)
+    ap.add_argument("--kb-dim", type=int, default=64)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--no-coalesce", action="store_true",
+                    help="per-call locked baseline (benchmark ablation)")
     args = ap.parse_args(argv)
+
+    if args.kb:
+        serve_kb(args)
+        return
 
     cfg = get_config(args.arch).reduced()
     model = build_model(cfg)

@@ -1,0 +1,84 @@
+"""Minimal stand-in for ``hypothesis`` so property tests run (not skip) when
+the real package is absent (this container has no network; see
+requirements-dev.txt for the pinned real dependency).
+
+Implements exactly the surface this suite uses: ``given``, ``settings`` and
+the ``integers`` / ``floats`` / ``lists`` strategies. Examples are drawn
+from a fixed-seed RNG, so runs are deterministic — you lose hypothesis'
+shrinking and example database, not coverage. Installed into ``sys.modules``
+by conftest.py only when ``import hypothesis`` fails.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+# keep CI time bounded: the shim draws at most this many examples per test
+_MAX_EXAMPLES_CAP = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def settings(max_examples=10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_shim_max_examples", 10),
+                    _MAX_EXAMPLES_CAP)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                fn(*args, *[s.draw(rng) for s in strategies], **kwargs)
+        # @settings may sit above @given: keep its attribute reachable
+        wrapper._shim_max_examples = getattr(fn, "_shim_max_examples", 10)
+        # hide the strategy-bound (trailing) params from pytest, which would
+        # otherwise look them up as fixtures; drop __wrapped__ for the same
+        # reason (pytest introspects through it)
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())[:-len(strategies)]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def install():
+    """Register the shim as ``hypothesis`` in sys.modules."""
+    mod = types.ModuleType("hypothesis")
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists"):
+        setattr(strategies, name, globals()[name])
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.__is_shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -5,3 +5,12 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# hypothesis is optional (requirements-dev.txt): fall back to the
+# deterministic mini-shim so the property tests still run offline
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_shim
+    _hypothesis_shim.install()

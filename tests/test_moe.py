@@ -28,7 +28,10 @@ def test_route_normalized_gates():
     # top-k experts are distinct per token
     e = np.asarray(experts)
     assert all(len(set(row)) == K for row in e)
-    assert float(aux) >= 1.0 - 1e-5  # >= 1 by Cauchy-Schwarz, = 1 if uniform
+    # ~1 when balanced (exactly 1 only if f_e == p_e; with top-k counts and
+    # T=16 the per-sample value can dip slightly below — same 0.99 bound as
+    # test_trainer_modes uses for m["aux"])
+    assert float(aux) >= 0.99
 
 
 def test_capacity_path_matches_ref_with_ample_capacity():

@@ -74,8 +74,11 @@ _SUBPROCESS_SCRIPT = textwrap.dedent("""
                             sharded_kb_lookup, sharded_kb_nn_search,
                             sharded_kb_update)
     from repro.sharding.partition import DistContext
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    else:
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     dist = DistContext(mesh=mesh, pod_axis="pod")
     N, D = 64, 16
     kb = kb_create(N, D, key=jax.random.key(0))
