@@ -1,9 +1,22 @@
-"""Paper §3.2: nearest-neighbor lookup over the bank, and the constant-
-latency-via-sharding property: per-shard work is N/shards, and the
-hierarchical merge is O(k * shards). Measures the Pallas kernel (interpret
-mode — logic timing on CPU, not TPU perf) and the jnp reference."""
+"""Paper §3.2: nearest-neighbor lookup over the bank.
+
+Three claims measured, on clustered (mixture-of-Gaussians) banks — the
+distribution the IVF index is built for:
+
+- exact paths: the jnp reference AND the blocked Pallas kernel (interpret
+  mode — logic timing on CPU, not TPU perf);
+- IVF vs exact (ISSUE 2 acceptance): the two-stage clustered search must
+  beat the exact path >= 5x at N=65536 (B=16, k=8) while keeping
+  recall@10 >= 0.95 — measured and reported in the ``derived`` column;
+- constant-latency-via-sharding: per-shard work is N/shards, hierarchical
+  merge is O(k * shards).
+
+Emits ``BENCH_nn_search.json`` (cwd) with every row plus the raw
+speedup/recall numbers so CI and later sessions can diff them.
+"""
 from __future__ import annotations
 
+import json
 import time
 from typing import Dict, List
 
@@ -11,38 +24,128 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.ann_index import build_ivf_index, clustered_bank
 from repro.kernels import ops, ref
+from repro.kernels.nn_search_ivf import ivf_search_jnp
 
 
-def _t(fn, *args, reps=3):
+def _t(fn, *args, reps=5):
+    """Min-of-reps per-call latency (min is the noise-robust estimator on a
+    shared/loaded host; means here swing 2x run-to-run)."""
     out = fn(*args)
     jax.block_until_ready(out[0])
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         out = fn(*args)
-    jax.block_until_ready(out[0])
-    return (time.perf_counter() - t0) / reps
+        jax.block_until_ready(out[0])
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _t_pair(fn_a, args_a, fn_b, args_b, reps=12):
+    """Interleaved min-of-reps for A-vs-B claims: a load spike on a shared
+    host then penalizes both sides instead of whichever happened to be on
+    the clock (back-to-back blocks here have produced 1.2x-12x swings in
+    the same speedup)."""
+    for fn, args in ((fn_a, args_a), (fn_b, args_b)):
+        jax.block_until_ready(fn(*args)[0])
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args_a)[0])
+        t1 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args_b)[0])
+        best_a = min(best_a, t1 - t0)
+        best_b = min(best_b, time.perf_counter() - t1)
+    return best_a, best_b
+
+
+def _recall(ids_approx, ids_exact):
+    B, k = ids_exact.shape
+    hits = sum(len(set(np.asarray(ids_approx)[b]) &
+                   set(np.asarray(ids_exact)[b])) for b in range(B))
+    return hits / (B * k)
 
 
 def run(quick: bool = False) -> List[Dict]:
     D, B, k = 64, 16, 8
     sizes = [4096, 16384] if quick else [4096, 16384, 65536]
-    rows = []
-    q = jax.random.normal(jax.random.key(0), (B, D))
+    rows: List[Dict] = []
+    raw = {"config": {"D": D, "B": B, "k": k, "recall_k": 10},
+           "sizes": {}}
     for N in sizes:
-        bank = jax.random.normal(jax.random.key(1), (N, D))
-        t_ref = _t(jax.jit(lambda q, b: ref.nn_search_ref(q, b, k)), q, bank)
+        nlist = max(16, int(N ** 0.5))          # ~sqrt(N) partitions
+        # nprobe tuned per size: clustered banks keep recall@10 = 1.0 down
+        # to nprobe=2 (a query's neighbors live in its own cluster); the
+        # measured recall in the derived column keeps this honest
+        nprobe = 2 if N >= 65536 else 4
+        bank = jnp.asarray(clustered_bank(N, D, nlist, noise=0.2, seed=1))
+        # queries: perturbed bank rows (neighbor-discovery workload)
+        qi = jax.random.randint(jax.random.key(2), (B,), 0, N)
+        q = bank[qi] + 0.1 * jax.random.normal(jax.random.key(3), (B, D))
+
+        # -- IVF index (built off the serving path) ------------------------
+        t0 = time.perf_counter()
+        idx = build_ivf_index(np.asarray(bank), nlist=nlist, iters=6)
+        t_build = time.perf_counter() - t0
+
+        # -- exact vs IVF, interleaved (the headline claim) ----------------
+        exact_fn = jax.jit(lambda q, b: ref.nn_search_ref(q, b, k))
+        ivf_args = (bank, idx.centroids, idx.packed_vecs, idx.packed_ids)
+        jnp_fn = jax.jit(
+            lambda t, c, pv, pi, q: ivf_search_jnp(t, c, pv, pi, q, k,
+                                                   nprobe))
+        t_ref, t_ivf = _t_pair(exact_fn, (q, bank), jnp_fn, (*ivf_args, q))
         rows.append({"name": f"nn_search/ref/N={N}",
                      "us_per_call": t_ref * 1e6,
                      "derived": f"qps={B/t_ref:.0f}"})
+        t_pal = _t(lambda q, b: ops.nn_search_topk(q, b, k), q, bank)
+        rows.append({"name": f"nn_search/pallas/N={N}",
+                     "us_per_call": t_pal * 1e6,
+                     "derived": f"interpret_vs_ref_x{t_pal/t_ref:.1f}"})
+        rows.append({"name": f"nn_search/ivf_build/N={N}",
+                     "us_per_call": t_build * 1e6,
+                     "derived": f"nlist={idx.nlist},cap={idx.bucket_cap}"})
+        # recall@10 against brute force (k=10 searches on both sides)
+        _, i_ex10 = jax.jit(lambda q, b: ref.nn_search_ref(q, b, 10))(q, bank)
+        _, i_iv10 = jax.jit(
+            lambda t, c, pv, pi, q: ivf_search_jnp(t, c, pv, pi, q, 10,
+                                                   nprobe))(*ivf_args, q)
+        rec = _recall(i_iv10, np.asarray(i_ex10))
+        speedup = t_ref / t_ivf
+        rows.append({"name": f"nn_search/ivf/N={N}",
+                     "us_per_call": t_ivf * 1e6,
+                     "derived": f"recall@10={rec:.3f},"
+                                f"vs_exact_x{speedup:.1f},nprobe={nprobe}"})
+        t_ivf_pal = _t(lambda t, c, pv, pi, q: ops.nn_search_ivf(
+            t, c, pv, pi, q, k, nprobe), *ivf_args, q)
+        rows.append({"name": f"nn_search/ivf_pallas/N={N}",
+                     "us_per_call": t_ivf_pal * 1e6,
+                     "derived": f"interpret_vs_pallas_exact_"
+                                f"x{t_ivf_pal/t_pal:.2f}"})
+        raw["sizes"][str(N)] = {
+            "nlist": idx.nlist, "nprobe": nprobe,
+            "bucket_cap": idx.bucket_cap,
+            "us_exact_ref": t_ref * 1e6, "us_exact_pallas": t_pal * 1e6,
+            "us_ivf_ref": t_ivf * 1e6, "us_ivf_pallas": t_ivf_pal * 1e6,
+            "us_build": t_build * 1e6,
+            "recall_at_10": rec, "ivf_speedup_vs_exact": speedup,
+        }
+
     # sharding claim: latency of one shard of N/16 + merge of 16*k candidates
     N = sizes[-1]
-    bank = jax.random.normal(jax.random.key(1), (N, D))
+    bank = jnp.asarray(clustered_bank(N, D, 64, noise=0.2, seed=1))
+    q = jax.random.normal(jax.random.key(0), (B, D))
     shard = bank[:N // 16]
     t_shard = _t(jax.jit(lambda q, b: ref.nn_search_ref(q, b, k)), q, shard)
     cand_s = jax.random.normal(jax.random.key(2), (B, 16 * k))
     t_merge = _t(jax.jit(lambda s: jax.lax.top_k(s, k)), cand_s)
+    t_mono = _t(jax.jit(lambda q, b: ref.nn_search_ref(q, b, k)), q, bank)
     rows.append({"name": f"nn_search/sharded16/N={N}",
                  "us_per_call": (t_shard + t_merge) * 1e6,
-                 "derived": f"vs_monolithic_x{(t_shard+t_merge)/_t(jax.jit(lambda q, b: ref.nn_search_ref(q, b, k)), q, bank):.2f}"})
+                 "derived": f"vs_monolithic_x{(t_shard+t_merge)/t_mono:.2f}"})
+
+    with open("BENCH_nn_search.json", "w") as f:
+        json.dump({"rows": rows, **raw}, f, indent=2)
     return rows

@@ -11,6 +11,8 @@ from repro.core.sharded_kb import (kb_axes, kb_pspecs, sharded_kb_flush,
 from repro.core.kb_engine import (DenseBackend, KBBackend, KBEngine,
                                   PallasBackend, ShardedBackend,
                                   make_backend)
+from repro.core.ann_index import (IVFIndex, IVFRefresher, build_ivf_index,
+                                  kmeans)
 from repro.core.trainer import (make_async_train_fns, make_carls_train_step,
                                 make_inline_baseline_step, model_loss)
 from repro.core.knowledge_maker import (graph_agreement_labels,
@@ -28,6 +30,7 @@ __all__ = [
     "sharded_kb_lookup", "sharded_kb_nn_search", "sharded_kb_update",
     "DenseBackend", "KBBackend", "KBEngine", "PallasBackend",
     "ShardedBackend", "make_backend",
+    "IVFIndex", "IVFRefresher", "build_ivf_index", "kmeans",
     "make_async_train_fns", "make_carls_train_step",
     "make_inline_baseline_step", "model_loss",
     "graph_agreement_labels", "make_embed_fn", "make_embedding_refresh",

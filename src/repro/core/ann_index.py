@@ -1,0 +1,207 @@
+"""Asynchronously-clustered IVF index for the Knowledge Bank (§3.1, §3.2).
+
+The paper's headline workload — neighbor discovery for graph learning —
+issues ``nn_search`` against the full bank, O(N*D) per query in every
+backend. This module maintains an inverted-file (IVF) approximation OFF the
+serving path, exactly the knowledge-maker role CARLS defines: a background
+``IVFRefresher`` thread snapshots the bank, k-means-partitions it into
+``nlist`` buckets (jit-compiled Lloyd steps), and atomically swaps the new
+index into the engine. Serving never blocks on clustering; queries prune to
+``nprobe`` buckets via the two-stage kernel in
+``repro.kernels.nn_search_ivf``, turning the hot path into
+O((C + nprobe*N/C) * D).
+
+Index layout (what makes the stage-2 kernel gather-free):
+
+- ``centroids``   : (C, D) f32 — the coarse quantizer.
+- ``packed_vecs`` : (C*cap, D) f32 — a snapshot of the bank rows grouped by
+  cluster; every bucket padded to the common pow2 capacity ``cap`` so each
+  bucket is a block-aligned slice the kernel can DMA directly.
+- ``packed_ids``  : (C*cap,) int32 — the bank row id of each packed slot,
+  -1 in padding slots.
+
+Staleness model: rows never appear or vanish (the bank is a fixed (N, D)
+table), so writes after a build only leave *stale vectors* in the snapshot.
+The engine counts written rows (``total_write_rows``); the index remembers
+the count it was built at; their difference is the measurable staleness that
+(a) triggers the refresher's rebuild and (b) gates the exact fallback.
+Within the shortlist the winners are re-scored against the live table, so
+staleness costs recall only — never score accuracy (see the kernel module).
+
+Trade-off knobs (documented in ROADMAP.md): ``nlist`` (more buckets = less
+work per probe, weaker partitions), ``nprobe`` (recall vs latency),
+``rebuild_rows`` / ``stale_rows`` (refresh rate vs clustering cost).
+"""
+from __future__ import annotations
+
+import functools
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def clustered_bank(n: int, dim: int, n_centers: int, *, noise: float = 0.15,
+                   seed: int = 0) -> np.ndarray:
+    """Mixture-of-Gaussians bank — the workload IVF targets (embedding
+    banks cluster; uniform noise is the adversarial case, not the serving
+    case). Shared by the nn_search benchmark and the test suites so the
+    workload definition lives in one place."""
+    kc, ka, kn = jax.random.split(jax.random.key(seed), 3)
+    centers = 2.0 * jax.random.normal(kc, (n_centers, dim))
+    assign = jax.random.randint(ka, (n,), 0, n_centers)
+    return np.asarray(centers[assign]
+                      + noise * jax.random.normal(kn, (n, dim)), np.float32)
+
+
+class IVFIndex:
+    """Immutable clustered snapshot of a bank table (not a pytree — the
+    engine passes the arrays to its jitted search fn individually)."""
+
+    __slots__ = ("centroids", "packed_vecs", "packed_ids", "nlist",
+                 "bucket_cap", "n_rows")
+
+    def __init__(self, centroids, packed_vecs, packed_ids, *, nlist: int,
+                 bucket_cap: int, n_rows: int):
+        self.centroids = centroids
+        self.packed_vecs = packed_vecs
+        self.packed_ids = packed_ids
+        self.nlist = nlist
+        self.bucket_cap = bucket_cap
+        self.n_rows = n_rows
+
+
+@jax.jit
+def _lloyd_step(table, centroids):
+    """One k-means step: L2 assignment (argmax of x.c - |c|^2/2 — the
+    x-independent expansion of argmin |x-c|^2), then mean update. Empty
+    clusters are reseeded with the worst-fit rows — without this, centroids
+    that collapse onto one true cluster stay dead, one bucket swallows a
+    large fraction of the bank, and the stage-2 shortlist (nprobe * cap)
+    balloons past the brute-force cost the index exists to avoid."""
+    cn = jnp.sum(centroids * centroids, axis=1)
+    logits = table @ centroids.T - 0.5 * cn[None, :]
+    assign = jnp.argmax(logits, axis=1)
+    best = jnp.max(logits, axis=1)
+    sums = jnp.zeros_like(centroids).at[assign].add(table)
+    cnts = jnp.zeros((centroids.shape[0],), jnp.float32).at[assign].add(1.0)
+    # badness = 0.5*|x - c|^2 for the assigned centroid; the C worst rows
+    # become the reseed pool (distinct rows, far from every live centroid)
+    badness = 0.5 * jnp.sum(table * table, axis=1) - best
+    _, worst = jax.lax.top_k(badness, centroids.shape[0])
+    new = jnp.where((cnts > 0)[:, None],
+                    sums / jnp.maximum(cnts, 1.0)[:, None], table[worst])
+    return new, assign
+
+
+@functools.partial(jax.jit, static_argnames=("nlist",))
+def _maxmin_init(table, nlist: int):
+    """Greedy farthest-point seeding: every well-separated cluster gets
+    exactly one seed (a random/strided init double-seeds some clusters and
+    leaves others merged — 4x-skewed buckets). Deterministic."""
+    sq = jnp.sum(table * table, axis=1)
+
+    def pick(i, state):
+        cents, mind = state
+        c = table[jnp.argmax(mind)]
+        cents = cents.at[i].set(c)
+        d = sq - 2.0 * (table @ c) + jnp.sum(c * c)
+        return cents, jnp.minimum(mind, d)
+
+    c0 = table[0]
+    mind = sq - 2.0 * (table @ c0) + jnp.sum(c0 * c0)
+    cents = jnp.zeros((nlist, table.shape[1]), jnp.float32).at[0].set(c0)
+    cents, _ = jax.lax.fori_loop(1, nlist, pick, (cents, mind))
+    return cents
+
+
+def kmeans(table, nlist: int, *, iters: int = 8):
+    """Lloyd's algorithm, farthest-point init.
+    table: (N, D) -> (centroids (C, D) f32, assign (N,) int32)."""
+    table = jnp.asarray(table, jnp.float32)
+    N = table.shape[0]
+    C = max(1, min(nlist, N))
+    centroids = _maxmin_init(table, C)
+    for _ in range(max(1, iters)):
+        centroids, _ = _lloyd_step(table, centroids)
+    # final assignment against the RETURNED centroids (the loop's assign is
+    # one half-step behind — a centroid reseeded on the last step would own
+    # zero rows, and stage 1 probes against these centroids)
+    _, assign = _lloyd_step(table, centroids)
+    return centroids, assign.astype(jnp.int32)
+
+
+def build_ivf_index(table, *, nlist: int = 64, iters: int = 8) -> IVFIndex:
+    """Cluster a table snapshot and pack it into the block-aligned IVF
+    layout. Runs on the caller's thread — the refresher's, in serving."""
+    tbl = np.asarray(table, np.float32)
+    N, D = tbl.shape
+    centroids, assign = kmeans(tbl, nlist, iters=iters)
+    C = centroids.shape[0]
+    assign = np.asarray(assign)
+    counts = np.bincount(assign, minlength=C)
+    # common capacity >= the largest bucket (skewed data costs padding
+    # memory, never correctness): pow2 for tiny buckets, else the next
+    # multiple of 128 — the stage-2 kernel chunks buckets in 128-row tiles,
+    # and pow2 rounding above 128 would waste up to 2x shortlist work
+    biggest = max(int(counts.max()), 8)
+    if biggest <= 128:
+        cap = 1 << (biggest - 1).bit_length()
+    else:
+        cap = -(-biggest // 128) * 128
+    order = np.argsort(assign, kind="stable")
+    sa = assign[order]
+    start = np.searchsorted(sa, np.arange(C))
+    slots = sa * cap + (np.arange(N) - start[sa])
+    packed_ids = np.full((C * cap,), -1, np.int32)
+    packed_ids[slots] = order.astype(np.int32)
+    packed_vecs = np.zeros((C * cap, D), np.float32)
+    packed_vecs[slots] = tbl[order]
+    return IVFIndex(jnp.asarray(centroids), jnp.asarray(packed_vecs),
+                    jnp.asarray(packed_ids), nlist=C, bucket_cap=cap,
+                    n_rows=N)
+
+
+class IVFRefresher(threading.Thread):
+    """Background index maker: the knowledge-maker pattern applied to the
+    ANN index. Polls the engine's write counter and rebuilds the index
+    whenever ``rebuild_rows`` rows have been written since the last build
+    (or no index exists yet). The build works on a snapshot and the swap is
+    a single atomic attribute store, so serving threads never wait on it.
+
+    Reads of ``engine.state`` / writes of ``engine.ann_index`` are safe
+    against the single-threaded engine owner (the server's dispatcher):
+    states are immutable pytrees and both fields are plain attribute
+    stores."""
+
+    def __init__(self, engine, *, rebuild_rows: Optional[int] = None,
+                 iters: int = 8, min_period_s: float = 0.01,
+                 name: str = "ann-refresher"):
+        super().__init__(daemon=True, name=name)
+        self.engine = engine
+        self.rebuild_rows = (max(1, engine.num_entries // 4)
+                             if rebuild_rows is None else rebuild_rows)
+        self.iters = iters
+        self.min_period_s = min_period_s
+        self.stop_event = threading.Event()
+        self.rebuilds = 0
+        self.last_error: Optional[BaseException] = None
+
+    def run(self):
+        while not self.stop_event.is_set():
+            if (self.engine.ann_index is None
+                    or self.engine.ann_staleness_rows >= self.rebuild_rows):
+                try:
+                    self.engine.rebuild_ann_index(iters=self.iters)
+                    self.rebuilds += 1
+                    self.last_error = None
+                except Exception as e:   # keep the maker alive; a dead
+                    self.last_error = e  # refresher would silently freeze
+                                         # the index at its last snapshot
+            self.stop_event.wait(self.min_period_s)
+
+    def stop(self, timeout_s: float = 30.0):
+        self.stop_event.set()
+        self.join(timeout=timeout_s)

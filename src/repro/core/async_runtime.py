@@ -65,13 +65,13 @@ class _Request:
     ``meta`` carries the op's step tag (lookup: trainer_step; update:
     src_step) so staleness accounting happens in execution order."""
 
-    __slots__ = ("op", "ids", "payload", "k", "shape", "meta", "event",
-                 "result", "error")
+    __slots__ = ("op", "ids", "payload", "k", "mode", "shape", "meta",
+                 "event", "result", "error")
 
-    def __init__(self, op, ids=None, payload=None, k=None, shape=None,
-                 meta=0):
+    def __init__(self, op, ids=None, payload=None, k=None, mode=None,
+                 shape=None, meta=0):
         self.op, self.ids, self.payload, self.k = op, ids, payload, k
-        self.shape, self.meta = shape, meta
+        self.mode, self.shape, self.meta = mode, shape, meta
         self.event = threading.Event()
         self.result = None
         self.error = None
@@ -89,7 +89,7 @@ def _mergeable(prev: _Request, r: _Request) -> bool:
         return False
     if r.op in ("lookup", "update", "lazy_grad"):
         return True
-    return r.op == "nn" and prev.k == r.k
+    return r.op == "nn" and prev.k == r.k and prev.mode == r.mode
 
 
 class KnowledgeBankServer:
@@ -105,12 +105,19 @@ class KnowledgeBankServer:
                  dist: Optional[DistContext] = None,
                  lazy_lr: float = 0.1, zmax: float = 3.0,
                  lazy_update: bool = True, coalesce: bool = True,
-                 coalesce_window_s: float = 0.0, max_coalesce: int = 256):
+                 coalesce_window_s: float = 0.0, max_coalesce: int = 256,
+                 search_mode: str = "exact", ann_nlist: int = 64,
+                 ann_nprobe: int = 8,
+                 ann_stale_rows: Optional[int] = None):
         if engine is None:
             engine = KBEngine(num_entries, dim, backend=backend, dist=dist,
                               lazy_lr=lazy_lr, zmax=zmax,
-                              lazy_update=lazy_update)
+                              lazy_update=lazy_update,
+                              search_mode=search_mode, ann_nlist=ann_nlist,
+                              ann_nprobe=ann_nprobe,
+                              ann_stale_rows=ann_stale_rows)
         self.engine = engine
+        self._ann_refresher = None
         self.coalesce = coalesce
         self.coalesce_window_s = coalesce_window_s
         self.max_coalesce = max_coalesce
@@ -153,8 +160,11 @@ class KnowledgeBankServer:
     def flush(self) -> None:
         self._submit(_Request("flush"))
 
-    def nn_search(self, queries, k: int):
-        return self._submit(_Request("nn", payload=np.asarray(queries), k=k))
+    def nn_search(self, queries, k: int, *, mode: Optional[str] = None):
+        """``mode`` overrides the engine's ``search_mode`` per request
+        (exact | ivf); only same-mode same-k searches coalesce."""
+        return self._submit(_Request("nn", payload=np.asarray(queries), k=k,
+                                     mode=mode))
 
     def table_snapshot(self) -> np.ndarray:
         self._submit(_Request("barrier"))       # drain queued writes first
@@ -176,10 +186,24 @@ class KnowledgeBankServer:
         """Mean requests per device dispatch (1.0 = no coalescing won)."""
         return self.metrics["requests"] / max(self.metrics["dispatches"], 1)
 
+    def start_ann_refresher(self, **kwargs):
+        """Register the IVF index maker (see repro.core.ann_index): a
+        daemon thread that rebuilds the engine's ANN index off the serving
+        path. Stopped by ``close``. Returns the thread (its ``rebuilds``
+        counter is the observability hook)."""
+        from repro.core.ann_index import IVFRefresher
+        if self._ann_refresher is None:
+            self._ann_refresher = IVFRefresher(self.engine, **kwargs)
+            self._ann_refresher.start()
+        return self._ann_refresher
+
     def close(self, timeout_s: float = 60.0) -> None:
         """Stop the dispatcher after draining; later calls run direct.
         Raises if the drain does not finish within ``timeout_s`` — metrics
         and snapshots are only consistent once the dispatcher has exited."""
+        if self._ann_refresher is not None:
+            self._ann_refresher.stop()
+            self._ann_refresher = None
         if self._dispatcher is None:
             return
         with self._cond:
@@ -287,7 +311,8 @@ class KnowledgeBankServer:
             elif op == "nn":
                 sizes = [r.payload.shape[0] for r in run]
                 scores, ids = self.engine.nn_search(
-                    np.concatenate([r.payload for r in run]), run[0].k)
+                    np.concatenate([r.payload for r in run]), run[0].k,
+                    mode=run[0].mode)
                 off = 0
                 for r, n in zip(run, sizes):
                     r.result = (scores[off:off + n], ids[off:off + n])

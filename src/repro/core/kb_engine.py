@@ -29,8 +29,17 @@ construction: lookups/updates pad with a duplicated real entry (batched ops
 are deterministic under duplicates, version bumps count touched rows once),
 lazy_grads pad with masked-out entries.
 
+``nn_search`` additionally has an engine-level ``search_mode``: ``"exact"``
+(brute force over the bank — reference or blocked Pallas kernel) or
+``"ivf"`` (two-stage search against the asynchronously-clustered index from
+``repro.core.ann_index`` / ``repro.kernels.nn_search_ivf``), overridable
+per request and falling back to exact whenever the index is absent, past
+its staleness budget, or the backend has no IVF path (sharded).
+
 The engine itself is NOT thread-safe — concurrency (locking or request
-coalescing) is the server layer's job.
+coalescing) is the server layer's job. The one sanctioned exception: the
+``IVFRefresher`` thread reads ``state``/``total_write_rows`` and swaps
+``ann_index`` — all atomic attribute operations on immutable values.
 """
 from __future__ import annotations
 
@@ -118,11 +127,21 @@ class ShardedBackend:
                                           zmax=zmax)
 
     def nn_search(self, state, queries, k, *, exclude_ids=None):
-        if exclude_ids is not None:
-            raise NotImplementedError(
-                "exclude_ids is a dense-path feature (graph builder)")
-        return self._skb.sharded_kb_nn_search(state, queries, k, self.dist,
+        if exclude_ids is None:
+            return self._skb.sharded_kb_nn_search(
+                state, queries, k, self.dist, use_kernel=self.use_nn_kernel)
+        # over-fetch k + E candidates, then mask excluded ids post-merge:
+        # at most E of the k+E can be excluded per query, so the surviving
+        # top-k equals the dense pre-mask semantics
+        E = exclude_ids.shape[1]
+        kk = min(k + E, state.table.shape[0])
+        s, i = self._skb.sharded_kb_nn_search(state, queries, kk, self.dist,
                                               use_kernel=self.use_nn_kernel)
+        excl = ((i[:, :, None] == exclude_ids[:, None, :]) &
+                (exclude_ids >= 0)[:, None, :]).any(-1)
+        s = jnp.where(excl, -jnp.inf, s)
+        s2, sel = jax.lax.top_k(s, k)
+        return s2, jnp.take_along_axis(i, sel, axis=1)
 
 
 class PallasBackend:
@@ -214,12 +233,29 @@ class KBEngine:
                  lazy_lr: float = 0.1, zmax: float = 3.0,
                  entry_zmax: Optional[float] = None,
                  lazy_update: bool = True, interpret: bool = True,
+                 search_mode: str = "exact", ann_nlist: int = 64,
+                 ann_nprobe: int = 8, ann_stale_rows: Optional[int] = None,
                  dtype=jnp.float32, key: Optional[jax.Array] = None):
         self.backend: KBBackend = (backend if not isinstance(backend, str)
                                    else make_backend(backend, dist=dist,
                                                      interpret=interpret))
         self.num_entries, self.dim = num_entries, dim
         self.lazy_lr, self.zmax, self.lazy_update = lazy_lr, zmax, lazy_update
+        if search_mode not in ("exact", "ivf"):
+            raise ValueError(f"unknown search_mode {search_mode!r} "
+                             "(want exact | ivf)")
+        # -- ANN (IVF) serving state; see repro.core.ann_index ------------
+        self.search_mode = search_mode
+        self.ann_nlist, self.ann_nprobe = ann_nlist, ann_nprobe
+        # exact fallback once this many rows were written since the build;
+        # default: the whole bank rewritten
+        self.ann_stale_rows = (num_entries if ann_stale_rows is None
+                               else ann_stale_rows)
+        self.ann_index = None               # swapped in by the refresher
+        self.total_write_rows = 0           # monotonic; written-row counter
+        self._ann_built_at = 0
+        self.search_stats = {"exact": 0, "ivf": 0}
+        self._ivf_fns = {}
         # entry-side (per-contribution EMA) clip; defaults to the apply-side
         # zmax, matching the per-call server's single knob
         entry_zmax = zmax if entry_zmax is None else entry_zmax
@@ -266,12 +302,14 @@ class KBEngine:
         _, keep = np.unique(ids[::-1], return_index=True)
         keep = ids.size - 1 - keep          # last occurrence of each id
         ids, values = ids[keep], values[keep]
-        pad = _bucket(ids.size) - ids.size
+        n = ids.size                        # distinct rows, pre-padding
+        pad = _bucket(n) - n
         ids = np.concatenate([ids, np.full(pad, ids[-1], np.int32)])
         values = np.concatenate([values, np.repeat(values[-1:], pad, 0)])
         self.state = self._update_fn(self.state, jnp.asarray(ids),
                                      jnp.asarray(values))
         self.dispatches += 1
+        self.total_write_rows += n
 
     def lazy_grad(self, ids, grads) -> None:
         """Cache gradients (or apply immediately when lazy_update=False)."""
@@ -290,25 +328,96 @@ class KBEngine:
         self.state = fn(self.state, jnp.asarray(ids_p), jnp.asarray(grads_p),
                         jnp.asarray(mask))
         self.dispatches += 1
+        # row mutation volume for ANN staleness: a cached gradient WILL be
+        # applied (next lookup or flush), immediate mode scatters now —
+        # either way these rows' vectors diverge from the index snapshot.
+        # Counting here (not at lookup) keeps pure reads free: a read-only
+        # workload never triggers rebuilds or the stale fallback.
+        self.total_write_rows += n
 
     def flush(self) -> None:
-        """Expiration path: apply every pending cached gradient now."""
+        """Expiration path: apply every pending cached gradient now.
+        (Flushed rows were already counted toward ``total_write_rows`` when
+        their gradients were cached.)"""
         self.state = self._flush_fn(self.state)
         self.dispatches += 1
 
-    def nn_search(self, queries, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    def nn_search(self, queries, k: int, *, mode: Optional[str] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k MIPS over the bank. ``mode`` overrides the engine-level
+        ``search_mode`` per request; ``"ivf"`` silently falls back to the
+        exact path when the index is absent, too stale, or the backend has
+        no IVF stage-2 (sharded)."""
         queries = np.asarray(queries, np.float32)
         B = queries.shape[0]
         pad = _bucket(B) - B
         q = np.concatenate([queries, np.zeros((pad, queries.shape[1]),
                                               np.float32)])
-        if k not in self._nn_fns:
-            bk = self.backend
-            self._nn_fns[k] = jax.jit(
-                lambda st, q: bk.nn_search(st, q, k))
-        scores, ids = self._nn_fns[k](self.state, jnp.asarray(q))
+        mode = self.search_mode if mode is None else mode
+        idx = self.ann_index
+        use_ivf = (mode == "ivf" and idx is not None
+                   and self.ann_staleness_rows <= self.ann_stale_rows
+                   and isinstance(self.backend, (DenseBackend,
+                                                 PallasBackend)))
+        if use_ivf:
+            scores, ids = self._ivf_search(q, k, idx)
+            self.search_stats["ivf"] += 1
+        else:
+            if k not in self._nn_fns:
+                bk = self.backend
+                self._nn_fns[k] = jax.jit(
+                    lambda st, q: bk.nn_search(st, q, k))
+            scores, ids = self._nn_fns[k](self.state, jnp.asarray(q))
+            self.search_stats["exact"] += 1
         self.dispatches += 1
         return np.asarray(scores[:B]), np.asarray(ids[:B])
+
+    def _ivf_search(self, q: np.ndarray, k: int, idx):
+        """Two-stage search against the clustered snapshot; one jitted
+        program per (k, nprobe) — index arrays are traced args, so a
+        rebuild with the same shapes reuses the compiled program."""
+        nprobe = min(self.ann_nprobe, idx.nlist)
+        fn = self._ivf_fns.get((k, nprobe))
+        if fn is None:
+            if isinstance(self.backend, PallasBackend):
+                from repro.kernels.nn_search_ivf import ivf_search_pallas
+                interpret = self.backend.interpret
+                impl = (lambda tbl, c, pv, pi, q: ivf_search_pallas(
+                    tbl, c, pv, pi, q, k, nprobe, interpret=interpret))
+            else:
+                from repro.kernels.nn_search_ivf import ivf_search_jnp
+                impl = (lambda tbl, c, pv, pi, q: ivf_search_jnp(
+                    tbl, c, pv, pi, q, k, nprobe))
+            fn = self._ivf_fns[(k, nprobe)] = jax.jit(impl)
+        return fn(self.state.table, idx.centroids, idx.packed_vecs,
+                  idx.packed_ids, jnp.asarray(q))
+
+    # -- ANN index lifecycle (built off the serving path; see ann_index) ---
+
+    @property
+    def ann_staleness_rows(self) -> float:
+        """Rows written since the current index was built (inf if none)."""
+        if self.ann_index is None:
+            return float("inf")
+        return self.total_write_rows - self._ann_built_at
+
+    def set_ann_index(self, index, *, built_at_writes: int) -> None:
+        """Publish a freshly-built index (refresher thread). Index first,
+        built_at second: a concurrent reader pairing the OLD index with the
+        NEW counter would understate staleness and serve past the budget;
+        this order can only overstate it (spurious, safe exact fallback)."""
+        self.ann_index = index
+        self._ann_built_at = built_at_writes
+
+    def rebuild_ann_index(self, *, iters: int = 8) -> None:
+        """Snapshot -> cluster -> pack -> swap. Safe to call from a
+        background thread: the snapshot read and the final swap are atomic
+        attribute operations; everything between runs on this thread."""
+        from repro.core.ann_index import build_ivf_index
+        built_at = self.total_write_rows    # writes during the build count
+        table = np.asarray(self.state.table, np.float32)  # as staleness
+        index = build_ivf_index(table, nlist=self.ann_nlist, iters=iters)
+        self.set_ann_index(index, built_at_writes=built_at)
 
     def warmup(self, max_batch: int = 256) -> None:
         """Pre-compile the lookup/lazy_grad jit buckets up to ``max_batch``

@@ -1,0 +1,193 @@
+"""Two-stage IVF nn_search: centroid probing + bucket-only Pallas top-k.
+
+The exact blocked kernel (``repro.kernels.nn_search``) streams the whole
+bank HBM->VMEM per query batch — O(N*D) per call no matter what the queries
+are. This module is the approximate serving path built on the inverted-file
+index from ``repro.core.ann_index``:
+
+- stage 1 scores the queries against the ``C`` k-means centroids and keeps
+  the ``nprobe`` best partitions per query — O(C*D);
+- stage 2 scores each query only against the rows of its probed buckets —
+  O(nprobe * cap * D) — and keeps a running top-k.
+
+The bank rows live in the index as ``packed_vecs``: a (C*cap, D) copy
+grouped by cluster, each bucket padded with ``-1`` ids to the common pow2
+capacity ``cap``. That layout makes every per-query shortlist a set of
+*block-aligned slices*, so the stage-2 kernel needs no hardware gather: a
+scalar-prefetched (B, n_chunks) block-selector table drives the BlockSpec
+index_map, and the TPU DMAs exactly the shortlisted (LB, D) bucket tiles
+HBM->VMEM — nothing else. Per chunk the kernel runs the same running-top-k
+merge as the exact kernel (``_merge_topk``, reused) with the packed ids
+standing in for the iota.
+
+Because a row lives in exactly one bucket and probes are per-query, the
+result is a pure function of (index, table, query) — coalescing a batch of
+IVF searches into one call is deterministic, same as the exact path.
+
+Final step: the k winners are re-scored against the LIVE table (a (B*k)-row
+gather, negligible) so returned scores are exact for the rows found even
+when the index snapshot has gone stale — stale assignments only cost
+recall, never score accuracy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.compat import CompilerParams
+from repro.kernels.nn_search import NEG, _merge_topk
+
+_IMAX = jnp.iinfo(jnp.int32).max
+
+
+# ---------------------------------------------------------------------------
+# stage 1: coarse quantizer probe
+# ---------------------------------------------------------------------------
+
+def ivf_probes(queries, centroids, nprobe: int):
+    """Top-``nprobe`` partitions per query by centroid inner product.
+    queries: (B, D); centroids: (C, D) -> (B, nprobe) int32."""
+    nprobe = min(nprobe, centroids.shape[0])
+    scores = queries.astype(jnp.float32) @ centroids.T.astype(jnp.float32)
+    _, probes = jax.lax.top_k(scores, nprobe)
+    return probes.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# live re-rank (shared tail of both stage-2 implementations)
+# ---------------------------------------------------------------------------
+
+def _rerank_live(table, queries, ids):
+    """Re-score candidate ids against the live table and sort descending.
+    Invalid candidates (padding) come back as (-inf, -1)."""
+    n = table.shape[0]
+    valid = (ids >= 0) & (ids < n)
+    rows = table[jnp.where(valid, ids, 0)].astype(jnp.float32)   # (B, k, D)
+    s = jnp.einsum("bd,bkd->bk", queries.astype(jnp.float32), rows)
+    s = jnp.where(valid, s, -jnp.inf)
+    order = jnp.argsort(-s, axis=-1)
+    return (jnp.take_along_axis(s, order, axis=1),
+            jnp.take_along_axis(jnp.where(valid, ids, -1), order, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# stage 2, Pallas: scalar-prefetched bucket tiles + running top-k
+# ---------------------------------------------------------------------------
+
+def _ivf_kernel(sel_ref, q_ref, vec_ref, id_ref, os_ref, oi_ref,
+                bs_ref, bi_ref, *, k: int):
+    del sel_ref                       # consumed by the index_maps
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        bs_ref[...] = jnp.full_like(bs_ref, NEG)
+        bi_ref[...] = jnp.full_like(bi_ref, _IMAX)
+
+    q = q_ref[...].astype(jnp.float32)                       # (1, D)
+    v = vec_ref[...].astype(jnp.float32)                     # (LB, D)
+    ids = id_ref[...].reshape(1, -1)                         # (1, LB)
+    scores = jax.lax.dot_general(q, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    scores = jnp.where(ids >= 0, scores, NEG)
+    ids = jnp.where(ids >= 0, ids, _IMAX)
+    bs, bi = _merge_topk(scores, ids, bs_ref[...], bi_ref[...], k)
+    bs_ref[...] = bs
+    bi_ref[...] = bi
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        os_ref[...] = bs_ref[...]
+        oi_ref[...] = bi_ref[...]
+
+
+def ivf_stage2_pallas(packed_vecs, packed_ids, queries, probes, k: int, *,
+                      bucket_cap: int, block: int = 256,
+                      interpret: bool = True):
+    """packed_vecs: (C*cap, D); packed_ids: (C*cap,); queries: (B, D);
+    probes: (B, nprobe) -> (scores (B, k), ids (B, k)), snapshot scores."""
+    B, D = queries.shape
+    nprobe = probes.shape[1]
+    # chunk size: buckets are pow2 (< 128) or multiples of 128 (see
+    # ann_index.build_ivf_index); pick the largest 128-multiple divisor of
+    # the capacity that fits the requested block
+    if bucket_cap < 128:
+        lb = bucket_cap
+    else:
+        m = bucket_cap // 128
+        lb = 128 * max((d for d in range(1, m + 1)
+                        if m % d == 0 and 128 * d <= block), default=1)
+    assert bucket_cap % lb == 0, (bucket_cap, lb)
+    cpb = bucket_cap // lb                      # chunks per bucket
+    n_chunks = nprobe * cpb
+    # block-selector table: chunk j of query i reads packed block
+    # probes[i, j // cpb] * cpb + j % cpb
+    sel = (probes[:, :, None] * cpb +
+           jnp.arange(cpb, dtype=jnp.int32)[None, None, :]
+           ).reshape(B, n_chunks).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i, j, sel: (i, 0)),
+            pl.BlockSpec((lb, D), lambda i, j, sel: (sel[i, j], 0)),
+            pl.BlockSpec((lb,), lambda i, j, sel: (sel[i, j],)),
+        ],
+        out_specs=[pl.BlockSpec((1, k), lambda i, j, sel: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i, j, sel: (i, 0))],
+        scratch_shapes=[pltpu.VMEM((1, k), jnp.float32),
+                        pltpu.VMEM((1, k), jnp.int32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_ivf_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, k), jnp.float32),
+                   jax.ShapeDtypeStruct((B, k), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(sel, queries, packed_vecs, packed_ids)
+
+
+def ivf_search_pallas(table, centroids, packed_vecs, packed_ids, queries,
+                      k: int, nprobe: int, *, block: int = 256,
+                      interpret: bool = True):
+    """Full two-stage IVF search, Pallas stage 2. Returns (scores, ids)
+    with live (re-ranked) scores; padding slots are (-inf, -1)."""
+    bucket_cap = packed_vecs.shape[0] // centroids.shape[0]
+    probes = ivf_probes(queries, centroids, nprobe)
+    _, ids = ivf_stage2_pallas(packed_vecs, packed_ids, queries, probes, k,
+                               bucket_cap=bucket_cap, block=block,
+                               interpret=interpret)
+    return _rerank_live(table, queries, ids)
+
+
+# ---------------------------------------------------------------------------
+# stage 2, jnp reference (oracle + DenseBackend serving path)
+# ---------------------------------------------------------------------------
+
+def ivf_search_jnp(table, centroids, packed_vecs, packed_ids, queries,
+                   k: int, nprobe: int):
+    """Dense-gather reference of the two-stage search — the allclose oracle
+    for ``ivf_search_pallas`` and the DenseBackend IVF path."""
+    C = centroids.shape[0]
+    cap = packed_vecs.shape[0] // C
+    B, D = queries.shape
+    probes = ivf_probes(queries, centroids, nprobe)
+    cand_v = packed_vecs.reshape(C, cap, D)[probes].reshape(B, -1, D)
+    cand_i = packed_ids.reshape(C, cap)[probes].reshape(B, -1)
+    s = jnp.einsum("bd,bld->bl", queries.astype(jnp.float32),
+                   cand_v.astype(jnp.float32))
+    s = jnp.where(cand_i >= 0, s, NEG)
+    L = cand_i.shape[1]
+    if L < k:                                   # degenerate tiny index
+        pad = k - L
+        s = jnp.pad(s, ((0, 0), (0, pad)), constant_values=NEG)
+        cand_i = jnp.pad(cand_i, ((0, 0), (0, pad)), constant_values=-1)
+    _, sel = jax.lax.top_k(s, k)
+    ids = jnp.take_along_axis(cand_i, sel, axis=1)
+    return _rerank_live(table, queries, ids)

@@ -23,6 +23,16 @@ def nn_search_topk(queries, bank, k: int, interpret: bool = True):
     return nn_search_pallas(queries, bank, k, interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("k", "nprobe", "interpret"))
+def nn_search_ivf(table, centroids, packed_vecs, packed_ids, queries,
+                  k: int, nprobe: int, interpret: bool = True):
+    """Two-stage IVF MIPS over a clustered snapshot (repro.core.ann_index);
+    scores come re-ranked against the live ``table``."""
+    from repro.kernels.nn_search_ivf import ivf_search_pallas
+    return ivf_search_pallas(table, centroids, packed_vecs, packed_ids,
+                             queries, k, nprobe, interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("causal", "window", "softcap",
                                    "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

@@ -14,6 +14,15 @@ def nn_search_ref(queries, bank, k: int):
     return jax.lax.top_k(scores, k)
 
 
+def nn_search_ivf_ref(table, centroids, packed_vecs, packed_ids, queries,
+                      k: int, nprobe: int):
+    """Two-stage IVF search oracle (dense-gather stage 2 + live re-rank);
+    the implementation lives next to the kernel."""
+    from repro.kernels.nn_search_ivf import ivf_search_jnp
+    return ivf_search_jnp(table, centroids, packed_vecs, packed_ids,
+                          queries, k, nprobe)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
                         softcap: float = 0.0):
     """q: (B, H, S, d); k/v: (B, H, S, d) (heads already repeated)."""

@@ -5,15 +5,18 @@ serving mode.
       --batch 4 --prompt-len 32 --gen 16
 
   PYTHONPATH=src python -m repro.launch.serve --kb --kb-backend pallas \
-      --clients 8
+      --clients 8 --kb-search ivf --nlist 64 --nprobe 8
 
 LM mode runs a reduced config end-to-end: prefill the prompt batch, then
 greedy decode. Full-size serve programs (decode_32k / long_500k) are
 exercised via the dry-run lowering of the same ``decode_step``.
 
 KB mode stands up the request-coalescing KnowledgeBankServer on the chosen
-engine backend and drives it with concurrent lookup/lazy_grad clients —
-the Figure-1 serving topology without the trainer attached.
+engine backend (dense | pallas | sharded — sharded gets a host mesh) and
+drives it with concurrent lookup/lazy_grad/nn_search clients — the Figure-1
+serving topology without the trainer attached. ``--kb-search ivf`` serves
+nn_search from the asynchronously-clustered IVF index, rebuilt by a
+background refresher thread (repro.core.ann_index).
 """
 from __future__ import annotations
 
@@ -34,13 +37,39 @@ def serve_kb(args) -> None:
     """Concurrent-client KB serving demo on the coalescing server."""
     from repro.core import KnowledgeBankServer
     rng = np.random.default_rng(args.seed)
+    dist = None
+    if args.kb_backend == "sharded":
+        from repro.launch.mesh import make_host_mesh
+        dist = DistContext(mesh=make_host_mesh())
     server = KnowledgeBankServer(args.kb_entries, args.kb_dim,
-                                 backend=args.kb_backend,
-                                 coalesce=not args.no_coalesce)
+                                 backend=args.kb_backend, dist=dist,
+                                 coalesce=not args.no_coalesce,
+                                 search_mode=args.kb_search,
+                                 ann_nlist=args.nlist,
+                                 ann_nprobe=args.nprobe)
     server.update(np.arange(args.kb_entries),
                   rng.normal(size=(args.kb_entries, args.kb_dim))
                   .astype(np.float32))
     server.warmup(args.batch * args.clients)
+    refresher = None
+    if args.kb_search == "ivf" and args.kb_backend == "sharded":
+        print("kb-serve: IVF has no sharded stage-2 yet (see ROADMAP); "
+              "serving exact")
+    elif args.kb_search == "ivf":
+        # index maker: clusters the bank off the serving path
+        refresher = server.start_ann_refresher(min_period_s=0.01)
+        deadline = time.time() + 120.0
+        while server.engine.ann_index is None:   # first build, then serve
+            if refresher.last_error is not None or not refresher.is_alive():
+                raise RuntimeError("IVF index build failed") \
+                    from refresher.last_error
+            if time.time() > deadline:
+                raise RuntimeError("IVF index build timed out")
+            time.sleep(0.01)
+
+    # pre-compile the nn_search program too (warmup() covers only the
+    # lookup/lazy_grad buckets) so no first-request jit stall is timed
+    server.nn_search(np.zeros((args.batch, args.kb_dim), np.float32), k=8)
 
     def client(t: int, n_calls: int):
         crng = np.random.default_rng(args.seed + 1 + t)
@@ -48,6 +77,7 @@ def serve_kb(args) -> None:
             ids = crng.integers(0, args.kb_entries, (args.batch,))
             vals = server.lookup(ids)
             server.lazy_grad(ids, 0.01 * vals)
+            server.nn_search(vals, k=8)
 
     threads = [threading.Thread(target=client, args=(t, args.gen))
                for t in range(args.clients)]
@@ -57,15 +87,19 @@ def serve_kb(args) -> None:
     for th in threads:
         th.join()
     dt = time.perf_counter() - t0
+    stats = dict(server.engine.search_stats)
+    rebuilds = refresher.rebuilds if refresher else 0
     server.close()
-    calls = args.clients * args.gen * 2
-    print(f"kb-serve backend={args.kb_backend} "
+    calls = args.clients * args.gen * 3
+    print(f"kb-serve backend={args.kb_backend} search={args.kb_search} "
           f"coalesce={not args.no_coalesce} clients={args.clients}: "
           f"{calls / dt:.0f} req/s "
           f"({dt / calls * 1e6:.0f} us/req, "
           f"coalescing x{server.coalescing_factor:.1f}, "
           f"{server.metrics['dispatches']} device dispatches for "
-          f"{server.metrics['requests']} requests)")
+          f"{server.metrics['requests']} requests, "
+          f"nn ivf/exact={stats['ivf']}/{stats['exact']}, "
+          f"index rebuilds={rebuilds})")
 
 
 def main(argv=None):
@@ -77,10 +111,17 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kb", action="store_true",
                     help="serve the knowledge bank instead of the LM")
-    ap.add_argument("--kb-backend", choices=["dense", "pallas"],
+    ap.add_argument("--kb-backend", choices=["dense", "pallas", "sharded"],
                     default="dense")
     ap.add_argument("--kb-entries", type=int, default=4096)
     ap.add_argument("--kb-dim", type=int, default=64)
+    ap.add_argument("--kb-search", choices=["exact", "ivf"], default="exact",
+                    help="nn_search mode; ivf serves from the background-"
+                         "clustered index (exact fallback until built)")
+    ap.add_argument("--nlist", type=int, default=64,
+                    help="IVF partitions (k-means centroids)")
+    ap.add_argument("--nprobe", type=int, default=8,
+                    help="IVF partitions probed per query")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--no-coalesce", action="store_true",
                     help="per-call locked baseline (benchmark ablation)")

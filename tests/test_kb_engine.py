@@ -1,7 +1,9 @@
 """KB engine: backend parity (dense == sharded == pallas, bit-for-bit on
-the same op sequence) and coalescing-server correctness under concurrency
-(ISSUE 1 acceptance suite)."""
+the same op sequence), coalescing-server correctness under concurrency
+(ISSUE 1 acceptance suite), and the IVF search mode — recall, exact
+fallback, coalesced determinism, background refresh (ISSUE 2)."""
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -266,3 +268,165 @@ def test_server_close_then_call_still_works():
 def test_make_backend_rejects_unknown():
     with pytest.raises(ValueError):
         make_backend("bigtable")
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 2: sharded exclude_ids + IVF search mode
+# ---------------------------------------------------------------------------
+
+def _clustered_table(n, d, n_centers, seed=0):
+    from repro.core.ann_index import clustered_bank
+    return clustered_bank(n, d, n_centers, noise=0.1, seed=seed)
+
+
+def test_sharded_nn_search_exclude_ids_matches_dense():
+    """exclude_ids on the sharded backend (used to raise): over-fetch k+E
+    candidates, mask excluded post-merge — bit-identical to the dense
+    pre-mask semantics."""
+    backends = _backends()
+    table = np.random.default_rng(3).normal(size=(N, D)).astype(np.float32)
+    q = jnp.asarray(table[:4] + 0.01)
+    exclude = jnp.asarray([[0, 1, -1], [1, 2, 3], [-1, -1, -1], [3, 7, 9]])
+    outs = {}
+    for name, bk in backends.items():
+        st = kb_create(N, D)
+        st = bk.update(st, jnp.arange(N), jnp.asarray(table))
+        outs[name] = bk.nn_search(st, q, 5, exclude_ids=exclude)
+    for name in ("sharded", "pallas"):
+        np.testing.assert_allclose(np.asarray(outs["dense"][0]),
+                                   np.asarray(outs[name][0]), atol=1e-5,
+                                   err_msg=f"{name}: excluded scores")
+        np.testing.assert_array_equal(np.asarray(outs["dense"][1]),
+                                      np.asarray(outs[name][1]),
+                                      err_msg=f"{name}: excluded ids")
+        for b in range(4):
+            got = set(np.asarray(outs[name][1])[b].tolist())
+            banned = {int(e) for e in np.asarray(exclude)[b] if e >= 0}
+            assert not (got & banned), (name, b)
+
+
+@pytest.mark.parametrize("backend", ["dense", "pallas"])
+def test_engine_ivf_recall_on_clustered_data(backend):
+    n, d = 1024, 16
+    table = _clustered_table(n, d, 16, seed=1)
+    eng = KBEngine(n, d, backend=backend, search_mode="ivf",
+                   ann_nlist=16, ann_nprobe=4)
+    eng.update(np.arange(n), table)
+    eng.rebuild_ann_index()
+    q = table[np.arange(0, n, 64)] + 0.01
+    _, exact_ids = eng.nn_search(q, 10, mode="exact")
+    _, ivf_ids = eng.nn_search(q, 10)
+    assert eng.search_stats == {"exact": 1, "ivf": 1}
+    recall = np.mean([len(set(exact_ids[b]) & set(ivf_ids[b])) / 10
+                      for b in range(q.shape[0])])
+    assert recall >= 0.95, recall
+
+
+def test_engine_ivf_falls_back_exact_when_absent_or_stale():
+    n, d = 256, 8
+    table = _clustered_table(n, d, 8, seed=2)
+    ref_eng = KBEngine(n, d, search_mode="exact")
+    eng = KBEngine(n, d, search_mode="ivf", ann_nlist=8, ann_nprobe=8,
+                   ann_stale_rows=16)
+    for e in (ref_eng, eng):
+        e.update(np.arange(n), table)
+    q = table[:4] + 0.01
+
+    # no index yet -> exact fallback, identical results
+    s0, i0 = eng.nn_search(q, 5)
+    s_ref, i_ref = ref_eng.nn_search(q, 5)
+    np.testing.assert_array_equal(i0, i_ref)
+    np.testing.assert_allclose(s0, s_ref, atol=1e-6)
+    assert eng.search_stats["exact"] == 1 and eng.search_stats["ivf"] == 0
+
+    eng.rebuild_ann_index()
+    eng.nn_search(q, 5)
+    assert eng.search_stats["ivf"] == 1
+
+    # write past the staleness budget -> exact fallback again
+    rng = np.random.default_rng(0)
+    eng.update(np.arange(32), rng.normal(size=(32, d)).astype(np.float32))
+    assert eng.ann_staleness_rows > eng.ann_stale_rows
+    eng.nn_search(q, 5)
+    assert eng.search_stats == {"exact": 2, "ivf": 1}
+
+    # a rebuild restores the IVF path
+    eng.rebuild_ann_index()
+    eng.nn_search(q, 5)
+    assert eng.search_stats == {"exact": 2, "ivf": 2}
+
+
+def test_coalesced_ivf_searches_are_deterministic():
+    """IVF results are a pure function of (index, table, query): a search
+    merged into one batched two-stage call returns exactly what the same
+    search returns solo."""
+    n, d = 512, 16
+    table = _clustered_table(n, d, 8, seed=4)
+    solo = KBEngine(n, d, search_mode="ivf", ann_nlist=8, ann_nprobe=2)
+    solo.update(np.arange(n), table)
+    solo.rebuild_ann_index()
+    queries = {t: table[t * 8:t * 8 + 4] + 0.01 for t in range(8)}
+    expected = {t: solo.nn_search(queries[t], 5) for t in range(8)}
+
+    eng = KBEngine(n, d, search_mode="ivf", ann_nlist=8, ann_nprobe=2)
+    eng.update(np.arange(n), table)
+    eng.rebuild_ann_index()
+    srv = KnowledgeBankServer(engine=eng, coalesce=True,
+                              coalesce_window_s=0.05)
+    results = {}
+
+    def do_search(t):
+        results[t] = srv.nn_search(queries[t], 5)
+
+    threads = [threading.Thread(target=do_search, args=(t,))
+               for t in range(8)]
+    d0 = srv.metrics["dispatches"]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    merged = srv.metrics["dispatches"] - d0
+    srv.close()
+    assert merged < 8, merged                     # searches actually merged
+    assert eng.search_stats["exact"] == 0         # served from the index
+    for t in range(8):
+        np.testing.assert_array_equal(results[t][1], expected[t][1],
+                                      err_msg=f"thread {t} ids")
+        np.testing.assert_allclose(results[t][0], expected[t][0], atol=1e-5,
+                                   err_msg=f"thread {t} scores")
+
+
+def test_nn_requests_with_different_modes_do_not_merge():
+    from repro.core.async_runtime import _Request, _mergeable
+    a = _Request("nn", payload=np.zeros((2, 4)), k=3, mode="ivf")
+    b = _Request("nn", payload=np.zeros((2, 4)), k=3, mode="exact")
+    c = _Request("nn", payload=np.zeros((2, 4)), k=3, mode="ivf")
+    assert not _mergeable(a, b)
+    assert _mergeable(a, c)
+
+
+def test_ivf_refresher_rebuilds_off_the_serving_path():
+    """The index maker keeps serving live: requests issued while the
+    refresher is clustering all complete, the index gets (re)built, and
+    post-build searches are served from it."""
+    n, d = 512, 16
+    table = _clustered_table(n, d, 8, seed=5)
+    srv = KnowledgeBankServer(n, d, search_mode="ivf", ann_nlist=8,
+                              ann_nprobe=4)
+    srv.update(np.arange(n), table)
+    refresher = srv.start_ann_refresher(rebuild_rows=64, iters=4,
+                                        min_period_s=0.001)
+    rng = np.random.default_rng(1)
+    deadline = time.time() + 10.0
+    served = 0
+    while (refresher.rebuilds < 2 or srv.engine.search_stats["ivf"] == 0) \
+            and time.time() < deadline:
+        ids = rng.integers(0, n, (16,))
+        srv.update(ids, table[ids] + 0.01)        # drives staleness up
+        s, i = srv.nn_search(table[ids[:4]], 5)
+        assert s.shape == (4, 5) and i.shape == (4, 5)
+        served += 1
+    srv.close()
+    assert refresher.rebuilds >= 2, refresher.rebuilds
+    assert srv.engine.search_stats["ivf"] > 0
+    assert served > 0
