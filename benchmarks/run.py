@@ -8,8 +8,12 @@ Suites:
   staleness        : §1     — freshness impact controllable
   lazy_update      : §3.2   — lazy average + outlier rejection stability
   two_tower        : §4.3   — KB-scaled negative pools
-  nn_search_bench  : §3.2   — NN lookup + constant-latency sharding
+  nn_search_bench  : §3.2   — NN lookup: exact/IVF/sharded-IVF + recall
+  dynamic_graph    : §4.1   — graph growth under async maker updates
   kb_serving       : §3.2   — request-coalescing server vs per-call lock
+
+``--quick`` shrinks every suite (nn_search_bench drops to N<=16384 but
+still exercises the sharded-IVF row — the CI smoke path).
 """
 from __future__ import annotations
 

@@ -7,11 +7,14 @@ from repro.core.knowledge_bank import (FeatureStore, KBState,
                                        kb_lookup, kb_nn_search, kb_update)
 from repro.core.sharded_kb import (kb_axes, kb_pspecs, sharded_kb_flush,
                                    sharded_kb_lazy_grad, sharded_kb_lookup,
-                                   sharded_kb_nn_search, sharded_kb_update)
+                                   sharded_kb_nn_search,
+                                   sharded_kb_nn_search_ivf,
+                                   sharded_kb_update)
 from repro.core.kb_engine import (DenseBackend, KBBackend, KBEngine,
                                   PallasBackend, ShardedBackend,
                                   make_backend)
-from repro.core.ann_index import (IVFIndex, IVFRefresher, build_ivf_index,
+from repro.core.ann_index import (IVFIndex, IVFRefresher, ShardedIVFIndex,
+                                  build_ivf_index, build_sharded_ivf_index,
                                   kmeans)
 from repro.core.trainer import (make_async_train_fns, make_carls_train_step,
                                 make_inline_baseline_step, model_loss)
@@ -27,10 +30,12 @@ __all__ = [
     "fs_update_labels", "fs_update_neighbors", "kb_create", "kb_flush",
     "kb_lazy_grad", "kb_lookup", "kb_nn_search", "kb_update",
     "kb_axes", "kb_pspecs", "sharded_kb_flush", "sharded_kb_lazy_grad",
-    "sharded_kb_lookup", "sharded_kb_nn_search", "sharded_kb_update",
+    "sharded_kb_lookup", "sharded_kb_nn_search", "sharded_kb_nn_search_ivf",
+    "sharded_kb_update",
     "DenseBackend", "KBBackend", "KBEngine", "PallasBackend",
     "ShardedBackend", "make_backend",
-    "IVFIndex", "IVFRefresher", "build_ivf_index", "kmeans",
+    "IVFIndex", "IVFRefresher", "ShardedIVFIndex", "build_ivf_index",
+    "build_sharded_ivf_index", "kmeans",
     "make_async_train_fns", "make_carls_train_step",
     "make_inline_baseline_step", "model_loss",
     "graph_agreement_labels", "make_embed_fn", "make_embedding_refresh",

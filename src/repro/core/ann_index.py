@@ -28,15 +28,26 @@ the count it was built at; their difference is the measurable staleness that
 Within the shortlist the winners are re-scored against the live table, so
 staleness costs recall only — never score accuracy (see the kernel module).
 
-Trade-off knobs (documented in ROADMAP.md): ``nlist`` (more buckets = less
-work per probe, weaker partitions), ``nprobe`` (recall vs latency),
-``rebuild_rows`` / ``stale_rows`` (refresh rate vs clustering cost).
+Sharded banks (``ShardedIVFIndex``): the multi-device backend keeps ONE
+sub-index per shard, each clustered over only the rows that shard owns, laid
+out so the per-shard slice of every array IS that shard's complete local
+index. Queries probe every shard's centroid table, each shard produces a
+local top-k shortlist from its own buckets, and the shortlists meet in a
+hierarchical merge (all-gather of (B, k) candidates + global re-top-k —
+payload O(B*k*shards), constant in N, the same fan-in as the exact sharded
+path). Per-shard sub-indexes rebuild independently: a hot shard goes stale
+and re-clusters alone, at 1/S of the full build cost.
+
+Trade-off knobs (docs/tuning.md): ``nlist`` (more buckets = less work per
+probe, weaker partitions; per *shard* for the sharded index), ``nprobe``
+(recall vs latency), ``rebuild_rows`` / ``rebuild_shard_rows`` /
+``stale_rows`` (refresh rate vs clustering cost).
 """
 from __future__ import annotations
 
 import functools
 import threading
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -133,68 +144,220 @@ def kmeans(table, nlist: int, *, iters: int = 8):
     return centroids, assign.astype(jnp.int32)
 
 
-def build_ivf_index(table, *, nlist: int = 64, iters: int = 8) -> IVFIndex:
-    """Cluster a table snapshot and pack it into the block-aligned IVF
-    layout. Runs on the caller's thread — the refresher's, in serving."""
-    tbl = np.asarray(table, np.float32)
-    N, D = tbl.shape
-    centroids, assign = kmeans(tbl, nlist, iters=iters)
-    C = centroids.shape[0]
-    assign = np.asarray(assign)
-    counts = np.bincount(assign, minlength=C)
-    # common capacity >= the largest bucket (skewed data costs padding
-    # memory, never correctness): pow2 for tiny buckets, else the next
-    # multiple of 128 — the stage-2 kernel chunks buckets in 128-row tiles,
-    # and pow2 rounding above 128 would waste up to 2x shortlist work
-    biggest = max(int(counts.max()), 8)
+def _round_capacity(biggest: int) -> int:
+    """Common bucket capacity >= the largest bucket (skewed data costs
+    padding memory, never correctness): pow2 for tiny buckets, else the next
+    multiple of 128 — the stage-2 kernel chunks buckets in 128-row tiles,
+    and pow2 rounding above 128 would waste up to 2x shortlist work."""
+    biggest = max(biggest, 8)
     if biggest <= 128:
-        cap = 1 << (biggest - 1).bit_length()
-    else:
-        cap = -(-biggest // 128) * 128
+        return 1 << (biggest - 1).bit_length()
+    return -(-biggest // 128) * 128
+
+
+def _pack_buckets(tbl, assign, C: int, cap: int, *, id_offset: int = 0):
+    """Group ``tbl`` rows by their cluster ``assign`` into the block-aligned
+    layout: every bucket padded to ``cap`` slots, -1 ids in the padding.
+    ``id_offset`` turns local row positions into global bank ids (the
+    sharded per-owner build packs slice s with offset s * n_local)."""
+    N, D = tbl.shape
     order = np.argsort(assign, kind="stable")
     sa = assign[order]
     start = np.searchsorted(sa, np.arange(C))
     slots = sa * cap + (np.arange(N) - start[sa])
     packed_ids = np.full((C * cap,), -1, np.int32)
-    packed_ids[slots] = order.astype(np.int32)
+    packed_ids[slots] = (order + id_offset).astype(np.int32)
     packed_vecs = np.zeros((C * cap, D), np.float32)
     packed_vecs[slots] = tbl[order]
+    return packed_vecs, packed_ids
+
+
+def build_ivf_index(table, *, nlist: int = 64, iters: int = 8) -> IVFIndex:
+    """Cluster a table snapshot and pack it into the block-aligned IVF
+    layout. Runs on the caller's thread — the refresher's, in serving.
+    Deterministic: the same snapshot always yields the same index
+    (farthest-point init, no RNG), so rebuilds never introduce jitter."""
+    tbl = np.asarray(table, np.float32)
+    N, D = tbl.shape
+    centroids, assign = kmeans(tbl, nlist, iters=iters)
+    C = centroids.shape[0]
+    assign = np.asarray(assign)
+    cap = _round_capacity(int(np.bincount(assign, minlength=C).max()))
+    packed_vecs, packed_ids = _pack_buckets(tbl, assign, C, cap)
     return IVFIndex(jnp.asarray(centroids), jnp.asarray(packed_vecs),
                     jnp.asarray(packed_ids), nlist=C, bucket_cap=cap,
                     n_rows=N)
 
 
+class ShardedIVFIndex:
+    """Per-shard sub-indexes over a row-sharded bank, one flat array set.
+
+    Shard ``s`` owns the contiguous row range ``[s*n_local, (s+1)*n_local)``
+    (the same ownership rule ``OwnerShard`` uses for every sharded op).
+    Layouts are shard-major so the per-shard slice of each array is exactly
+    that shard's local index — sharding them over the mesh's row axes gives
+    every device its own sub-index with zero re-layout:
+
+    - ``centroids``   : (S*C, D) f32 — shard s's coarse quantizer is rows
+      ``[s*C, (s+1)*C)``.
+    - ``packed_vecs`` : (S*C*cap, D) f32 — shard s's bucket tiles are rows
+      ``[s*C*cap, (s+1)*C*cap)``; ``cap`` is COMMON across shards (the max
+      over per-shard largest buckets) so the arrays stay rectangular.
+    - ``packed_ids``  : (S*C*cap,) int32 — GLOBAL bank row ids (-1 padding),
+      so merged shortlists need no offset bookkeeping.
+
+    ``nlist`` is per shard: the bank has S*nlist buckets total. Staleness is
+    tracked per shard by the engine; ``build_sharded_ivf_index`` can rebuild
+    any subset of shards in place (see its docstring for the one case that
+    forces a full repack)."""
+
+    __slots__ = ("centroids", "packed_vecs", "packed_ids", "n_shards",
+                 "nlist", "bucket_cap", "n_rows")
+
+    def __init__(self, centroids, packed_vecs, packed_ids, *, n_shards: int,
+                 nlist: int, bucket_cap: int, n_rows: int):
+        self.centroids = centroids
+        self.packed_vecs = packed_vecs
+        self.packed_ids = packed_ids
+        self.n_shards = n_shards
+        self.nlist = nlist              # per shard
+        self.bucket_cap = bucket_cap
+        self.n_rows = n_rows
+
+
+def build_sharded_ivf_index(table, n_shards: int, *, nlist: int = 64,
+                            iters: int = 8,
+                            base: Optional[ShardedIVFIndex] = None,
+                            shards: Optional[Sequence[int]] = None
+                            ) -> ShardedIVFIndex:
+    """Cluster a row-sharded bank snapshot into per-shard sub-indexes.
+
+    With ``base`` and ``shards`` given, only those shards are re-clustered;
+    every other shard's centroids/buckets are copied from ``base`` untouched
+    — the per-shard rebuild that lets one hot shard refresh at 1/S of the
+    full build cost. The one exception: if a rebuilt shard's largest bucket
+    outgrows ``base.bucket_cap``, the common capacity must grow, which
+    repacks (and therefore re-clusters) every shard — detectable by the
+    caller as ``result.bucket_cap != base.bucket_cap``.
+
+    Deterministic like ``build_ivf_index``: same snapshot, same shard set,
+    same index."""
+    tbl = np.asarray(table, np.float32)
+    N, D = tbl.shape
+    if N % n_shards:
+        raise ValueError(f"bank rows {N} not divisible by {n_shards} shards")
+    n_local = N // n_shards
+    C = max(1, min(nlist, n_local))
+    if base is not None and (base.n_shards != n_shards or base.nlist != C):
+        base = None                     # shape changed: full rebuild
+    if shards is not None:
+        bad = [s for s in shards if not 0 <= int(s) < n_shards]
+        if bad:
+            raise ValueError(f"shard ids {bad} out of range "
+                             f"[0, {n_shards})")
+    rebuild = (range(n_shards) if base is None or shards is None
+               else sorted(set(int(s) for s in shards)))
+    if base is not None and not rebuild:
+        return base                     # empty shard list: no-op
+    built = {}                          # shard -> (centroids, assign)
+    for s in rebuild:
+        sl = tbl[s * n_local:(s + 1) * n_local]
+        centroids, assign = kmeans(sl, C, iters=iters)
+        built[s] = (np.asarray(centroids), np.asarray(assign))
+    biggest = max(int(np.bincount(a, minlength=C).max())
+                  for _, a in built.values())
+    cap = _round_capacity(biggest)
+    if base is not None and cap <= base.bucket_cap:
+        cap = base.bucket_cap           # partial rebuild keeps the layout
+    elif base is not None:
+        # capacity grew: every shard must repack at the new cap
+        base = None
+        for s in range(n_shards):
+            if s not in built:
+                sl = tbl[s * n_local:(s + 1) * n_local]
+                centroids, assign = kmeans(sl, C, iters=iters)
+                built[s] = (np.asarray(centroids), np.asarray(assign))
+        cap = _round_capacity(max(int(np.bincount(a, minlength=C).max())
+                                  for _, a in built.values()))
+    all_cent = np.zeros((n_shards * C, D), np.float32)
+    all_vecs = np.zeros((n_shards * C * cap, D), np.float32)
+    all_ids = np.full((n_shards * C * cap,), -1, np.int32)
+    for s in range(n_shards):
+        lo, hi = s * C * cap, (s + 1) * C * cap
+        if s in built:
+            centroids, assign = built[s]
+            sl = tbl[s * n_local:(s + 1) * n_local]
+            pv, pi = _pack_buckets(sl, assign, C, cap,
+                                   id_offset=s * n_local)
+            all_cent[s * C:(s + 1) * C] = centroids
+            all_vecs[lo:hi] = pv
+            all_ids[lo:hi] = pi
+        else:                           # keep base's sub-index verbatim
+            all_cent[s * C:(s + 1) * C] = np.asarray(
+                base.centroids[s * C:(s + 1) * C])
+            all_vecs[lo:hi] = np.asarray(base.packed_vecs[lo:hi])
+            all_ids[lo:hi] = np.asarray(base.packed_ids[lo:hi])
+    return ShardedIVFIndex(jnp.asarray(all_cent), jnp.asarray(all_vecs),
+                           jnp.asarray(all_ids), n_shards=n_shards, nlist=C,
+                           bucket_cap=cap, n_rows=N)
+
+
 class IVFRefresher(threading.Thread):
     """Background index maker: the knowledge-maker pattern applied to the
-    ANN index. Polls the engine's write counter and rebuilds the index
-    whenever ``rebuild_rows`` rows have been written since the last build
-    (or no index exists yet). The build works on a snapshot and the swap is
-    a single atomic attribute store, so serving threads never wait on it.
+    ANN index. Polls the engine's write counters and rebuilds the index
+    whenever enough rows have been written since the last build (or no
+    index exists yet). The build works on a snapshot and the swap is a
+    single atomic attribute store, so serving threads never wait on it.
 
-    Reads of ``engine.state`` / writes of ``engine.ann_index`` are safe
-    against the single-threaded engine owner (the server's dispatcher):
-    states are immutable pytrees and both fields are plain attribute
-    stores."""
+    On a sharded engine (``engine.ann_shards > 1``) staleness is tracked
+    per shard and sub-indexes rebuild INDEPENDENTLY: each poll re-clusters
+    only the shards whose written-row count since their own last build
+    crossed ``rebuild_shard_rows`` (default ``rebuild_rows / n_shards``) —
+    one hot shard never forces a full-bank rebuild. ``shard_rebuilds``
+    counts sub-index builds; ``rebuilds`` counts swap operations.
+
+    Thread-safety contract: reads of ``engine.state`` / writes of
+    ``engine.ann_index`` are safe against the single-threaded engine owner
+    (the server's dispatcher) because states are immutable pytrees and both
+    fields are plain attribute stores — see ``KBEngine.set_ann_index`` for
+    the ordering argument that makes a torn read harmless."""
 
     def __init__(self, engine, *, rebuild_rows: Optional[int] = None,
+                 rebuild_shard_rows: Optional[int] = None,
                  iters: int = 8, min_period_s: float = 0.01,
                  name: str = "ann-refresher"):
         super().__init__(daemon=True, name=name)
         self.engine = engine
         self.rebuild_rows = (max(1, engine.num_entries // 4)
                              if rebuild_rows is None else rebuild_rows)
+        shards = getattr(engine, "ann_shards", 1)
+        self.rebuild_shard_rows = (max(1, self.rebuild_rows // shards)
+                                   if rebuild_shard_rows is None
+                                   else rebuild_shard_rows)
         self.iters = iters
         self.min_period_s = min_period_s
         self.stop_event = threading.Event()
         self.rebuilds = 0
+        self.shard_rebuilds = 0
         self.last_error: Optional[BaseException] = None
+
+    def _stale_shards(self):
+        """Shard ids past their per-shard budget (all, if no index yet)."""
+        if self.engine.ann_index is None:
+            return list(range(getattr(self.engine, "ann_shards", 1)))
+        per_shard = np.asarray(self.engine.ann_shard_staleness_rows)
+        return np.flatnonzero(per_shard >= self.rebuild_shard_rows).tolist()
 
     def run(self):
         while not self.stop_event.is_set():
-            if (self.engine.ann_index is None
-                    or self.engine.ann_staleness_rows >= self.rebuild_rows):
+            stale = self._stale_shards()
+            if stale:
                 try:
-                    self.engine.rebuild_ann_index(iters=self.iters)
+                    # the engine reports sub-indexes ACTUALLY re-clustered
+                    # (a capacity overflow upgrades a partial rebuild to a
+                    # full repack; len(stale) would undercount it)
+                    self.shard_rebuilds += self.engine.rebuild_ann_index(
+                        iters=self.iters, shards=stale)
                     self.rebuilds += 1
                     self.last_error = None
                 except Exception as e:   # keep the maker alive; a dead

@@ -23,8 +23,13 @@ the pluggable KB engine (``repro.core.kb_engine``):
 Why coalescing is legal: the engine's batched ops are deterministic under
 duplicate ids, version counters bump once per touched row per call, and a
 client blocks on its future before issuing its next request — so per-client
-program order is preserved. A merged run is equivalent to a serial
-interleaving of its requests for lookup / update / flush / nn_search, and
+program order is preserved. nn_search coalescing additionally relies on the
+search being a pure function of (engine state, ANN index, queries) — true
+for exact, single-index IVF, AND the sharded hierarchical IVF merge — which
+is why only same-(k, mode) runs merge: the compiled program and the index
+snapshot they observe are then identical for every merged request. A
+merged run is equivalent to a serial interleaving of its requests for
+lookup / update / flush / nn_search, and
 for lazy_grad with entry-side clipping off (cache adds commute). With
 entry-side clipping ON (zmax > 0), a merged lazy_grad run clips every
 contribution against the pre-drain norm EMA and advances the EMA one step
@@ -141,32 +146,56 @@ class KnowledgeBankServer:
     # -- client API --------------------------------------------------------
 
     def lookup(self, ids: np.ndarray, *, trainer_step: int = 0) -> np.ndarray:
+        """Fetch rows, applying pending lazy gradients first. Blocking;
+        result is identical to a serial execution at this request's queue
+        position (merged lookups are deterministic under duplicate ids, so
+        slicing a coalesced batch can't change any caller's rows).
+        ``trainer_step`` tags the call for staleness accounting."""
         ids = np.asarray(ids)
         return self._submit(_Request("lookup", ids.reshape(-1),
                                      shape=ids.shape, meta=trainer_step))
 
     def update(self, ids, values, *, src_step: int = 0) -> None:
+        """Direct write (maker push); last-writer-wins on duplicate ids —
+        within one call AND within a merged run, because requests
+        concatenate in FIFO order and the engine dedupes keeping the final
+        occurrence. ``src_step`` stamps rows for the staleness metrics and
+        charges the rows to the ANN index's (per-shard) staleness clock."""
         ids = np.asarray(ids)
         self._submit(_Request("update", ids.reshape(-1),
                               np.asarray(values).reshape(ids.size, -1),
                               meta=src_step))
 
     def lazy_grad(self, ids, grads) -> None:
+        """Cache gradients for lazy application on next lookup/flush.
+        Cache adds commute, so merge order is unobservable (with entry-side
+        clipping on, see the module docstring for the one EMA-weighting
+        caveat). Counts toward ANN staleness immediately — the write WILL
+        reach the table."""
         ids = np.asarray(ids)
         self._submit(_Request("lazy_grad", ids.reshape(-1),
                               np.asarray(grads, np.float32).reshape(
                                   ids.size, -1)))
 
     def flush(self) -> None:
+        """Apply every pending cached gradient now (expiration path)."""
         self._submit(_Request("flush"))
 
     def nn_search(self, queries, k: int, *, mode: Optional[str] = None):
-        """``mode`` overrides the engine's ``search_mode`` per request
-        (exact | ivf); only same-mode same-k searches coalesce."""
+        """Top-k MIPS over the bank. ``mode`` overrides the engine's
+        ``search_mode`` per request (exact | ivf); only same-mode same-k
+        searches coalesce, because a merged run must be one compiled
+        program observing one index snapshot — that, plus the search being
+        a pure function of (state, index, queries) on every backend
+        (including the sharded per-shard-sub-index merge), makes the merge
+        invisible to callers. IVF falls back to exact when the index is
+        absent or past its staleness budget; returned scores are always
+        live (re-ranked), so staleness costs recall only."""
         return self._submit(_Request("nn", payload=np.asarray(queries), k=k,
                                      mode=mode))
 
     def table_snapshot(self) -> np.ndarray:
+        """Consistent snapshot: barriers behind every queued write first."""
         self._submit(_Request("barrier"))       # drain queued writes first
         with self._elock:
             return self.engine.table_snapshot()
@@ -189,8 +218,10 @@ class KnowledgeBankServer:
     def start_ann_refresher(self, **kwargs):
         """Register the IVF index maker (see repro.core.ann_index): a
         daemon thread that rebuilds the engine's ANN index off the serving
-        path. Stopped by ``close``. Returns the thread (its ``rebuilds``
-        counter is the observability hook)."""
+        path — per-shard independently on the sharded backend, so one hot
+        shard re-clusters at 1/S of the full build cost. Stopped by
+        ``close``. Returns the thread (its ``rebuilds`` /
+        ``shard_rebuilds`` counters are the observability hooks)."""
         from repro.core.ann_index import IVFRefresher
         if self._ann_refresher is None:
             self._ann_refresher = IVFRefresher(self.engine, **kwargs)

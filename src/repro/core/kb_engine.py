@@ -33,13 +33,23 @@ lazy_grads pad with masked-out entries.
 (brute force over the bank — reference or blocked Pallas kernel) or
 ``"ivf"`` (two-stage search against the asynchronously-clustered index from
 ``repro.core.ann_index`` / ``repro.kernels.nn_search_ivf``), overridable
-per request and falling back to exact whenever the index is absent, past
-its staleness budget, or the backend has no IVF path (sharded).
+per request and falling back to exact whenever the index is absent or past
+its staleness budget. On the sharded backend the engine maintains a
+``ShardedIVFIndex`` — one sub-index per shard, per-shard write counters,
+per-shard independent rebuilds — and serves IVF queries through the
+hierarchical merge in ``repro.core.sharded_kb.sharded_kb_nn_search_ivf``.
 
 The engine itself is NOT thread-safe — concurrency (locking or request
 coalescing) is the server layer's job. The one sanctioned exception: the
-``IVFRefresher`` thread reads ``state``/``total_write_rows`` and swaps
-``ann_index`` — all atomic attribute operations on immutable values.
+``IVFRefresher`` thread reads ``state`` / ``total_write_rows`` /
+``shard_write_rows`` and swaps ``ann_index``. ``state`` and ``ann_index``
+are atomic attribute stores of immutable values; ``shard_write_rows`` is
+a numpy array the owner mutates in place (monotonic ``+=``), so the
+refresher may read a value stale by the in-flight batch — which only
+UNDERSTATES staleness by that batch, deferring (never corrupting) a
+rebuild, and the post-build clock snapshot is taken before the table
+read so concurrent writes still count as staleness against the new
+index.
 """
 from __future__ import annotations
 
@@ -130,18 +140,28 @@ class ShardedBackend:
         if exclude_ids is None:
             return self._skb.sharded_kb_nn_search(
                 state, queries, k, self.dist, use_kernel=self.use_nn_kernel)
-        # over-fetch k + E candidates, then mask excluded ids post-merge:
-        # at most E of the k+E can be excluded per query, so the surviving
-        # top-k equals the dense pre-mask semantics
-        E = exclude_ids.shape[1]
-        kk = min(k + E, state.table.shape[0])
-        s, i = self._skb.sharded_kb_nn_search(state, queries, kk, self.dist,
-                                              use_kernel=self.use_nn_kernel)
-        excl = ((i[:, :, None] == exclude_ids[:, None, :]) &
-                (exclude_ids >= 0)[:, None, :]).any(-1)
-        s = jnp.where(excl, -jnp.inf, s)
-        s2, sel = jax.lax.top_k(s, k)
-        return s2, jnp.take_along_axis(i, sel, axis=1)
+        from repro.kernels.nn_search import overfetch_exclude_topk
+        return overfetch_exclude_topk(
+            lambda kk: self._skb.sharded_kb_nn_search(
+                state, queries, kk, self.dist,
+                use_kernel=self.use_nn_kernel),
+            state.table.shape[0], k, exclude_ids)
+
+    def nn_search_ivf(self, table, centroids, packed_vecs, packed_ids,
+                      queries, k, nprobe):
+        """Hierarchical sub-linear search over per-shard sub-indexes (see
+        ``repro.core.sharded_kb.sharded_kb_nn_search_ivf``). Deterministic
+        pure function of (index, table, queries) — coalescing-safe."""
+        return self._skb.sharded_kb_nn_search_ivf(
+            table, centroids, packed_vecs, packed_ids, queries, k, nprobe,
+            self.dist)
+
+    @property
+    def n_shards(self) -> int:
+        """Total bank shards = product of the mesh axes the rows span."""
+        mesh = self.dist.mesh
+        return int(np.prod([mesh.shape[a]
+                            for a in self._skb.kb_axes(self.dist)]))
 
 
 class PallasBackend:
@@ -205,6 +225,10 @@ class PallasBackend:
 
 def make_backend(name: str, *, dist: Optional[DistContext] = None,
                  interpret: bool = True) -> KBBackend:
+    """Backend factory: ``dense | sharded | pallas``. All three satisfy
+    the same contract — bit-identical state evolution on the same op
+    sequence (tests/test_kb_engine.py) — so callers may switch backends
+    without revalidating semantics."""
     if name == "dense":
         return DenseBackend()
     if name == "sharded":
@@ -253,7 +277,16 @@ class KBEngine:
                                else ann_stale_rows)
         self.ann_index = None               # swapped in by the refresher
         self.total_write_rows = 0           # monotonic; written-row counter
-        self._ann_built_at = 0
+        # per-shard write counters drive per-shard sub-index rebuilds on the
+        # sharded backend; everywhere else there is exactly one "shard"
+        self.ann_shards = (self.backend.n_shards
+                           if isinstance(self.backend, ShardedBackend)
+                           else 1)
+        if num_entries % self.ann_shards:
+            raise ValueError(f"num_entries={num_entries} not divisible by "
+                             f"{self.ann_shards} bank shards")
+        self.shard_write_rows = np.zeros((self.ann_shards,), np.int64)
+        self._ann_shard_built_at = np.zeros((self.ann_shards,), np.int64)
         self.search_stats = {"exact": 0, "ivf": 0}
         self._ivf_fns = {}
         # entry-side (per-contribution EMA) clip; defaults to the apply-side
@@ -281,7 +314,11 @@ class KBEngine:
     # -- embedding ops -----------------------------------------------------
 
     def lookup(self, ids) -> np.ndarray:
-        """Fetch rows (applying pending lazy updates first); any id shape."""
+        """Fetch rows (applying pending lazy updates first); any id shape.
+        Deterministic under duplicate ids and pow2 padding (pads with a
+        duplicated real entry; version bumps count each touched row once)
+        — the invariant that lets the server merge concurrent lookups
+        into one batch and slice the result per caller."""
         ids = np.asarray(ids)
         flat = ids.reshape(-1).astype(np.int32)
         if flat.size == 0:
@@ -294,7 +331,9 @@ class KBEngine:
 
     def update(self, ids, values) -> None:
         """Direct write (maker push); duplicate ids resolve last-writer-wins
-        (host-side dedupe — device scatter order is unspecified)."""
+        (host-side dedupe — device scatter order is unspecified). Each
+        distinct row is charged once to the global and per-shard ANN
+        staleness clocks."""
         ids = np.asarray(ids).reshape(-1).astype(np.int32)
         if ids.size == 0:
             return
@@ -309,10 +348,14 @@ class KBEngine:
         self.state = self._update_fn(self.state, jnp.asarray(ids),
                                      jnp.asarray(values))
         self.dispatches += 1
-        self.total_write_rows += n
+        self._count_writes(ids[:n])
 
     def lazy_grad(self, ids, grads) -> None:
-        """Cache gradients (or apply immediately when lazy_update=False)."""
+        """Cache gradients (or apply immediately when lazy_update=False).
+        Padded entries carry a 0 mask and are inert; cache adds commute,
+        so a coalesced multi-client batch equals any serial interleaving.
+        Charges the touched rows to the (per-shard) ANN staleness clock —
+        the cached gradient WILL reach the table."""
         ids = np.asarray(ids).reshape(-1).astype(np.int32)
         if ids.size == 0:
             return
@@ -333,7 +376,24 @@ class KBEngine:
         # either way these rows' vectors diverge from the index snapshot.
         # Counting here (not at lookup) keeps pure reads free: a read-only
         # workload never triggers rebuilds or the stale fallback.
-        self.total_write_rows += n
+        self._count_writes(ids)
+
+    def _count_writes(self, ids: np.ndarray) -> None:
+        """Charge written rows to the global AND per-shard staleness
+        counters (shard = contiguous owner range, the ``OwnerShard`` rule).
+        Per-shard counts let the refresher rebuild one hot shard's
+        sub-index without touching the cold ones."""
+        self.total_write_rows += ids.size
+        if self.ann_shards == 1:
+            self.shard_write_rows[0] += ids.size
+        else:
+            n_local = self.num_entries // self.ann_shards
+            # clip out-of-range ids to the edge shards: the device scatter
+            # drops foreign lanes harmlessly, so host accounting must not
+            # be the path that turns a bad id into a crash
+            self.shard_write_rows += np.bincount(
+                np.clip(ids // n_local, 0, self.ann_shards - 1),
+                minlength=self.ann_shards).astype(np.int64)
 
     def flush(self) -> None:
         """Expiration path: apply every pending cached gradient now.
@@ -346,8 +406,12 @@ class KBEngine:
                   ) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k MIPS over the bank. ``mode`` overrides the engine-level
         ``search_mode`` per request; ``"ivf"`` silently falls back to the
-        exact path when the index is absent, too stale, or the backend has
-        no IVF stage-2 (sharded)."""
+        exact path when the index is absent or too stale (within budget,
+        staleness costs recall only — winners are re-scored against the
+        live table, so returned scores are always exact for the returned
+        ids). Deterministic for a fixed (state, index): the server may
+        merge same-(k, mode) requests into one batched call and slice the
+        results without changing any caller's answer."""
         queries = np.asarray(queries, np.float32)
         B = queries.shape[0]
         pad = _bucket(B) - B
@@ -356,9 +420,8 @@ class KBEngine:
         mode = self.search_mode if mode is None else mode
         idx = self.ann_index
         use_ivf = (mode == "ivf" and idx is not None
-                   and self.ann_staleness_rows <= self.ann_stale_rows
-                   and isinstance(self.backend, (DenseBackend,
-                                                 PallasBackend)))
+                   and getattr(idx, "n_shards", 1) == self.ann_shards
+                   and self.ann_staleness_rows <= self.ann_stale_rows)
         if use_ivf:
             scores, ids = self._ivf_search(q, k, idx)
             self.search_stats["ivf"] += 1
@@ -375,11 +438,18 @@ class KBEngine:
     def _ivf_search(self, q: np.ndarray, k: int, idx):
         """Two-stage search against the clustered snapshot; one jitted
         program per (k, nprobe) — index arrays are traced args, so a
-        rebuild with the same shapes reuses the compiled program."""
+        rebuild with the same shapes reuses the compiled program. The
+        sharded backend routes through the hierarchical per-shard merge
+        (``sharded_kb_nn_search_ivf``); dense/pallas through the
+        single-index two-stage search."""
         nprobe = min(self.ann_nprobe, idx.nlist)
         fn = self._ivf_fns.get((k, nprobe))
         if fn is None:
-            if isinstance(self.backend, PallasBackend):
+            if isinstance(self.backend, ShardedBackend):
+                bk = self.backend
+                impl = (lambda tbl, c, pv, pi, q: bk.nn_search_ivf(
+                    tbl, c, pv, pi, q, k, nprobe))
+            elif isinstance(self.backend, PallasBackend):
                 from repro.kernels.nn_search_ivf import ivf_search_pallas
                 interpret = self.backend.interpret
                 impl = (lambda tbl, c, pv, pi, q: ivf_search_pallas(
@@ -396,28 +466,92 @@ class KBEngine:
 
     @property
     def ann_staleness_rows(self) -> float:
-        """Rows written since the current index was built (inf if none)."""
+        """Rows written since the current index was built (inf if none).
+        On the sharded backend this is the WORST shard's staleness — the
+        value the exact-fallback budget gates on, so one hot shard past
+        budget degrades the whole bank to exact search until its sub-index
+        rebuilds."""
         if self.ann_index is None:
             return float("inf")
-        return self.total_write_rows - self._ann_built_at
+        return int((self.shard_write_rows - self._ann_shard_built_at).max())
 
-    def set_ann_index(self, index, *, built_at_writes: int) -> None:
+    @property
+    def ann_shard_staleness_rows(self) -> np.ndarray:
+        """Per-shard rows written since each sub-index was built (length
+        ``ann_shards``; +inf everywhere when no index exists). The
+        refresher's per-shard rebuild trigger."""
+        if self.ann_index is None:
+            return np.full((self.ann_shards,), np.inf)
+        return (self.shard_write_rows - self._ann_shard_built_at).astype(
+            np.float64)
+
+    def set_ann_index(self, index, *, built_at_writes=None,
+                      built_at_shard_writes=None) -> None:
         """Publish a freshly-built index (refresher thread). Index first,
         built_at second: a concurrent reader pairing the OLD index with the
         NEW counter would understate staleness and serve past the budget;
-        this order can only overstate it (spurious, safe exact fallback)."""
+        this order can only overstate it (spurious, safe exact fallback).
+        ``built_at_shard_writes``: per-shard snapshot of
+        ``shard_write_rows`` taken BEFORE the build read the table (what
+        ``rebuild_ann_index`` passes — writes racing the build then count
+        as staleness against the new index). ``built_at_writes`` is the
+        scalar form: the ``total_write_rows`` value at build time; on a
+        sharded engine the global delta since then cannot be attributed
+        per shard, so it is charged to EVERY shard — overstating
+        staleness, which only triggers spurious (safe) fallback/rebuilds.
+        With neither given, the index is treated as fresh as of NOW;
+        callers that snapshotted the table earlier must pass clocks."""
+        if built_at_shard_writes is None:
+            if built_at_writes is not None:
+                delta = max(0, self.total_write_rows - int(built_at_writes))
+                built_at_shard_writes = self.shard_write_rows - delta
+            else:
+                built_at_shard_writes = self.shard_write_rows.copy()
         self.ann_index = index
-        self._ann_built_at = built_at_writes
+        self._ann_shard_built_at = np.asarray(built_at_shard_writes,
+                                              np.int64)
 
-    def rebuild_ann_index(self, *, iters: int = 8) -> None:
+    def rebuild_ann_index(self, *, iters: int = 8,
+                          shards: Optional[list] = None) -> int:
         """Snapshot -> cluster -> pack -> swap. Safe to call from a
         background thread: the snapshot read and the final swap are atomic
-        attribute operations; everything between runs on this thread."""
-        from repro.core.ann_index import build_ivf_index
-        built_at = self.total_write_rows    # writes during the build count
-        table = np.asarray(self.state.table, np.float32)  # as staleness
-        index = build_ivf_index(table, nlist=self.ann_nlist, iters=iters)
-        self.set_ann_index(index, built_at_writes=built_at)
+        attribute operations; everything between runs on this thread.
+
+        ``shards`` (sharded backend only): rebuild just those shards'
+        sub-indexes, keeping every other sub-index — and its staleness
+        clock — untouched. A bucket-capacity overflow silently upgrades to
+        a full rebuild (detected via the returned index's ``bucket_cap``);
+        on the single-index backends ``shards`` is ignored and the whole
+        index rebuilds. Returns the number of sub-indexes actually
+        re-clustered (the refresher's ``shard_rebuilds`` accounting)."""
+        from repro.core.ann_index import (ShardedIVFIndex, build_ivf_index,
+                                          build_sharded_ivf_index)
+        built_at = self.shard_write_rows.copy()  # writes during the build
+        table = np.asarray(self.state.table, np.float32)  # count as stale
+        if self.ann_shards == 1:
+            index = build_ivf_index(table, nlist=self.ann_nlist,
+                                    iters=iters)
+            self.set_ann_index(index, built_at_shard_writes=built_at)
+            return 1
+        base = (self.ann_index
+                if isinstance(self.ann_index, ShardedIVFIndex) else None)
+        index = build_sharded_ivf_index(table, self.ann_shards,
+                                        nlist=self.ann_nlist, iters=iters,
+                                        base=base, shards=shards)
+        if index is base:                       # empty shard list: no-op
+            return 0
+        if (base is not None and shards is not None
+                and index.bucket_cap == base.bucket_cap):
+            # partial rebuild: untouched shards keep their old clocks
+            new_built = self._ann_shard_built_at.copy()
+            rebuilt = sorted({int(s) for s in shards})
+            for s in rebuilt:
+                new_built[s] = built_at[s]
+            built_at = new_built
+            self.set_ann_index(index, built_at_shard_writes=built_at)
+            return len(rebuilt)
+        self.set_ann_index(index, built_at_shard_writes=built_at)
+        return self.ann_shards                  # full (re)build
 
     def warmup(self, max_batch: int = 256) -> None:
         """Pre-compile the lookup/lazy_grad jit buckets up to ``max_batch``
@@ -437,7 +571,13 @@ class KBEngine:
     # -- introspection -----------------------------------------------------
 
     def table_snapshot(self) -> np.ndarray:
+        """Host copy of the live table. NOT flushed first: rows with
+        pending lazy gradients read as last-applied values (the server's
+        ``table_snapshot`` barriers behind queued writes; flushing is
+        still the caller's choice)."""
         return np.asarray(self.state.table)
 
     def version_snapshot(self) -> np.ndarray:
+        """Host copy of per-row version counters (bumped once per touched
+        row per applying call — the coalescing-visibility invariant)."""
         return np.asarray(self.state.version)

@@ -13,6 +13,13 @@ becomes:
 - nn_search : per-shard blocked top-k (Pallas kernel on TPU), then an
            all-gather of the (B, k) candidate sets and a global re-top-k —
            the hierarchical ScaNN-sharding pattern, payload O(B*k*shards).
+- nn_search (IVF) : each shard probes ITS OWN sub-index (per-shard k-means
+           centroids + packed buckets from ``repro.core.ann_index.
+           ShardedIVFIndex``), shortlists O(nprobe*cap) rows instead of its
+           full N/S slice, and the same hierarchical merge combines the
+           per-shard top-k. Winners are re-scored against the live sharded
+           table (owner-masked gather + one psum, payload O(B*k*D)) so a
+           stale snapshot costs recall, never score accuracy.
 
 All owner-masked gather/scatter translation lives in ONE helper
 (``OwnerShard``) instead of being re-derived per op: global ids become a
@@ -29,6 +36,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import axis_size, shard_map
@@ -272,3 +280,92 @@ def sharded_kb_nn_search(kb: KBState, queries, k: int, dist: DistContext,
         out_specs=(P(None, None), P(None, None)),
         check_vma=False,
     )(kb.table, queries)
+
+
+def sharded_kb_nn_search_ivf(table, centroids, packed_vecs, packed_ids,
+                             queries, k: int, nprobe: int, dist: DistContext,
+                             *, exclude_ids=None):
+    """Sharded two-stage IVF search with hierarchical top-k merge.
+
+    ``table``: the live (N, D) bank; ``centroids``/``packed_vecs``/
+    ``packed_ids``: a ``ShardedIVFIndex`` snapshot whose shard-major layout
+    is sharded over the same row axes as the table, so each shard's local
+    block is its own complete sub-index (global ids, -1 padding). Per
+    query, every shard probes its ``nprobe`` best local buckets — stage-2
+    work O(nprobe*cap*D) per shard instead of O(N/S*D) — keeps a local
+    running top-k, and the (B, k)-per-shard shortlists meet in an
+    all-gather + global re-top-k, the same O(B*k*S) fan-in as the exact
+    sharded path. The k winners are re-scored against the LIVE table
+    (owner-masked gather, one psum), so returned scores are exact even when
+    the snapshot is stale.
+
+    Determinism contract: a pure function of (index, table, queries) — no
+    RNG, no data-dependent shapes — so coalescing a batch of sharded-IVF
+    searches into one call returns exactly what each search returns solo.
+    ``exclude_ids`` (B, E) int32, -1 = no-op: over-fetches k+E candidates
+    and masks post-merge, matching the dense pre-mask semantics whenever
+    the shortlist holds k survivors."""
+    from repro.kernels.nn_search import NEG, overfetch_exclude_topk
+    if exclude_ids is not None:
+        return overfetch_exclude_topk(
+            lambda kk: sharded_kb_nn_search_ivf(
+                table, centroids, packed_vecs, packed_ids, queries, kk,
+                nprobe, dist),
+            table.shape[0], k, exclude_ids)
+
+    axes = kb_axes(dist)
+    specs = kb_pspecs(dist)
+    n_shards = int(np.prod([dist.mesh.shape[a] for a in axes]))
+    C_local = centroids.shape[0] // n_shards
+    nprobe = min(nprobe, C_local)
+    B, D = queries.shape
+
+    def body(table, cent, pvec, pid, q):
+        C = cent.shape[0]
+        cap = pvec.shape[0] // C
+        qf = q.astype(jnp.float32)
+        # stage 1: probe this shard's own coarse quantizer
+        cscore = qf @ cent.T.astype(jnp.float32)             # (B, C)
+        _, probes = jax.lax.top_k(cscore, nprobe)
+        # stage 2: score only the probed buckets (local shortlist)
+        cv = pvec.reshape(C, cap, D)[probes].reshape(B, nprobe * cap, D)
+        ci = pid.reshape(C, cap)[probes].reshape(B, nprobe * cap)
+        s = jnp.einsum("bd,bld->bl", qf, cv.astype(jnp.float32))
+        s = jnp.where(ci >= 0, s, NEG)
+        kk = min(k, nprobe * cap)
+        ls, sel = jax.lax.top_k(s, kk)
+        li = jnp.take_along_axis(ci, sel, axis=1)
+        if kk < k:          # degenerate tiny sub-index: pad to k candidates
+            ls = jnp.pad(ls, ((0, 0), (0, k - kk)), constant_values=NEG)
+            li = jnp.pad(li, ((0, 0), (0, k - kk)), constant_values=-1)
+        # hierarchical merge: gather every shard's shortlist, re-top-k.
+        # REVERSED axis order so the concatenation is shard-id-major
+        # (OwnerShard numbers shards first-axis-major; gathering the last
+        # axis first nests it innermost) — keeps the merged candidate
+        # order, and therefore top-k tie-breaking, bit-identical to the
+        # meshless ivf_search_sharded_jnp reference on multi-axis meshes
+        for a in reversed(axes):
+            ls = jax.lax.all_gather(ls, a, axis=1, tiled=True)
+            li = jax.lax.all_gather(li, a, axis=1, tiled=True)
+        _, gsel = jax.lax.top_k(ls, k)
+        ids = jnp.take_along_axis(li, gsel, axis=1)
+        # live re-rank: owner-masked gather + psum (payload O(B*k*D))
+        valid = ids >= 0
+        own = OwnerShard(table.shape[0], axes,
+                         jnp.where(valid, ids, 0).reshape(-1))
+        rows = jax.lax.psum(
+            own.mask(own.gather(table).astype(jnp.float32)), axes)
+        s_live = jnp.einsum("bd,bkd->bk", qf, rows.reshape(B, k, D))
+        s_live = jnp.where(valid, s_live, -jnp.inf)
+        order = jnp.argsort(-s_live, axis=-1)
+        return (jnp.take_along_axis(s_live, order, axis=1),
+                jnp.take_along_axis(jnp.where(valid, ids, -1), order,
+                                    axis=1))
+
+    idx_spec = P(axes, None)
+    return shard_map(
+        body, mesh=dist.mesh,
+        in_specs=(specs.table, idx_spec, idx_spec, P(axes), P(None, None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False,
+    )(table, centroids, packed_vecs, packed_ids, queries)

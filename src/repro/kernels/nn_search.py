@@ -26,6 +26,25 @@ from repro.compat import CompilerParams
 NEG = -1e30
 
 
+def overfetch_exclude_topk(search, n_rows: int, k: int, exclude_ids):
+    """Shared exclusion semantics for every top-k search path: over-fetch
+    ``k + E`` candidates via ``search(kk) -> (scores, ids)``, mask
+    excluded ids post-merge (-1 entries in ``exclude_ids`` are inert),
+    re-top-k. At most E of the k+E candidates can be excluded per query,
+    so whenever the candidate pool holds k survivors the result equals
+    the dense pre-mask semantics. One definition — ShardedBackend exact,
+    the sharded-IVF op, and the meshless reference all call it — so the
+    three backends cannot silently diverge."""
+    E = exclude_ids.shape[1]
+    kk = min(k + E, n_rows)
+    s, i = search(kk)
+    excl = ((i[:, :, None] == exclude_ids[:, None, :]) &
+            (exclude_ids >= 0)[:, None, :]).any(-1)
+    s = jnp.where(excl, -jnp.inf, s)
+    s2, sel = jax.lax.top_k(s, k)
+    return s2, jnp.take_along_axis(i, sel, axis=1)
+
+
 def _merge_topk(scores, ids, best_s, best_i, k: int):
     """scores/ids: (QB, M) candidates; best_s/best_i: (QB, k) running.
     Returns updated (best_s, best_i). Ties prefer lower id (stable)."""

@@ -167,6 +167,63 @@ def ivf_search_pallas(table, centroids, packed_vecs, packed_ids, queries,
 
 
 # ---------------------------------------------------------------------------
+# sharded search, host reference (oracle for the shard_map op + benchmark)
+# ---------------------------------------------------------------------------
+
+def ivf_search_sharded_jnp(table, centroids, packed_vecs, packed_ids,
+                           queries, k: int, nprobe: int, *, n_shards: int,
+                           exclude_ids=None):
+    """Meshless reference of the sharded hierarchical IVF search.
+
+    Takes a ``repro.core.ann_index.ShardedIVFIndex``'s flat shard-major
+    arrays and simulates, on one device, exactly what
+    ``repro.core.sharded_kb.sharded_kb_nn_search_ivf`` computes across a
+    mesh: per-shard stage-1 probe of the shard's OWN centroids, per-shard
+    stage-2 shortlist over its own buckets, per-shard top-k, shard-major
+    concatenation (== the op's tiled all-gather order), global re-top-k,
+    live re-rank. Bit-identical to the shard_map op on any mesh whose
+    shard count matches (tests/test_sharded_ivf.py), and to the dense
+    ``ivf_search_jnp`` when ``n_shards == 1``.
+
+    ``exclude_ids``: (B, E) int32, -1 entries inert — the shared
+    ``overfetch_exclude_topk`` semantics, same as every other backend."""
+    if exclude_ids is not None:
+        from repro.kernels.nn_search import overfetch_exclude_topk
+        return overfetch_exclude_topk(
+            lambda kk: ivf_search_sharded_jnp(
+                table, centroids, packed_vecs, packed_ids, queries, kk,
+                nprobe, n_shards=n_shards),
+            table.shape[0], k, exclude_ids)
+
+    S = n_shards
+    SC, D = centroids.shape
+    C = SC // S
+    cap = packed_vecs.shape[0] // SC
+    B = queries.shape[0]
+    nprobe = min(nprobe, C)
+    qf = queries.astype(jnp.float32)
+    cent = centroids.reshape(S, C, D)
+    cscore = jnp.einsum("bd,scd->bsc", qf, cent.astype(jnp.float32))
+    _, probes = jax.lax.top_k(cscore, nprobe)               # (B, S, nprobe)
+    sidx = jnp.arange(S)[None, :, None]
+    cv = packed_vecs.reshape(S, C, cap, D)[sidx, probes]
+    ci = packed_ids.reshape(S, C, cap)[sidx, probes].reshape(B, S, -1)
+    s = jnp.einsum("bd,bsld->bsl", qf,
+                   cv.reshape(B, S, nprobe * cap, D).astype(jnp.float32))
+    s = jnp.where(ci >= 0, s, NEG)
+    kk = min(k, nprobe * cap)
+    ls, sel = jax.lax.top_k(s, kk)                          # (B, S, kk)
+    li = jnp.take_along_axis(ci, sel, axis=2)
+    if kk < k:                  # degenerate tiny sub-index: pad per shard
+        ls = jnp.pad(ls, ((0, 0), (0, 0), (0, k - kk)), constant_values=NEG)
+        li = jnp.pad(li, ((0, 0), (0, 0), (0, k - kk)), constant_values=-1)
+    ls, li = ls.reshape(B, -1), li.reshape(B, -1)           # shard-major
+    _, gsel = jax.lax.top_k(ls, k)
+    ids = jnp.take_along_axis(li, gsel, axis=1)
+    return _rerank_live(table, queries, ids)
+
+
+# ---------------------------------------------------------------------------
 # stage 2, jnp reference (oracle + DenseBackend serving path)
 # ---------------------------------------------------------------------------
 

@@ -16,7 +16,10 @@ engine backend (dense | pallas | sharded — sharded gets a host mesh) and
 drives it with concurrent lookup/lazy_grad/nn_search clients — the Figure-1
 serving topology without the trainer attached. ``--kb-search ivf`` serves
 nn_search from the asynchronously-clustered IVF index, rebuilt by a
-background refresher thread (repro.core.ann_index).
+background refresher thread (repro.core.ann_index); with ``--kb-backend
+sharded`` each bank shard carries its own sub-index, queries merge
+per-shard shortlists hierarchically, and stale shards re-cluster
+independently. See docs/tuning.md for the knob guide.
 """
 from __future__ import annotations
 
@@ -52,11 +55,10 @@ def serve_kb(args) -> None:
                   .astype(np.float32))
     server.warmup(args.batch * args.clients)
     refresher = None
-    if args.kb_search == "ivf" and args.kb_backend == "sharded":
-        print("kb-serve: IVF has no sharded stage-2 yet (see ROADMAP); "
-              "serving exact")
-    elif args.kb_search == "ivf":
-        # index maker: clusters the bank off the serving path
+    if args.kb_search == "ivf":
+        # index maker: clusters the bank off the serving path. On the
+        # sharded backend this maintains one sub-index per shard and
+        # rebuilds stale shards independently (repro.core.ann_index).
         refresher = server.start_ann_refresher(min_period_s=0.01)
         deadline = time.time() + 120.0
         while server.engine.ann_index is None:   # first build, then serve
@@ -89,6 +91,7 @@ def serve_kb(args) -> None:
     dt = time.perf_counter() - t0
     stats = dict(server.engine.search_stats)
     rebuilds = refresher.rebuilds if refresher else 0
+    shard_rebuilds = refresher.shard_rebuilds if refresher else 0
     server.close()
     calls = args.clients * args.gen * 3
     print(f"kb-serve backend={args.kb_backend} search={args.kb_search} "
@@ -99,7 +102,7 @@ def serve_kb(args) -> None:
           f"{server.metrics['dispatches']} device dispatches for "
           f"{server.metrics['requests']} requests, "
           f"nn ivf/exact={stats['ivf']}/{stats['exact']}, "
-          f"index rebuilds={rebuilds})")
+          f"index rebuilds={rebuilds} ({shard_rebuilds} shard builds))")
 
 
 def main(argv=None):

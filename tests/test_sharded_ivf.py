@@ -1,0 +1,425 @@
+"""Sharded IVF nn_search (ISSUE 3 tentpole): per-shard sub-index build
+invariants, dense-vs-sharded parity, hierarchical-merge recall, exclude_ids
+across shard boundaries, and per-shard rebuild independence. The
+multi-device case runs in a subprocess with 8 forced host devices (same
+pattern as tests/test_sharded_kb.py)."""
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KBEngine, KnowledgeBankServer
+from repro.core.ann_index import (ShardedIVFIndex, build_ivf_index,
+                                  build_sharded_ivf_index, clustered_bank)
+from repro.core.sharded_kb import sharded_kb_nn_search_ivf
+from repro.kernels.nn_search_ivf import ivf_search_jnp, ivf_search_sharded_jnp
+from repro.kernels.ref import nn_search_ref
+from repro.launch.mesh import make_host_mesh
+from repro.sharding.partition import DistContext
+
+
+def _one_dev_dist():
+    return DistContext(mesh=make_host_mesh((1, 1), ("data", "model")))
+
+
+# ---------------------------------------------------------------------------
+# build invariants
+# ---------------------------------------------------------------------------
+
+def test_sharded_build_packs_each_shard_with_its_own_global_ids():
+    n, d, S = 256, 8, 4
+    table = clustered_bank(n, d, 8, seed=0)
+    idx = build_sharded_ivf_index(table, S, nlist=8, iters=5)
+    assert isinstance(idx, ShardedIVFIndex) and idx.n_shards == S
+    C, cap = idx.nlist, idx.bucket_cap
+    pids = np.asarray(idx.packed_ids)
+    n_local = n // S
+    seen = []
+    for s in range(S):
+        block = pids[s * C * cap:(s + 1) * C * cap]
+        real = block[block >= 0]
+        # every id in shard s's block is a row shard s owns
+        assert ((real >= s * n_local) & (real < (s + 1) * n_local)).all()
+        seen.extend(real.tolist())
+    assert sorted(seen) == list(range(n))       # all rows, exactly once
+    # packed vectors mirror the snapshot rows
+    pv = np.asarray(idx.packed_vecs)
+    np.testing.assert_allclose(pv[pids >= 0], table[pids[pids >= 0]], atol=0)
+
+
+def test_sharded_build_rejects_indivisible_banks():
+    with pytest.raises(ValueError):
+        build_sharded_ivf_index(clustered_bank(100, 8, 4), 3, nlist=4)
+
+
+def test_sharded_build_rejects_out_of_range_shard_ids():
+    table = clustered_bank(256, 8, 8, seed=0)
+    base = build_sharded_ivf_index(table, 4, nlist=8, iters=4)
+    for bad in ([4], [-1]):
+        with pytest.raises(ValueError):
+            build_sharded_ivf_index(table, 4, nlist=8, iters=4, base=base,
+                                    shards=bad)
+
+
+def test_sharded_build_is_deterministic():
+    table = clustered_bank(512, 16, 8, seed=5)
+    a = build_sharded_ivf_index(table, 4, nlist=8, iters=5)
+    b = build_sharded_ivf_index(table, 4, nlist=8, iters=5)
+    np.testing.assert_array_equal(np.asarray(a.packed_ids),
+                                  np.asarray(b.packed_ids))
+    np.testing.assert_allclose(np.asarray(a.centroids),
+                               np.asarray(b.centroids), atol=0)
+
+
+# ---------------------------------------------------------------------------
+# search: parity + recall + exclusions
+# ---------------------------------------------------------------------------
+
+def test_single_shard_host_reference_matches_dense_ivf():
+    """S=1 sharded search degenerates to exactly the dense two-stage
+    search: same clustering, same shortlist, same live re-rank."""
+    table = clustered_bank(512, 16, 8, seed=2)
+    dense = build_ivf_index(table, nlist=8, iters=5)
+    shard = build_sharded_ivf_index(table, 1, nlist=8, iters=5)
+    q = jnp.asarray(table[:6] + 0.01)
+    s_d, i_d = ivf_search_jnp(jnp.asarray(table), dense.centroids,
+                              dense.packed_vecs, dense.packed_ids, q, 5, 3)
+    s_s, i_s = ivf_search_sharded_jnp(jnp.asarray(table), shard.centroids,
+                                      shard.packed_vecs, shard.packed_ids,
+                                      q, 5, 3, n_shards=1)
+    np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_s))
+    np.testing.assert_allclose(np.asarray(s_d), np.asarray(s_s), atol=1e-5)
+
+
+def test_shard_map_op_matches_host_reference_on_one_device_mesh():
+    dist = _one_dev_dist()
+    table = clustered_bank(1024, 16, 16, seed=1)
+    idx = build_sharded_ivf_index(table, 1, nlist=16, iters=6)
+    q = jnp.asarray(table[:8] + 0.01)
+    args = (jnp.asarray(table), idx.centroids, idx.packed_vecs,
+            idx.packed_ids)
+    s_op, i_op = sharded_kb_nn_search_ivf(*args, q, 5, 4, dist)
+    s_rf, i_rf = ivf_search_sharded_jnp(*args, q, 5, 4, n_shards=1)
+    np.testing.assert_array_equal(np.asarray(i_op), np.asarray(i_rf))
+    np.testing.assert_allclose(np.asarray(s_op), np.asarray(s_rf), atol=1e-5)
+
+
+def test_multi_shard_hierarchical_merge_recall():
+    """Per-shard sub-indexes + hierarchical merge keep recall@10 >= 0.95 on
+    clustered banks (every shard sees every cluster, so per-shard nprobe
+    still covers the query's home clusters)."""
+    n, S = 2048, 8
+    table = clustered_bank(n, 16, 24, seed=3)
+    idx = build_sharded_ivf_index(table, S, nlist=16, iters=6)
+    qk = jax.random.randint(jax.random.key(9), (16,), 0, n)
+    q = jnp.asarray(table)[qk] + 0.05
+    _, exact = nn_search_ref(q, jnp.asarray(table), 10)
+    _, approx = ivf_search_sharded_jnp(jnp.asarray(table), idx.centroids,
+                                       idx.packed_vecs, idx.packed_ids,
+                                       q, 10, 4, n_shards=S)
+    exact, approx = np.asarray(exact), np.asarray(approx)
+    recall = np.mean([len(set(exact[b]) & set(approx[b])) / 10
+                      for b in range(16)])
+    assert recall >= 0.95, recall
+
+
+def test_engine_sharded_ivf_matches_dense_ivf():
+    """ISSUE 3 acceptance: search_mode='ivf' on ShardedBackend no longer
+    falls back to exact — it serves through the hierarchical shard_map op
+    and returns the same ids as the dense engine on an identical bank."""
+    dist = _one_dev_dist()
+    n, d = 1024, 16
+    table = clustered_bank(n, d, 16, seed=1)
+    dense = KBEngine(n, d, backend="dense", search_mode="ivf",
+                     ann_nlist=16, ann_nprobe=4)
+    shard = KBEngine(n, d, backend="sharded", dist=dist, search_mode="ivf",
+                     ann_nlist=16, ann_nprobe=4)
+    for e in (dense, shard):
+        e.update(np.arange(n), table)
+        e.rebuild_ann_index()
+    q = table[np.arange(0, n, 64)] + 0.01
+    s_d, i_d = dense.nn_search(q, 10)
+    s_s, i_s = shard.nn_search(q, 10)
+    # served from the index, not the exact fallback
+    assert shard.search_stats == {"exact": 0, "ivf": 1}
+    np.testing.assert_array_equal(i_d, i_s)
+    np.testing.assert_allclose(s_d, s_s, atol=1e-5)
+
+
+def test_exclude_ids_across_shard_boundaries():
+    """Excluded ids are honored no matter which shard owns them: for each
+    query, ban its top-3 exact neighbors (which straddle shard boundaries
+    by construction) and check the result equals exact search with the
+    same exclusions applied."""
+    n, S, k = 1024, 4, 8
+    n_local = n // S
+    table = clustered_bank(n, 16, 12, seed=7).copy()
+    # make each query's neighborhood span shards: duplicate its row into
+    # three different shards with tiny perturbations
+    for b, row in enumerate(range(0, 64, 8)):
+        for s in (1, 2, 3):
+            table[s * n_local + b] = table[row] + 0.001 * (s + 1)
+    idx = build_sharded_ivf_index(table, S, nlist=16, iters=6)
+    q = jnp.asarray(table[np.arange(0, 64, 8)] + 0.0005)
+    _, top = nn_search_ref(q, jnp.asarray(table), 3)
+    exclude = jnp.asarray(np.asarray(top))          # (B, 3), spans shards
+    owners = np.unique(np.asarray(exclude) // n_local)
+    assert owners.size > 1                          # truly cross-shard
+    s_iv, i_iv = ivf_search_sharded_jnp(
+        jnp.asarray(table), idx.centroids, idx.packed_vecs, idx.packed_ids,
+        q, k, 4, n_shards=S, exclude_ids=exclude)
+    i_iv = np.asarray(i_iv)
+    for b in range(q.shape[0]):
+        banned = set(np.asarray(exclude)[b].tolist())
+        assert not (set(i_iv[b].tolist()) & banned), b
+    # against exact-with-exclusion (recall bound, the index is approximate)
+    scores = np.asarray(q) @ table.T
+    np.put_along_axis(scores, np.asarray(exclude), -np.inf, axis=1)
+    exact_ids = np.argsort(-scores, axis=1)[:, :k]
+    recall = np.mean([len(set(exact_ids[b]) & set(i_iv[b])) / k
+                      for b in range(q.shape[0])])
+    assert recall >= 0.95, recall
+
+
+def test_shard_map_op_exclude_ids_on_one_device_mesh():
+    dist = _one_dev_dist()
+    table = clustered_bank(512, 16, 8, seed=4)
+    idx = build_sharded_ivf_index(table, 1, nlist=8, iters=5)
+    q = jnp.asarray(table[:4] + 0.01)
+    args = (jnp.asarray(table), idx.centroids, idx.packed_vecs,
+            idx.packed_ids)
+    excl = jnp.asarray([[0, 1, -1], [1, 2, 3], [-1, -1, -1], [3, 7, 9]])
+    s_op, i_op = sharded_kb_nn_search_ivf(*args, q, 5, 8, dist,
+                                          exclude_ids=excl)
+    s_rf, i_rf = ivf_search_sharded_jnp(*args, q, 5, 8, n_shards=1,
+                                        exclude_ids=excl)
+    np.testing.assert_array_equal(np.asarray(i_op), np.asarray(i_rf))
+    for b in range(4):
+        banned = {int(e) for e in np.asarray(excl)[b] if e >= 0}
+        assert not (set(np.asarray(i_op)[b].tolist()) & banned), b
+
+
+# ---------------------------------------------------------------------------
+# per-shard rebuild independence
+# ---------------------------------------------------------------------------
+
+def test_partial_rebuild_touches_only_requested_shards():
+    n, S = 2048, 4
+    table = clustered_bank(n, 16, 24, seed=3)
+    base = build_sharded_ivf_index(table, S, nlist=16, iters=6)
+    n_local = n // S
+    # clustered perturbation of shard 1's rows (bucket sizes stay stable)
+    t2 = table.copy()
+    t2[n_local:2 * n_local] *= 1.01
+    idx = build_sharded_ivf_index(t2, S, nlist=16, iters=6, base=base,
+                                  shards=[1])
+    assert idx.bucket_cap == base.bucket_cap
+    C, cap = idx.nlist, idx.bucket_cap
+    for s in range(S):
+        blk = slice(s * C * cap, (s + 1) * C * cap)
+        old_v = np.asarray(base.packed_vecs[blk])
+        new_v = np.asarray(idx.packed_vecs[blk])
+        if s == 1:
+            assert not np.array_equal(old_v, new_v)     # re-snapshotted
+        else:
+            np.testing.assert_array_equal(old_v, new_v)  # untouched
+            np.testing.assert_array_equal(
+                np.asarray(base.centroids[s * C:(s + 1) * C]),
+                np.asarray(idx.centroids[s * C:(s + 1) * C]))
+
+
+def test_partial_rebuild_with_empty_shard_list_is_noop():
+    table = clustered_bank(512, 8, 8, seed=9)
+    base = build_sharded_ivf_index(table, 4, nlist=8, iters=4)
+    assert build_sharded_ivf_index(table, 4, nlist=8, iters=4, base=base,
+                                   shards=[]) is base
+
+
+def test_out_of_range_write_ids_do_not_crash_staleness_accounting():
+    """The owner-masked scatter drops foreign lanes; host-side per-shard
+    accounting must be equally tolerant (clip to edge shards). Forced to
+    a 4-shard layout because a 1-device mesh collapses to one shard."""
+    eng = KBEngine(64, 8)
+    eng.ann_shards = 4
+    eng.shard_write_rows = np.zeros(4, np.int64)
+    eng._count_writes(np.array([-1, 70, 3]))
+    assert eng.total_write_rows == 3
+    assert eng.shard_write_rows.tolist() == [2, 0, 0, 1]
+
+
+def test_set_ann_index_scalar_built_at_charges_every_shard():
+    """The scalar ``built_at_writes`` form cannot attribute the global
+    write delta per shard, so it must charge it to EVERY shard —
+    overstating staleness (safe: spurious fallback), never hiding
+    build-concurrent writes. Shards faked in: a 1-device mesh collapses
+    to one shard."""
+    eng = KBEngine(64, 8)
+    eng.ann_shards = 4
+    eng.shard_write_rows = np.array([10, 0, 0, 5], np.int64)
+    eng.total_write_rows = 15
+    idx = build_ivf_index(np.eye(8, dtype=np.float32), nlist=2, iters=2)
+    eng.set_ann_index(idx, built_at_writes=12)      # 3 written since build
+    assert (eng.ann_shard_staleness_rows == 3).all()
+    assert eng.ann_staleness_rows == 3
+
+
+def test_partial_rebuild_upgrades_to_full_when_capacity_grows():
+    """A rebuilt shard whose largest bucket outgrows the common capacity
+    forces a repack of every shard — detected via bucket_cap, never by
+    corrupting the layout."""
+    n, S = 512, 4
+    table = clustered_bank(n, 8, 16, seed=6)
+    base = build_sharded_ivf_index(table, S, nlist=16, iters=6)
+    t2 = table.copy()
+    # collapse shard 2's rows onto one point: one bucket swallows the slice
+    t2[2 * (n // S):3 * (n // S)] = t2[2 * (n // S)]
+    idx = build_sharded_ivf_index(t2, S, nlist=16, iters=6, base=base,
+                                  shards=[2])
+    assert idx.bucket_cap > base.bucket_cap
+    pids = np.asarray(idx.packed_ids)
+    assert sorted(pids[pids >= 0].tolist()) == list(range(n))
+
+
+# ---------------------------------------------------------------------------
+# server integration: coalescing + refresher
+# ---------------------------------------------------------------------------
+
+def test_coalesced_sharded_ivf_searches_are_deterministic():
+    """Sharded-IVF results are a pure function of (index, table, query):
+    searches merged by the coalescing server return exactly what the same
+    search returns solo on an identical engine."""
+    dist = _one_dev_dist()
+    n, d = 512, 16
+    table = clustered_bank(n, d, 8, seed=4)
+
+    def fresh_engine():
+        e = KBEngine(n, d, backend="sharded", dist=dist, search_mode="ivf",
+                     ann_nlist=8, ann_nprobe=2)
+        e.update(np.arange(n), table)
+        e.rebuild_ann_index()
+        return e
+
+    solo = fresh_engine()
+    queries = {t: table[t * 8:t * 8 + 4] + 0.01 for t in range(8)}
+    expected = {t: solo.nn_search(queries[t], 5) for t in range(8)}
+
+    srv = KnowledgeBankServer(engine=fresh_engine(), coalesce=True,
+                              coalesce_window_s=0.05)
+    results = {}
+
+    def do_search(t):
+        results[t] = srv.nn_search(queries[t], 5)
+
+    threads = [threading.Thread(target=do_search, args=(t,))
+               for t in range(8)]
+    d0 = srv.metrics["dispatches"]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    merged = srv.metrics["dispatches"] - d0
+    srv.close()
+    assert merged < 8, merged                       # searches merged
+    assert srv.engine.search_stats["exact"] == 0    # served from the index
+    for t in range(8):
+        np.testing.assert_array_equal(results[t][1], expected[t][1],
+                                      err_msg=f"thread {t} ids")
+        np.testing.assert_allclose(results[t][0], expected[t][0], atol=1e-5,
+                                   err_msg=f"thread {t} scores")
+
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import os, time
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import KBEngine
+    from repro.core.ann_index import (IVFRefresher, build_sharded_ivf_index,
+                                      clustered_bank)
+    from repro.core.sharded_kb import sharded_kb_nn_search_ivf
+    from repro.kernels.nn_search_ivf import ivf_search_sharded_jnp
+    from repro.kernels.ref import nn_search_ref
+    from repro.sharding.partition import DistContext
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    dist = DistContext(mesh=mesh)
+    n, d, S = 2048, 16, 8
+    table = clustered_bank(n, d, 24, seed=3)
+
+    # shard_map op == meshless host reference, bit for bit
+    idx = build_sharded_ivf_index(table, S, nlist=16, iters=6)
+    q = jnp.asarray(table[:16] + 0.02)
+    args = (jnp.asarray(table), idx.centroids, idx.packed_vecs,
+            idx.packed_ids)
+    s_op, i_op = sharded_kb_nn_search_ivf(*args, q, 10, 4, dist)
+    s_rf, i_rf = ivf_search_sharded_jnp(*args, q, 10, 4, n_shards=S)
+    assert np.array_equal(np.asarray(i_op), np.asarray(i_rf)), "ids"
+    assert np.allclose(np.asarray(s_op), np.asarray(s_rf), atol=1e-5), "s"
+
+    # tie case: identical rows duplicated into EVERY shard force equal
+    # scores, so bit-identity requires the op's all-gather concatenation
+    # to match the reference's shard-id-major order (multi-axis meshes
+    # gather axes reversed — regression test for the ordering bug)
+    tie = np.tile(table[: n // S], (S, 1))
+    tidx = build_sharded_ivf_index(tie, S, nlist=16, iters=4)
+    targs = (jnp.asarray(tie), tidx.centroids, tidx.packed_vecs,
+             tidx.packed_ids)
+    tq = jnp.asarray(tie[:8] + 0.001)
+    ts_op, ti_op = sharded_kb_nn_search_ivf(*targs, tq, 10, 4, dist)
+    ts_rf, ti_rf = ivf_search_sharded_jnp(*targs, tq, 10, 4, n_shards=S)
+    assert np.array_equal(np.asarray(ti_op), np.asarray(ti_rf)), "tie ids"
+    _, exact = nn_search_ref(q, jnp.asarray(table), 10)
+    rec = np.mean([len(set(np.asarray(exact)[b])
+                       & set(np.asarray(i_op)[b])) / 10 for b in range(16)])
+    assert rec >= 0.95, rec
+
+    # engine: per-shard staleness + independent sub-index rebuilds
+    eng = KBEngine(n, d, backend="sharded", dist=dist, search_mode="ivf",
+                   ann_nlist=16, ann_nprobe=4)
+    assert eng.ann_shards == S
+    eng.update(np.arange(n), table)
+    eng.rebuild_ann_index()
+    n_local = n // S
+    eng.update(np.arange(3 * n_local, 4 * n_local),
+               table[3 * n_local:4 * n_local] * 1.01)
+    st = eng.ann_shard_staleness_rows
+    assert st[3] == n_local and st[[0,1,2,4,5,6,7]].sum() == 0, st
+    old = np.asarray(eng.ann_index.packed_vecs).copy()
+    C, cap = eng.ann_index.nlist, eng.ann_index.bucket_cap
+
+    # refresher rebuilds ONLY the stale shard, off the serving path
+    ref = IVFRefresher(eng, rebuild_shard_rows=64, iters=4,
+                       min_period_s=0.001)
+    ref.start()
+    deadline = time.time() + 60.0
+    while ref.shard_rebuilds == 0 and time.time() < deadline:
+        time.sleep(0.01)
+    ref.stop()
+    assert ref.last_error is None, ref.last_error
+    assert ref.shard_rebuilds == 1, ref.shard_rebuilds   # just shard 3
+    assert eng.ann_index.bucket_cap == cap
+    new = np.asarray(eng.ann_index.packed_vecs)
+    for s in range(S):
+        blk = slice(s * C * cap, (s + 1) * C * cap)
+        changed = not np.array_equal(old[blk], new[blk])
+        assert changed == (s == 3), (s, changed)
+    st = eng.ann_shard_staleness_rows
+    assert st.sum() == 0, st
+    s2, i2 = eng.nn_search(np.asarray(q), 10)
+    assert eng.search_stats["ivf"] >= 1
+    print("SHARDED_IVF_8DEV_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_ivf_8_devices_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "SHARDED_IVF_8DEV_OK" in r.stdout, r.stdout + r.stderr

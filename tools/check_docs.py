@@ -1,0 +1,88 @@
+"""Docs CI: keep README/docs honest.
+
+Two checks, zero dependencies:
+
+1. **Snippet execution** — every fenced ```python block in README.md and
+   docs/*.md is extracted and executed via ``python -c`` with
+   ``PYTHONPATH=src`` from the repo root. Doc code that drifts from the
+   API fails CI, not a reader. (Shell examples use ```bash and are not
+   executed; illustrative non-runnable text uses ```text.)
+2. **Link check** — every relative markdown link in README.md, docs/,
+   and ROADMAP.md must resolve to an existing file (anchors stripped;
+   http(s)/mailto links skipped — no network in CI).
+
+Usage:  python tools/check_docs.py
+Exit code 0 = all snippets ran and all links resolve.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SNIPPET_FILES = ["README.md"]
+LINK_FILES = ["README.md", "ROADMAP.md"]
+for name in sorted(os.listdir(os.path.join(ROOT, "docs"))):
+    if name.endswith(".md"):
+        SNIPPET_FILES.append(os.path.join("docs", name))
+        LINK_FILES.append(os.path.join("docs", name))
+
+FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+# [text](target) — ignore images' leading ! (same target rules apply)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def run_snippets() -> int:
+    failures = 0
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    for rel in SNIPPET_FILES:
+        text = open(os.path.join(ROOT, rel)).read()
+        for i, m in enumerate(FENCE_RE.finditer(text)):
+            code = m.group(1)
+            r = subprocess.run([sys.executable, "-c", code], env=env,
+                               cwd=ROOT, capture_output=True, text=True,
+                               timeout=600)
+            tag = f"{rel} python block #{i + 1}"
+            if r.returncode != 0:
+                failures += 1
+                print(f"FAIL {tag}\n{r.stdout}{r.stderr}", file=sys.stderr)
+            else:
+                print(f"ok   {tag}")
+    return failures
+
+
+def check_links() -> int:
+    failures = 0
+    for rel in LINK_FILES:
+        path = os.path.join(ROOT, rel)
+        text = open(path).read()
+        base = os.path.dirname(path)
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            resolved = os.path.normpath(
+                os.path.join(base, target.split("#")[0]))
+            if not os.path.exists(resolved):
+                failures += 1
+                print(f"FAIL {rel}: broken link -> {target}",
+                      file=sys.stderr)
+        print(f"ok   {rel} links")
+    return failures
+
+
+def main() -> int:
+    bad = run_snippets() + check_links()
+    if bad:
+        print(f"{bad} doc check(s) failed", file=sys.stderr)
+        return 1
+    print("docs ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
