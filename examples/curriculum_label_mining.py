@@ -21,8 +21,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import (feature_store_create, fs_update_labels,
-                        graph_agreement_labels, kb_create, kb_update,
-                        make_embed_fn, run_async_training)
+                        graph_agreement_labels, kb_create, make_embed_fn,
+                        make_kb_ops, run_async_training)
 from repro.data import SyntheticGraphCorpus
 from repro.models import build_model
 from repro.sharding.partition import DistContext
@@ -42,13 +42,16 @@ def main():
                              use_makers=False, reg_weight=0.0, lr=3e-3)
     params = res.final_params
     embed = jax.jit(make_embed_fn(model, dist))
+    # all bank traffic below goes through the KBOps facade — the backend
+    # (dense here; sharded on a mesh) is picked once, not per call site
+    ops = make_kb_ops(dist)
 
     # --- knowledge maker pass 1: embed every node into the bank ----------
     kb = kb_create(n_nodes, cfg.d_model)
     for lo in range(0, n_nodes, 128):
         ids = np.arange(lo, min(lo + 128, n_nodes))
         emb = embed(params, jnp.asarray(corpus.node_tokens(ids)[:, :-1]))
-        kb = kb_update(kb, jnp.asarray(ids), emb)
+        kb = ops.update(kb, jnp.asarray(ids), emb)
 
     fs = feature_store_create(n_nodes, 8)
     lab = corpus.labeled_ids
@@ -79,7 +82,7 @@ def main():
     unlabeled = np.setdiff1d(np.arange(n_nodes), lab)
     pred, conf = graph_agreement_labels(
         kb, fs, jnp.asarray(emb_all[unlabeled]), jnp.asarray(unlabeled),
-        k=8, num_classes=n_classes)
+        k=8, num_classes=n_classes, kb_ops=ops)
     acc_unl = (np.asarray(pred) == corpus.true_labels[unlabeled]).mean()
     print(f"graph-agreement labels for {len(unlabeled)} unlabeled nodes: "
           f"acc {acc_unl:.3f}")

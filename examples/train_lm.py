@@ -8,6 +8,11 @@ trains a ~6M model for 60 steps; --preset full runs the 100M config.
 
   PYTHONPATH=src python examples/train_lm.py --preset tiny
   PYTHONPATH=src python examples/train_lm.py --preset full --steps 300
+
+--preset async runs the same tiny model through the asynchronous topology
+(launch/train.py --makers): trainer + label_mining + graph_agreement maker
+threads against one coalescing KB server, per-maker counters printed at
+the end. Every preset's KB traffic goes through the KBOps engine facade.
 """
 import argparse
 import os
@@ -27,6 +32,11 @@ PRESETS = {
               "--nodes", "2048"],
     "tiny": ["--arch", "yi-6b", "--layers", "2", "--seq", "64",
              "--batch", "8", "--steps", "60", "--nodes", "1024"],
+    # the async CARLS topology: trainer + maker threads on one KB server
+    "async": ["--arch", "yi-6b", "--layers", "2", "--seq", "64",
+              "--batch", "8", "--steps", "60", "--nodes", "1024",
+              "--makers", "label_mining,graph_agreement",
+              "--ckpt-period", "5"],
 }
 
 

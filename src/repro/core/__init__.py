@@ -10,9 +10,9 @@ from repro.core.sharded_kb import (kb_axes, kb_pspecs, sharded_kb_flush,
                                    sharded_kb_nn_search,
                                    sharded_kb_nn_search_ivf,
                                    sharded_kb_update)
-from repro.core.kb_engine import (DenseBackend, KBBackend, KBEngine,
+from repro.core.kb_engine import (DenseBackend, KBBackend, KBEngine, KBOps,
                                   PallasBackend, ShardedBackend,
-                                  make_backend)
+                                  make_backend, make_kb_ops)
 from repro.core.ann_index import (IVFIndex, IVFRefresher, ShardedIVFIndex,
                                   build_ivf_index, build_sharded_ivf_index,
                                   kmeans)
@@ -21,9 +21,12 @@ from repro.core.trainer import (make_async_train_fns, make_carls_train_step,
 from repro.core.knowledge_maker import (graph_agreement_labels,
                                         make_embed_fn,
                                         make_embedding_refresh,
-                                        make_graph_builder, make_label_mining)
+                                        make_graph_builder, make_label_mining,
+                                        vote_agreement_labels)
 from repro.core.async_runtime import (AsyncRunResult, KnowledgeBankServer,
-                                      MakerLoop, run_async_training)
+                                      MakerJob, MakerRuntime,
+                                      SharedFeatureStore, format_maker_stats,
+                                      run_async_training)
 
 __all__ = [
     "FeatureStore", "KBState", "feature_store_create", "fs_lookup_neighbors",
@@ -32,14 +35,14 @@ __all__ = [
     "kb_axes", "kb_pspecs", "sharded_kb_flush", "sharded_kb_lazy_grad",
     "sharded_kb_lookup", "sharded_kb_nn_search", "sharded_kb_nn_search_ivf",
     "sharded_kb_update",
-    "DenseBackend", "KBBackend", "KBEngine", "PallasBackend",
-    "ShardedBackend", "make_backend",
+    "DenseBackend", "KBBackend", "KBEngine", "KBOps", "PallasBackend",
+    "ShardedBackend", "make_backend", "make_kb_ops",
     "IVFIndex", "IVFRefresher", "ShardedIVFIndex", "build_ivf_index",
     "build_sharded_ivf_index", "kmeans",
     "make_async_train_fns", "make_carls_train_step",
     "make_inline_baseline_step", "model_loss",
     "graph_agreement_labels", "make_embed_fn", "make_embedding_refresh",
-    "make_graph_builder", "make_label_mining",
-    "AsyncRunResult", "KnowledgeBankServer", "MakerLoop",
-    "run_async_training",
+    "make_graph_builder", "make_label_mining", "vote_agreement_labels",
+    "AsyncRunResult", "KnowledgeBankServer", "MakerJob", "MakerRuntime",
+    "SharedFeatureStore", "format_maker_stats", "run_async_training",
 ]

@@ -67,6 +67,25 @@ def clustered_bank(n: int, dim: int, n_centers: int, *, noise: float = 0.15,
                       + noise * jax.random.normal(kn, (n, dim)), np.float32)
 
 
+def _bucket_occupancy_stats(packed_ids, nlist: int, cap: int) -> dict:
+    """Bucket-skew summary for one sub-index's packed layout. ``skew`` is
+    capacity over mean occupancy — the padding-waste factor the ROADMAP's
+    skewed-bank item tracks (1.0 = perfectly balanced buckets);
+    ``headroom`` is how many more rows the fullest bucket can take before
+    the next rebuild forces a capacity upgrade (and, sharded, a full
+    repack)."""
+    occ = (np.asarray(packed_ids).reshape(nlist, cap) >= 0).sum(axis=1)
+    mean = float(occ.mean())
+    return {
+        "nlist": nlist,
+        "bucket_cap": cap,
+        "mean_occupancy": mean,
+        "max_occupancy": int(occ.max()),
+        "skew": float(cap / max(mean, 1e-9)),
+        "headroom": int(cap - occ.max()),
+    }
+
+
 class IVFIndex:
     """Immutable clustered snapshot of a bank table (not a pytree — the
     engine passes the arrays to its jitted search fn individually)."""
@@ -82,6 +101,12 @@ class IVFIndex:
         self.nlist = nlist
         self.bucket_cap = bucket_cap
         self.n_rows = n_rows
+
+    def bucket_stats(self) -> dict:
+        """Bucket-occupancy skew of this snapshot (see
+        ``_bucket_occupancy_stats``)."""
+        return _bucket_occupancy_stats(self.packed_ids, self.nlist,
+                                       self.bucket_cap)
 
 
 @jax.jit
@@ -223,6 +248,21 @@ class ShardedIVFIndex:
         self.nlist = nlist              # per shard
         self.bucket_cap = bucket_cap
         self.n_rows = n_rows
+
+    def shard_stats(self) -> list:
+        """Per-shard bucket-occupancy skew (capacity vs mean occupancy —
+        the cross-shard load view the ROADMAP asked for). The capacity is
+        COMMON across shards, so one skewed shard inflates every shard's
+        padding; a shard whose ``headroom`` approaches 0 is the one whose
+        next rebuild will force a full repack at a larger capacity."""
+        pid = np.asarray(self.packed_ids).reshape(self.n_shards, -1)
+        out = []
+        for s in range(self.n_shards):
+            st = _bucket_occupancy_stats(pid[s], self.nlist,
+                                         self.bucket_cap)
+            st["shard"] = s
+            out.append(st)
+        return out
 
 
 def build_sharded_ivf_index(table, n_shards: int, *, nlist: int = 64,

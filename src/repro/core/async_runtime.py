@@ -12,9 +12,15 @@ the pluggable KB engine (``repro.core.kb_engine``):
   dispatch — the RPC-amortization trick CARLS' DynamicEmbedding servers and
   TF-GNN's bulk graph services use, in-process. Set ``coalesce=False`` for
   the per-call locked baseline (kept as the benchmark ablation).
-- ``MakerLoop`` (thread): repeatedly loads the LATEST checkpoint published
-  by the trainer, re-encodes a round-robin slice of nodes, and pushes
-  embeddings. Runs concurrently with — and never blocks — training.
+- ``MakerRuntime`` + ``MakerJob``: the paper's knowledge makers as
+  independently-paced background engine clients — the same
+  load-latest-checkpoint / compute / push loop the ``IVFRefresher`` index
+  maker runs, generalized over the four maker types (``embedding_refresh``,
+  ``label_mining``, ``graph_agreement``, ``graph_builder``). Every job tags
+  its writes with the checkpoint step it loaded, so staleness is measurable
+  PER MAKER (``ckpt_version_lag``); per-job counters (``maker_steps``,
+  ``rows_written``) surface through ``KnowledgeBankServer.maker_stats``.
+  Label/graph knowledge lands in a lock-protected ``SharedFeatureStore``.
 - ``run_async_training``: the trainer loop. Each step it (1) looks up
   neighbor features + embeddings from the server, (2) runs the jitted train
   core, (3) hands the neighbor-embedding gradients back to the server's lazy
@@ -50,7 +56,7 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +64,9 @@ import numpy as np
 
 from repro.checkpoint import MemoryCheckpointStore
 from repro.core.kb_engine import KBEngine
+from repro.core.knowledge_bank import (feature_store_create, fs_update_labels,
+                                       fs_update_neighbors)
+from repro.core.knowledge_maker import vote_agreement_labels
 from repro.core.trainer import make_async_train_fns
 from repro.data.pipeline import SyntheticGraphCorpus
 from repro.models.model import LM
@@ -70,13 +79,13 @@ class _Request:
     ``meta`` carries the op's step tag (lookup: trainer_step; update:
     src_step) so staleness accounting happens in execution order."""
 
-    __slots__ = ("op", "ids", "payload", "k", "mode", "shape", "meta",
-                 "event", "result", "error")
+    __slots__ = ("op", "ids", "payload", "k", "mode", "excl", "shape",
+                 "meta", "event", "result", "error")
 
     def __init__(self, op, ids=None, payload=None, k=None, mode=None,
-                 shape=None, meta=0):
+                 excl=None, shape=None, meta=0):
         self.op, self.ids, self.payload, self.k = op, ids, payload, k
-        self.mode, self.shape, self.meta = mode, shape, meta
+        self.mode, self.excl, self.shape, self.meta = mode, excl, shape, meta
         self.event = threading.Event()
         self.result = None
         self.error = None
@@ -94,7 +103,13 @@ def _mergeable(prev: _Request, r: _Request) -> bool:
         return False
     if r.op in ("lookup", "update", "lazy_grad"):
         return True
-    return r.op == "nn" and prev.k == r.k and prev.mode == r.mode
+    if r.op != "nn" or prev.k != r.k or prev.mode != r.mode:
+        return False
+    # exclusion lists concatenate row-aligned with the queries, so merged
+    # requests must agree on the per-query exclusion width (incl. "none")
+    pw = None if prev.excl is None else prev.excl.shape[1]
+    rw = None if r.excl is None else r.excl.shape[1]
+    return pw == rw
 
 
 class KnowledgeBankServer:
@@ -123,6 +138,7 @@ class KnowledgeBankServer:
                               ann_stale_rows=ann_stale_rows)
         self.engine = engine
         self._ann_refresher = None
+        self._maker_runtime = None
         self.coalesce = coalesce
         self.coalesce_window_s = coalesce_window_s
         self.max_coalesce = max_coalesce
@@ -181,18 +197,26 @@ class KnowledgeBankServer:
         """Apply every pending cached gradient now (expiration path)."""
         self._submit(_Request("flush"))
 
-    def nn_search(self, queries, k: int, *, mode: Optional[str] = None):
+    def nn_search(self, queries, k: int, *, mode: Optional[str] = None,
+                  exclude_ids=None):
         """Top-k MIPS over the bank. ``mode`` overrides the engine's
-        ``search_mode`` per request (exact | ivf); only same-mode same-k
-        searches coalesce, because a merged run must be one compiled
-        program observing one index snapshot — that, plus the search being
-        a pure function of (state, index, queries) on every backend
-        (including the sharded per-shard-sub-index merge), makes the merge
-        invisible to callers. IVF falls back to exact when the index is
-        absent or past its staleness budget; returned scores are always
-        live (re-ranked), so staleness costs recall only."""
-        return self._submit(_Request("nn", payload=np.asarray(queries), k=k,
-                                     mode=mode))
+        ``search_mode`` per request (exact | ivf); only same-(k, mode,
+        exclusion-width) searches coalesce, because a merged run must be
+        one compiled program observing one index snapshot — that, plus
+        the search being a pure function of (state, index, queries) on
+        every backend (including the sharded per-shard-sub-index merge),
+        makes the merge invisible to callers. ``exclude_ids`` (B, E)
+        int32, -1 = no-op, bans rows per query (the engine over-fetches
+        k+E through the live path — IVF included — and masks). IVF falls
+        back to exact when the index is absent or past its staleness
+        budget; returned scores are always live (re-ranked), so staleness
+        costs recall only."""
+        queries = np.asarray(queries)
+        excl = (None if exclude_ids is None
+                else np.asarray(exclude_ids,
+                                np.int32).reshape(queries.shape[0], -1))
+        return self._submit(_Request("nn", payload=queries, k=k, mode=mode,
+                                     excl=excl))
 
     def table_snapshot(self) -> np.ndarray:
         """Consistent snapshot: barriers behind every queued write first."""
@@ -214,6 +238,21 @@ class KnowledgeBankServer:
     def coalescing_factor(self) -> float:
         """Mean requests per device dispatch (1.0 = no coalescing won)."""
         return self.metrics["requests"] / max(self.metrics["dispatches"], 1)
+
+    def attach_maker_runtime(self, runtime) -> None:
+        """Register the ``MakerRuntime`` serving this bank so operators can
+        read per-maker counters from the server they already monitor
+        (``maker_stats``). Observability-only: the runtime's lifecycle
+        (start/stop) stays with its owner."""
+        self._maker_runtime = runtime
+
+    @property
+    def maker_stats(self) -> Dict[str, Dict]:
+        """Per-maker ``{name: {maker_steps, rows_written, ckpt_version_lag,
+        ...}}`` from the attached ``MakerRuntime`` (empty when none)."""
+        if self._maker_runtime is None:
+            return {}
+        return self._maker_runtime.stats()
 
     def start_ann_refresher(self, **kwargs):
         """Register the IVF index maker (see repro.core.ann_index): a
@@ -341,9 +380,11 @@ class KnowledgeBankServer:
                 self.engine.flush()
             elif op == "nn":
                 sizes = [r.payload.shape[0] for r in run]
+                excl = (None if run[0].excl is None
+                        else np.concatenate([r.excl for r in run]))
                 scores, ids = self.engine.nn_search(
                     np.concatenate([r.payload for r in run]), run[0].k,
-                    mode=run[0].mode)
+                    mode=run[0].mode, exclude_ids=excl)
                 off = 0
                 for r, n in zip(run, sizes):
                     r.result = (scores[off:off + n], ids[off:off + n])
@@ -362,43 +403,381 @@ class KnowledgeBankServer:
                 r.event.set()
 
 
-class MakerLoop(threading.Thread):
-    """Embedding-refresh knowledge maker (§4.1) as a daemon thread."""
+class SharedFeatureStore:
+    """Host-side ``FeatureStore`` shared by concurrent maker jobs.
 
-    def __init__(self, server: KnowledgeBankServer,
-                 ckpts: MemoryCheckpointStore, embed_fn: Callable,
-                 corpus: SyntheticGraphCorpus, *, batch_size: int = 64,
-                 node_slice: Optional[np.ndarray] = None,
-                 min_period_s: float = 0.0, name: str = "maker"):
+    The functional fs ops stay the single source of label/graph semantics
+    (confidence gating lives in ``fs_update_labels``); this wrapper adds
+    the one thing threads need — a lock around each read-modify-write —
+    and returns write counts so makers can report ``rows_written``
+    honestly (a gate-rejected label is not a write)."""
+
+    def __init__(self, num_entries: int, max_neighbors: int = 8):
+        self._lock = threading.Lock()
+        self.fs = feature_store_create(num_entries, max_neighbors)
+
+    def snapshot(self):
+        with self._lock:
+            return self.fs
+
+    def labels(self) -> np.ndarray:
+        with self._lock:
+            return np.asarray(self.fs.labels)
+
+    def labeled_ids(self, cap: Optional[int] = None) -> np.ndarray:
+        """Currently-labeled node ids; ``cap`` takes an evenly-strided
+        subsample so callers see a bounded batch size."""
+        lab = np.flatnonzero(self.labels() >= 0)
+        if cap is not None and lab.size > cap:
+            lab = lab[np.linspace(0, lab.size - 1, cap).astype(np.int64)]
+        return lab
+
+    def update_labels(self, ids, labels, conf) -> int:
+        """Confidence-gated label write; returns how many labels the gate
+        actually accepted."""
+        ids = np.asarray(ids)
+        conf = np.asarray(conf)
+        with self._lock:
+            accepted = int(
+                (conf > np.asarray(self.fs.label_conf)[ids]).sum())
+            self.fs = fs_update_labels(self.fs, jnp.asarray(ids),
+                                       jnp.asarray(labels),
+                                       jnp.asarray(conf))
+            return accepted
+
+    def update_neighbors(self, ids, nbr_ids, nbr_weights) -> int:
+        ids = np.asarray(ids)
+        nbr_ids = np.asarray(nbr_ids)
+        nbr_weights = np.asarray(nbr_weights, np.float32)
+        width = int(self.fs.nbr_ids.shape[1])
+        if nbr_ids.shape[1] > width:
+            raise ValueError(f"{nbr_ids.shape[1]} neighbors per node won't "
+                             f"fit this store's width {width}")
+        if nbr_ids.shape[1] < width:    # narrower writers pad with the
+            pad = width - nbr_ids.shape[1]          # store's missing marker
+            nbr_ids = np.concatenate(
+                [nbr_ids, np.full((len(ids), pad), -1, nbr_ids.dtype)], 1)
+            nbr_weights = np.concatenate(
+                [nbr_weights, np.zeros((len(ids), pad), np.float32)], 1)
+        with self._lock:
+            self.fs = fs_update_neighbors(self.fs, jnp.asarray(ids),
+                                          jnp.asarray(nbr_ids),
+                                          jnp.asarray(nbr_weights))
+            return int(ids.size)
+
+
+class MakerJob(threading.Thread):
+    """One independently-paced knowledge maker (the ``IVFRefresher``
+    pattern generalized): load the latest trainer checkpoint, compute one
+    batch of knowledge over a round-robin slice of nodes, push it through
+    the coalescing server, repeat.
+
+    Every push is tagged with the checkpoint step the job loaded
+    (``src_step``), so the server's staleness accounting — and this job's
+    own ``ckpt_version_lag`` counters — measure data freshness per maker.
+    A failing step records ``last_error`` and keeps the thread alive
+    (a silently-dead maker would freeze its knowledge at the last write,
+    exactly like a dead index refresher)."""
+
+    def __init__(self, runtime: "MakerRuntime", name: str, kind: str,
+                 step_fn: Callable, nodes: np.ndarray, *,
+                 batch_size: int = 64, min_period_s: float = 0.0,
+                 needs_ckpt: bool = True):
         super().__init__(daemon=True, name=name)
-        self.server, self.ckpts, self.embed_fn = server, ckpts, embed_fn
-        self.corpus = corpus
+        self.runtime, self.kind, self.step_fn = runtime, kind, step_fn
+        self.nodes = np.asarray(nodes)
         self.batch_size = batch_size
-        self.nodes = (node_slice if node_slice is not None
-                      else np.arange(corpus.num_nodes))
         self.min_period_s = min_period_s
+        self.needs_ckpt = needs_ckpt
         self.stop_event = threading.Event()
-        self.refreshes = 0
-        self.ckpt_steps_used: List[int] = []
+        self.steps = 0
+        self.rows_written = 0
+        self.lag_sum = 0
+        self.last_lag = 0
+        self.errors = 0
+        # bounded: long-lived serving makers would otherwise grow this
+        # forever; recent history is all tests/diagnostics ever read
+        self.ckpt_steps_used: deque = deque(maxlen=4096)
+        self.last_error: Optional[BaseException] = None
         self._cursor = 0
 
+    def _next_ids(self) -> np.ndarray:
+        ids = self.nodes[np.arange(self._cursor,
+                                   self._cursor + self.batch_size)
+                         % len(self.nodes)]
+        self._cursor = (self._cursor + self.batch_size) % len(self.nodes)
+        return ids
+
     def run(self):
+        rt = self.runtime
+        # error/idle cycles honor the job's pacing floor too (never
+        # faster than the 5ms poll) — a crashing maker must not saturate
+        # the server the pacing knob was configured to protect
+        backoff = max(self.min_period_s, 0.005)
         while not self.stop_event.is_set():
-            step, params = self.ckpts.load_latest()
-            if params is None:
-                time.sleep(0.005)
-                continue
-            ids = self.nodes[np.arange(self._cursor,
-                                       self._cursor + self.batch_size)
-                             % len(self.nodes)]
-            self._cursor = (self._cursor + self.batch_size) % len(self.nodes)
-            toks = self.corpus.node_tokens(ids)[:, :-1]
-            emb = self.embed_fn(params, jnp.asarray(toks))
-            self.server.update(ids, np.asarray(emb), src_step=step)
-            self.refreshes += 1
+            try:
+                if rt.ckpts is not None:
+                    step, params = rt.ckpts.load_latest()
+                else:
+                    step, params = None, None
+                if self.needs_ckpt and params is None:
+                    self.stop_event.wait(backoff)   # nothing published yet
+                    continue
+                step = 0 if step is None else int(step)
+                ids = self._next_ids()
+                rows = self.step_fn(params, step, ids)
+                self.last_error = None
+            except Exception as e:      # record, back off, stay alive —
+                self.last_error = e     # but a crashed batch is NOT a
+                self.errors += 1        # maker step: counters must not
+                self.stop_event.wait(backoff)   # paint a broken maker
+                continue                        # as a productive one
+            if rows is None:            # idle: preconditions not met (e.g.
+                self.stop_event.wait(backoff)   # no labeled nodes yet) —
+                continue                # back off without burning a step
+            self.steps += 1
+            self.rows_written += int(rows)
+            # staleness = trainer's clock minus the checkpoint this batch
+            # was computed from — the paper's data-freshness axis, per job
+            lag = max(rt.trainer_step - step, 0)
+            self.last_lag = lag
+            self.lag_sum += lag
             self.ckpt_steps_used.append(step)
             if self.min_period_s:
-                time.sleep(self.min_period_s)
+                self.stop_event.wait(self.min_period_s)
+
+    def stop(self, timeout_s: float = 30.0):
+        self.stop_event.set()
+        self.join(timeout=timeout_s)
+
+
+class MakerRuntime:
+    """Registry + lifecycle for the paper's knowledge makers, all clients
+    of ONE coalescing ``KnowledgeBankServer``.
+
+    ``register(kind)`` instantiates any of the four maker types as a
+    ``MakerJob`` with its own batch size, pacing (``min_period_s``), and
+    node slice; ``start()``/``stop()`` manage the fleet. The runtime owns
+    the ``SharedFeatureStore`` the label/graph makers write to, and the
+    trainer publishes its step counter on ``trainer_step`` so every job's
+    ``ckpt_version_lag`` is measured against the live trainer clock.
+
+    Maker types and what they touch:
+
+    - ``embedding_refresh``: re-encode node tokens with the latest
+      checkpoint, ``server.update`` the bank (needs ``ckpts`` +
+      ``embed_fn``).
+    - ``label_mining``: embed a node batch, classify it against
+      per-class centroids of currently-labeled bank rows (read back via
+      ``server.lookup`` — the maker is a bank CLIENT, not an owner), and
+      gate-write labels to the feature store.
+    - ``graph_agreement``: embed a node batch with the latest checkpoint,
+      fetch its nearest bank neighbors via ``server.nn_search``, and
+      gate-write the labeled-neighbor weighted vote.
+    - ``graph_builder``: read rows via ``server.lookup``, find top-k
+      neighbors via ``server.nn_search``, write the dynamic graph. Needs
+      no checkpoint — it runs even in trainer-less serving.
+    """
+
+    MAKER_KINDS = ("embedding_refresh", "label_mining", "graph_agreement",
+                   "graph_builder")
+
+    def __init__(self, server: KnowledgeBankServer,
+                 corpus: Optional[SyntheticGraphCorpus] = None, *,
+                 num_entries: Optional[int] = None,
+                 ckpts: Optional[MemoryCheckpointStore] = None,
+                 embed_fn: Optional[Callable] = None,
+                 feature_store: Optional[SharedFeatureStore] = None,
+                 num_classes: Optional[int] = None,
+                 conf_threshold: float = 0.6, label_temp: float = 20.0,
+                 agreement_k: int = 8, agreement_overfetch: int = 4,
+                 builder_k: int = 8, centroid_sample: int = 256,
+                 seed_labels: bool = True, seed_conf: float = 0.5):
+        self.server, self.corpus = server, corpus
+        self.ckpts, self.embed_fn = ckpts, embed_fn
+        if corpus is None and num_entries is None:
+            raise ValueError("MakerRuntime needs a corpus or num_entries "
+                             "(trainer-less serving runs only the "
+                             "checkpoint-free makers)")
+        self.num_nodes = (corpus.num_nodes if corpus is not None
+                          else num_entries)
+        self.num_classes = (num_classes if num_classes is not None
+                            else corpus.num_clusters if corpus is not None
+                            else 1)
+        self.conf_threshold = conf_threshold
+        self.label_temp = label_temp
+        self.agreement_k = agreement_k
+        self.agreement_overfetch = agreement_overfetch
+        self.builder_k = builder_k
+        self.centroid_sample = centroid_sample
+        self.feature_store = feature_store or SharedFeatureStore(
+            self.num_nodes,
+            max(builder_k, corpus.neighbors_per_node
+                if corpus is not None else builder_k))
+        if seed_labels and feature_store is None and corpus is not None:
+            # the semi-supervised ground state (§4.2): the corpus's (noisy)
+            # labeled subset enters at a low seed confidence, so makers can
+            # out-vote it but never start from an unlabelable vacuum
+            lab = np.asarray(corpus.labeled_ids)
+            if lab.size:
+                self.feature_store.update_labels(
+                    lab, corpus.noisy_labels[lab].astype(np.int32),
+                    np.full(lab.size, seed_conf, np.float32))
+        self.trainer_step = 0           # published by the trainer loop
+        self.jobs: List[MakerJob] = []
+        server.attach_maker_runtime(self)
+
+    # -- the four maker step functions (params, ckpt_step, ids) -> rows ----
+
+    def _node_tokens(self, ids: np.ndarray) -> jnp.ndarray:
+        if self.corpus is None:
+            raise ValueError("this maker kind needs a corpus")
+        return jnp.asarray(self.corpus.node_tokens(ids)[:, :-1])
+
+    def _embed(self, params, ids: np.ndarray) -> np.ndarray:
+        if self.embed_fn is None:
+            raise ValueError("this maker kind needs embed_fn (and ckpts)")
+        return np.asarray(self.embed_fn(params, self._node_tokens(ids)))
+
+    def _embedding_refresh_step(self, params, step: int, ids) -> int:
+        self.server.update(ids, self._embed(params, ids), src_step=step)
+        return ids.size
+
+    def _label_mining_step(self, params, step: int, ids) -> int:
+        """§4.2.1 online label mining, asynchronous form: the class
+        read-out is the labeled-centroid classifier over CURRENT bank rows
+        (fetched through the server like any other client)."""
+        fs = self.feature_store
+        lab = fs.labeled_ids(cap=self.centroid_sample)
+        if lab.size == 0:
+            return None                 # idle: nothing to calibrate against
+        emb = self._embed(params, ids)
+        lab_emb = self.server.lookup(lab, trainer_step=self.trainer_step)
+        lab_cls = fs.labels()[lab]
+        cent = np.zeros((self.num_classes, emb.shape[1]), np.float32)
+        for c in range(self.num_classes):
+            m = lab_cls == c
+            if m.any():
+                cent[c] = lab_emb[m].mean(0)
+        probs = np.asarray(jax.nn.softmax(
+            jnp.asarray(emb @ cent.T * self.label_temp), -1))
+        conf = probs.max(-1)
+        pred = probs.argmax(-1).astype(np.int32)
+        conf = np.where(conf >= self.conf_threshold, conf, 0.0)
+        return fs.update_labels(ids, pred, conf)
+
+    def _graph_agreement_step(self, params, step: int, ids) -> int:
+        """§4.2.2, asynchronous form: candidates come from the server's
+        nn_search over the live bank (over-fetched so enough LABELED ones
+        survive the mask), the vote from the shared feature store."""
+        labels = self.feature_store.labels()    # ONE snapshot per step
+        if not (labels >= 0).any():
+            return None                 # idle: an unlabeled bank can't vote
+        emb = self._embed(params, ids)
+        kfetch = self.agreement_k * self.agreement_overfetch
+        scores, nids = self.server.nn_search(emb, k=kfetch)
+        nbr_labels = labels[np.maximum(nids, 0)]
+        ok = ((nids >= 0) & (nbr_labels >= 0)
+              & (nids != np.asarray(ids)[:, None]))
+        # electorate = the agreement_k NEAREST labeled survivors (results
+        # are score-sorted), matching the sync path's k-sized vote; the
+        # over-fetch only buys labeled candidates, never a wider vote
+        ok &= np.cumsum(ok, axis=1) <= self.agreement_k
+        pred, conf = vote_agreement_labels(
+            scores, nids, np.where(ok, nbr_labels, -1),
+            num_classes=self.num_classes)
+        return self.feature_store.update_labels(ids, np.asarray(pred),
+                                                np.asarray(conf))
+
+    def _graph_builder_step(self, params, step: int, ids) -> int:
+        """Dynamic graph discovery over the live bank; checkpoint-free, so
+        it also serves as the maker a trainer-less serving deployment runs.
+        Self-exclusion rides the server's exclude_ids path — the same
+        engine feature the in-graph ``make_graph_builder`` uses."""
+        q = self.server.lookup(ids, trainer_step=self.trainer_step)
+        scores, nids = self.server.nn_search(
+            q, k=self.builder_k, exclude_ids=np.asarray(ids)[:, None])
+        return self.feature_store.update_neighbors(
+            ids, nids, np.maximum(scores, 0.0))
+
+    # -- registry / lifecycle ----------------------------------------------
+
+    def register(self, kind: str, *, batch_size: int = 64,
+                 min_period_s: float = 0.0,
+                 node_slice: Optional[np.ndarray] = None,
+                 name: Optional[str] = None) -> MakerJob:
+        """Instantiate one maker job (not started). ``node_slice`` splits
+        a node range across several jobs of the same kind; ``min_period_s``
+        paces this job independently of every other."""
+        if kind not in self.MAKER_KINDS:
+            raise ValueError(f"unknown maker kind {kind!r} "
+                             f"(want one of {self.MAKER_KINDS})")
+        step_fn = getattr(self, f"_{kind}_step")
+        needs_ckpt = kind != "graph_builder"
+        if needs_ckpt and (self.ckpts is None or self.embed_fn is None):
+            raise ValueError(f"maker {kind!r} needs ckpts and embed_fn")
+        nodes = (np.arange(self.num_nodes) if node_slice is None
+                 else np.asarray(node_slice))
+        if nodes.size == 0:             # reject at setup: an empty slice
+            raise ValueError(           # has no well-defined round-robin
+                f"maker {kind!r} got an empty node slice (more jobs than "
+                "nodes?)")
+        job = MakerJob(self, name or f"{kind}{len(self.jobs)}", kind,
+                       step_fn, nodes, batch_size=batch_size,
+                       min_period_s=min_period_s, needs_ckpt=needs_ckpt)
+        self.jobs.append(job)
+        return job
+
+    def start(self) -> "MakerRuntime":
+        for j in self.jobs:
+            if not j.is_alive():
+                j.start()
+        return self
+
+    def stop(self, timeout_s: float = 30.0) -> None:
+        for j in self.jobs:
+            j.stop_event.set()
+        for j in self.jobs:
+            j.join(timeout=timeout_s)
+
+    def stats(self) -> Dict[str, Dict]:
+        """Per-maker counters, keyed by job name: ``maker_steps`` (batches
+        computed — crashed batches count under ``errors`` instead), and
+        ``rows_written`` (gate-accepted writes), and the
+        checkpoint-staleness trio — ``ckpt_version_lag`` (cumulative
+        trainer-steps of lag across the run), ``ckpt_version_lag_last``,
+        and ``last_ckpt_step``."""
+        out = {}
+        for j in self.jobs:
+            out[j.name] = {
+                "kind": j.kind,
+                "maker_steps": j.steps,
+                "rows_written": j.rows_written,
+                "ckpt_version_lag": j.lag_sum,
+                "ckpt_version_lag_last": j.last_lag,
+                "last_ckpt_step": (j.ckpt_steps_used[-1]
+                                   if j.ckpt_steps_used else -1),
+                "errors": j.errors,
+                "error": repr(j.last_error) if j.last_error else None,
+            }
+        return out
+
+
+def format_maker_stats(stats: Dict[str, Dict]) -> List[str]:
+    """One printable line per maker — the single formatter every entry
+    point shares, so a crashing maker is loudly visible everywhere its
+    counters are shown."""
+    lines = []
+    for name, s in stats.items():
+        line = (f"maker {name}: steps={s['maker_steps']} "
+                f"rows_written={s['rows_written']} "
+                f"ckpt_version_lag={s['ckpt_version_lag']} "
+                f"(last={s['ckpt_version_lag_last']}, "
+                f"ckpt={s['last_ckpt_step']})")
+        if s.get("errors"):
+            line += f" ERRORS={s['errors']} last={s['error']}"
+        lines.append(line)
+    return lines
 
 
 @dataclass
@@ -410,6 +789,8 @@ class AsyncRunResult:
     mean_staleness: float
     final_params: dict = field(repr=False, default=None)
     server: KnowledgeBankServer = field(repr=False, default=None)
+    maker_stats: Dict[str, Dict] = field(default_factory=dict)
+    runtime: "MakerRuntime" = field(repr=False, default=None)
 
 
 def run_async_training(model: LM, corpus: SyntheticGraphCorpus, *,
@@ -419,10 +800,21 @@ def run_async_training(model: LM, corpus: SyntheticGraphCorpus, *,
                        reg_weight: Optional[float] = None,
                        lazy_update: bool = True,
                        use_makers: bool = True,
+                       makers: Optional[Sequence[str]] = None,
+                       maker_period_s: float = 0.0,
+                       trainer_push: bool = False,
                        kb_backend: str = "dense",
                        coalesce: bool = True,
                        seed: int = 0) -> AsyncRunResult:
-    """End-to-end asynchronous CARLS training on one host."""
+    """End-to-end asynchronous CARLS training on one host: the trainer loop
+    plus a ``MakerRuntime`` fleet, all clients of one coalescing server.
+
+    ``makers`` selects maker kinds by name (each registered once, paced by
+    ``maker_period_s``); the default — ``num_makers`` embedding-refresh
+    jobs over disjoint node slices — preserves the historical behaviour.
+    ``trainer_push=True`` additionally pushes the trainer's own pooled
+    sample embeddings to the bank each step ("synchronous maker" mode, the
+    in-graph step's ``trainer_push`` as a server client)."""
     from repro.optim import constant_lr
     cfg = model.cfg
     dist = DistContext()
@@ -442,20 +834,28 @@ def run_async_training(model: LM, corpus: SyntheticGraphCorpus, *,
         lazy_update=lazy_update, coalesce=coalesce)
     ckpts = MemoryCheckpointStore()
     ckpts.save(0, params)
-    makers = []
+    runtime = None
     if use_makers:
-        slices = np.array_split(np.arange(corpus.num_nodes), num_makers)
-        makers = [MakerLoop(server, ckpts, embed_fn, corpus,
-                            batch_size=maker_batch, node_slice=s,
-                            name=f"maker{i}")
-                  for i, s in enumerate(slices)]
-        for mk in makers:
-            mk.start()
+        runtime = MakerRuntime(server, corpus, ckpts=ckpts,
+                               embed_fn=embed_fn)
+        if makers is None:
+            for i, s in enumerate(np.array_split(
+                    np.arange(corpus.num_nodes), num_makers)):
+                runtime.register("embedding_refresh", batch_size=maker_batch,
+                                 node_slice=s, name=f"maker{i}",
+                                 min_period_s=maker_period_s)
+        else:
+            for kind in makers:
+                runtime.register(kind, batch_size=maker_batch,
+                                 min_period_s=maker_period_s)
+        runtime.start()
 
     rng = np.random.default_rng(seed + 1)
     losses, regs, times = [], [], []
     try:
         for step in range(steps):
+            if runtime is not None:
+                runtime.trainer_step = step
             batch = corpus.batch(rng, batch_size)
             nbr_emb = server.lookup(batch["neighbor_ids"], trainer_step=step)
             jb = {k: jnp.asarray(v) for k, v in batch.items()}
@@ -465,18 +865,22 @@ def run_async_training(model: LM, corpus: SyntheticGraphCorpus, *,
             jax.block_until_ready(pooled)
             times.append(time.perf_counter() - t0)
             server.lazy_grad(batch["neighbor_ids"], np.asarray(gn))
+            if trainer_push:
+                server.update(batch["sample_ids"], np.asarray(pooled),
+                              src_step=step)
             losses.append(float(metrics["loss"]))
             regs.append(float(metrics.get("graph_reg", 0.0)))
             if (step + 1) % ckpt_period == 0:
                 ckpts.save(step + 1, params)
     finally:        # a failed step must not leak maker/dispatcher threads
-        for mk in makers:
-            mk.stop_event.set()
-        for mk in makers:
-            mk.join(timeout=5.0)
+        if runtime is not None:
+            runtime.stop(timeout_s=5.0)
         server.close()
     return AsyncRunResult(
         losses=losses, reg_losses=regs, step_times=times,
-        maker_refreshes=sum(m.refreshes for m in makers),
+        maker_refreshes=(sum(j.steps for j in runtime.jobs)
+                         if runtime else 0),
         mean_staleness=server.mean_staleness,
-        final_params=params, server=server)
+        final_params=params, server=server,
+        maker_stats=runtime.stats() if runtime else {},
+        runtime=runtime)

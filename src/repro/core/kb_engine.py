@@ -21,6 +21,15 @@ This module makes that contract explicit:
 Backends are interchangeable bit-for-bit (tests/test_kb_engine.py drives
 the same op sequence through all three and compares every state leaf).
 
+Two client surfaces sit on top of the backend protocol:
+
+- ``KBOps`` (``make_kb_ops``): the IN-GRAPH functional facade — pure
+  closures over a backend chosen once, traceable inside jitted trainer
+  steps and maker programs. This is how the left two corners of the CARLS
+  triangle (trainers, knowledge makers) reach the bank without a single
+  per-callsite mesh branch.
+- ``KBEngine``: the stateful HOST shell the async server talks to.
+
 ``KBEngine`` is the stateful shell the host runtime talks to: it owns a
 ``KBState``, jits each backend op once, and pads every batch to power-of-two
 jit buckets so arbitrary (and coalesced — see ``repro.core.async_runtime``)
@@ -53,7 +62,7 @@ index.
 """
 from __future__ import annotations
 
-from typing import Optional, Protocol, Tuple
+from typing import Callable, NamedTuple, Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -239,6 +248,67 @@ def make_backend(name: str, *, dist: Optional[DistContext] = None,
                      "(want dense | sharded | pallas)")
 
 
+class KBOps(NamedTuple):
+    """In-graph functional facade over one ``KBBackend``.
+
+    The trainer's step builders and the knowledge makers are JITTED
+    programs that thread a ``KBState`` through themselves — they cannot
+    talk to the host-side ``KBEngine``/``KnowledgeBankServer``. ``KBOps``
+    is their view of the engine: four pure closures, selected ONCE per
+    backend by ``make_kb_ops`` and traceable inside jit, so no call site
+    ever branches on the mesh again. Backend dispatch lives here and in
+    ``make_backend`` — nowhere else.
+
+    Every closure has the dense reference semantics (backends are
+    bit-identical, see module docstring); the lazy-update knobs
+    (``lazy_lr`` / ``zmax`` / ``apply_pending``) are bound at construction
+    so callers carry no config.
+
+    - ``lookup(kb, ids)``                       -> (values, kb')
+    - ``update(kb, ids, values)``               -> kb'
+    - ``lazy_grad(kb, ids, grads)``             -> kb'
+    - ``nn_search(kb, q, k, *, exclude_ids=None)`` -> (scores, ids)
+    - ``flush(kb)``                             -> kb'
+    """
+
+    lookup: Callable
+    update: Callable
+    lazy_grad: Callable
+    nn_search: Callable
+    flush: Callable
+    backend_name: str
+
+
+def make_kb_ops(dist: Optional[DistContext] = None, *,
+                backend=None, lazy_lr: float = 0.1, zmax: float = 3.0,
+                apply_pending: bool = True,
+                interpret: bool = True) -> KBOps:
+    """Select a backend once and bind the lazy-update knobs into a
+    ``KBOps`` bundle.
+
+    ``backend`` may be a ``KBBackend`` instance or a factory name; when
+    omitted the choice follows the mesh — ``sharded`` iff ``dist`` carries
+    one, else ``dense`` — which is the single place the old per-callsite
+    ``if dist.mesh is not None`` dispatch now lives."""
+    if backend is None:
+        backend = ("sharded" if dist is not None and dist.mesh is not None
+                   else "dense")
+    bk = (backend if not isinstance(backend, str)
+          else make_backend(backend, dist=dist, interpret=interpret))
+    return KBOps(
+        lookup=lambda kb, ids: bk.lookup(kb, ids, lazy_lr=lazy_lr,
+                                         zmax=zmax,
+                                         apply_pending=apply_pending),
+        update=lambda kb, ids, values: bk.update(kb, ids, values),
+        lazy_grad=lambda kb, ids, grads: bk.lazy_grad(kb, ids, grads,
+                                                      zmax=zmax),
+        nn_search=lambda kb, q, k, *, exclude_ids=None: bk.nn_search(
+            kb, q, k, exclude_ids=exclude_ids),
+        flush=lambda kb: bk.flush(kb, lazy_lr=lazy_lr, zmax=zmax),
+        backend_name=bk.name,
+    )
+
+
 def _bucket(n: int, minimum: int = 8) -> int:
     """Next power-of-two jit bucket (>= minimum)."""
     return max(minimum, 1 << max(n - 1, 0).bit_length())
@@ -402,18 +472,35 @@ class KBEngine:
         self.state = self._flush_fn(self.state)
         self.dispatches += 1
 
-    def nn_search(self, queries, k: int, *, mode: Optional[str] = None
+    def nn_search(self, queries, k: int, *, mode: Optional[str] = None,
+                  exclude_ids: Optional[np.ndarray] = None
                   ) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k MIPS over the bank. ``mode`` overrides the engine-level
         ``search_mode`` per request; ``"ivf"`` silently falls back to the
         exact path when the index is absent or too stale (within budget,
         staleness costs recall only — winners are re-scored against the
         live table, so returned scores are always exact for the returned
-        ids). Deterministic for a fixed (state, index): the server may
-        merge same-(k, mode) requests into one batched call and slice the
-        results without changing any caller's answer."""
+        ids). ``exclude_ids`` (B, E) int32, -1 = no-op, bans rows per
+        query: the engine over-fetches ``k+E`` through whichever path is
+        live (IVF included — a query can exclude at most E rows, so k
+        unbanned candidates always survive; on the exact path this equals
+        the backend's pre-mask top-k) and masks host-side. Deterministic
+        for a fixed (state, index): the server may merge same-(k, mode,
+        E) requests into one batched call and slice the results without
+        changing any caller's answer."""
         queries = np.asarray(queries, np.float32)
         B = queries.shape[0]
+        if exclude_ids is not None:
+            excl = np.asarray(exclude_ids, np.int32).reshape(B, -1)
+            scores, ids = self.nn_search(queries, k + excl.shape[1],
+                                         mode=mode)
+            banned = ((ids[:, :, None] == excl[:, None, :])
+                      & (excl[:, None, :] >= 0)).any(-1)
+            scores = np.where(banned, -np.inf, scores)
+            ids = np.where(banned, -1, ids)
+            order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+            return (np.take_along_axis(scores, order, 1),
+                    np.take_along_axis(ids, order, 1))
         pad = _bucket(B) - B
         q = np.concatenate([queries, np.zeros((pad, queries.shape[1]),
                                               np.float32)])

@@ -1,6 +1,7 @@
 """Knowledge Makers (paper §3.1): jobs that load the latest trainer
 checkpoint and produce knowledge for the bank. Each maker is a pure jitted
-program; the async runtime (or a detached pod) drives it in a loop.
+program; the async runtime (``repro.core.async_runtime.MakerRuntime``) or a
+detached pod drives it in a loop.
 
 Implemented maker types, mapping 1:1 to the paper's examples:
 - ``embedding_refresh``  : re-encode a slice of nodes with the latest
@@ -12,32 +13,41 @@ Implemented maker types, mapping 1:1 to the paper's examples:
 - ``graph_builder``      : rebuild the neighborhood graph from current
   embeddings via KB nearest-neighbor search ("the graph structure can be
   dynamically updated with the similarity between computed node embeddings").
+
+Every maker reaches the bank through the ``KBOps`` facade
+(``repro.core.kb_engine.make_kb_ops``) — the backend is selected once when
+the maker is built, so no maker carries a mesh branch. Makers are engine
+clients exactly like the trainer.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import knowledge_bank as kbm
-from repro.core import sharded_kb as skb
+from repro.core.kb_engine import KBOps, make_kb_ops
 from repro.models.losses import masked_mean_pool
 from repro.models.model import LM
 from repro.sharding.partition import DistContext
 
 
-def make_embedding_refresh(model: LM, dist: DistContext):
+def _ops(dist: Optional[DistContext], kb_ops: Optional[KBOps]) -> KBOps:
+    """The makers' single backend-dispatch point."""
+    return kb_ops if kb_ops is not None else make_kb_ops(dist)
+
+
+def make_embedding_refresh(model: LM, dist: DistContext, *,
+                           kb_ops: Optional[KBOps] = None):
     """(ckpt_params, kb, node_ids, node_tokens) -> kb with fresh rows."""
+    ops = _ops(dist, kb_ops)
 
     def maker_step(params, kb, node_ids, node_tokens):
         h, prefix, _, _ = model.hidden(params, node_tokens, {}, dist)
         mask = jnp.ones(node_tokens.shape, jnp.float32)
         emb = masked_mean_pool(h[:, prefix:] if prefix else h, mask)
-        if dist.mesh is not None:
-            return skb.sharded_kb_update(kb, node_ids, emb, dist)
-        return kbm.kb_update(kb, node_ids, emb)
+        return ops.update(kb, node_ids, emb)
 
     return maker_step
 
@@ -77,42 +87,55 @@ def make_label_mining(model: LM, dist: DistContext, *, num_classes: int,
 
 def graph_agreement_labels(kb: kbm.KBState, fs: kbm.FeatureStore,
                            query_emb, query_ids, *, k: int = 8,
-                           num_classes: int, dist: DistContext = None):
+                           num_classes: int, dist: DistContext = None,
+                           kb_ops: Optional[KBOps] = None):
     """§4.2.2 graph agreement: label = weighted vote of the k nearest
-    *labeled* neighbors in the current embedding space."""
+    *labeled* neighbors in the current embedding space. The querying node
+    is excluded from its own electorate on EVERY backend (the sharded
+    search over-fetches and masks post-merge)."""
+    ops = _ops(dist, kb_ops)
     labeled = fs.labels >= 0
     masked_table = jnp.where(labeled[:, None], kb.table, 0.0)
     tmp = kb._replace(table=masked_table)
-    if dist is not None and dist.mesh is not None:
-        scores, ids = skb.sharded_kb_nn_search(tmp, query_emb, k, dist)
-    else:
-        scores, ids = kbm.kb_nn_search(tmp, query_emb, k,
-                                       exclude_ids=query_ids[:, None])
-    votes_lab = fs.labels[ids]                               # (B, k)
-    w = jax.nn.softmax(jnp.where(votes_lab >= 0, scores, -jnp.inf), axis=-1)
-    onehot = jax.nn.one_hot(jnp.clip(votes_lab, 0), num_classes) * \
-        (votes_lab >= 0)[..., None]
+    scores, ids = ops.nn_search(tmp, query_emb, k,
+                                exclude_ids=query_ids[:, None])
+    return vote_agreement_labels(scores, ids, fs.labels[ids],
+                                 num_classes=num_classes)
+
+
+def vote_agreement_labels(scores, nbr_ids, nbr_labels, *, num_classes: int,
+                          self_ids=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The voting half of graph agreement, over an ALREADY-FETCHED candidate
+    set (the async maker path: candidates come back from the server's
+    nn_search, labels from the shared feature store). Unlabeled candidates
+    (label < 0) and the querying node itself get -inf weight; a query with
+    no labeled candidate yields conf 0 (the gated write is then a no-op).
+    """
+    scores = jnp.asarray(scores, jnp.float32)
+    nbr_ids = jnp.asarray(nbr_ids)
+    nbr_labels = jnp.asarray(nbr_labels)
+    ok = nbr_labels >= 0
+    if self_ids is not None:
+        ok = ok & (nbr_ids != jnp.asarray(self_ids)[:, None])
+    w = jax.nn.softmax(jnp.where(ok, scores, -jnp.inf), axis=-1)
+    w = jnp.where(jnp.any(ok, -1)[:, None], w, 0.0)   # all-masked: no vote
+    onehot = jax.nn.one_hot(jnp.clip(nbr_labels, 0), num_classes) * \
+        ok[..., None]
     tally = jnp.einsum("bk,bkc->bc", w, onehot)
-    conf = tally.max(-1)
-    pred = jnp.argmax(tally, -1).astype(jnp.int32)
-    return pred, conf
+    return (jnp.argmax(tally, -1).astype(jnp.int32), tally.max(-1))
 
 
-def make_graph_builder(dist: DistContext, *, k: int):
+def make_graph_builder(dist: DistContext, *, k: int,
+                       kb_ops: Optional[KBOps] = None):
     """Dynamic graph discovery: neighbors of a node = top-k most similar
-    embeddings currently in the bank (excluding itself)."""
+    embeddings currently in the bank (excluding itself — via the engine's
+    exclude_ids path, which works across shard boundaries)."""
+    ops = _ops(dist, kb_ops)
 
     def maker_step(kb: kbm.KBState, fs: kbm.FeatureStore, node_ids):
         q = kb.table[node_ids].astype(jnp.float32)
-        if dist.mesh is not None:
-            scores, ids = skb.sharded_kb_nn_search(kb, q, k + 1, dist)
-        else:
-            scores, ids = kbm.kb_nn_search(kb, q, k + 1)
-        # drop self-matches
-        self_m = ids == node_ids[:, None]
-        order = jnp.argsort(jnp.where(self_m, 1, 0), axis=-1, stable=True)
-        ids = jnp.take_along_axis(ids, order, -1)[:, :k]
-        scores = jnp.take_along_axis(scores, order, -1)[:, :k]
+        scores, ids = ops.nn_search(kb, q, k,
+                                    exclude_ids=node_ids[:, None])
         w = jnp.maximum(scores, 0.0)
         return kbm.fs_update_neighbors(fs, node_ids, ids, w)
 

@@ -13,6 +13,11 @@ Three step builders:
   with the number of neighbors.
 - ``make_async_train_fns``      : the variant used by the asynchronous host
   runtime, where KB traffic happens outside the jitted step (device<->server).
+
+All KB traffic goes through the ``KBOps`` facade (``repro.core.kb_engine.
+make_kb_ops``): the backend — dense, sharded, or pallas — is chosen once
+when the step is built, never per call site. The trainer is just another
+engine client.
 """
 from __future__ import annotations
 
@@ -24,8 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core import knowledge_bank as kbm
-from repro.core import sharded_kb as skb
+from repro.core.kb_engine import KBOps, make_kb_ops
 from repro.models.losses import chunked_xent, graph_reg_loss, masked_mean_pool
 from repro.models.model import LM
 from repro.optim import AdamW
@@ -58,36 +62,22 @@ def model_loss(model: LM, params, batch, dist, nbr_emb=None,
 
 def make_carls_train_step(model: LM, optimizer: AdamW, dist: DistContext,
                           *, trainer_push: bool = True,
-                          xent_chunk: int = 512):
+                          xent_chunk: int = 512,
+                          kb_ops: Optional[KBOps] = None):
     """Returns step(params, opt_state, kb, batch) -> (params, opt_state, kb,
     metrics). The KB is threaded through the step (in-graph CARLS: the
-    technique as a first-class training-loop feature)."""
+    technique as a first-class training-loop feature); all bank traffic
+    goes through ``kb_ops`` (built from ``dist`` + the carls config when
+    not supplied)."""
     cfg = model.cfg
     cc = cfg.carls
-
-    def lookup(kb, ids):
-        if dist.mesh is not None:
-            return skb.sharded_kb_lookup(kb, ids, dist, lazy_lr=cc.lazy_lr,
-                                         zmax=cc.outlier_zmax,
-                                         apply_pending=cc.lazy_update)
-        return kbm.kb_lookup(kb, ids, lazy_lr=cc.lazy_lr,
-                             zmax=cc.outlier_zmax,
-                             apply_pending=cc.lazy_update)
-
-    def lazy_grad(kb, ids, g):
-        if dist.mesh is not None:
-            return skb.sharded_kb_lazy_grad(kb, ids, g, dist,
-                                            zmax=cc.outlier_zmax)
-        return kbm.kb_lazy_grad(kb, ids, g, zmax=cc.outlier_zmax)
-
-    def update(kb, ids, vals):
-        if dist.mesh is not None:
-            return skb.sharded_kb_update(kb, ids, vals, dist)
-        return kbm.kb_update(kb, ids, vals)
+    ops = kb_ops if kb_ops is not None else make_kb_ops(
+        dist, lazy_lr=cc.lazy_lr, zmax=cc.outlier_zmax,
+        apply_pending=cc.lazy_update)
 
     def step(params, opt_state, kb, batch):
         nbr_ids = batch["neighbor_ids"]
-        nbr_emb, kb = lookup(kb, nbr_ids)
+        nbr_emb, kb = ops.lookup(kb, nbr_ids)
 
         def loss_fn(p, nbr):
             return model_loss(model, p, batch, dist, nbr_emb=nbr,
@@ -97,9 +87,9 @@ def make_carls_train_step(model: LM, optimizer: AdamW, dist: DistContext,
         (loss, (metrics, pooled)), (gp, gn) = jax.value_and_grad(
             loss_fn, argnums=(0, 1), has_aux=True)(params, nbr_emb)
         # DynamicEmbedding-style: embedding grads go to the bank's lazy cache
-        kb = lazy_grad(kb, nbr_ids, gn)
+        kb = ops.lazy_grad(kb, nbr_ids, gn)
         if trainer_push:
-            kb = update(kb, batch["sample_ids"], pooled)
+            kb = ops.update(kb, batch["sample_ids"], pooled)
         params, opt_state, gnorm = optimizer.update(gp, opt_state, params)
         metrics = dict(metrics, loss=loss, grad_norm=gnorm,
                        kb_pending=kb.grad_cnt.sum())

@@ -38,7 +38,8 @@ from repro.sharding.partition import DistContext
 
 def serve_kb(args) -> None:
     """Concurrent-client KB serving demo on the coalescing server."""
-    from repro.core import KnowledgeBankServer
+    from repro.core import (KnowledgeBankServer, MakerRuntime,
+                            format_maker_stats)
     rng = np.random.default_rng(args.seed)
     dist = None
     if args.kb_backend == "sharded":
@@ -73,6 +74,19 @@ def serve_kb(args) -> None:
     # lookup/lazy_grad buckets) so no first-request jit stall is timed
     server.nn_search(np.zeros((args.batch, args.kb_dim), np.float32), k=8)
 
+    runtime = None
+    if args.kb_makers:
+        # trainer-less serving can still host the checkpoint-free makers
+        # (graph_builder): background engine clients maintaining the
+        # dynamic neighbor graph while the bank serves. Paced (never
+        # free-running): maker traffic shares the server, so an unpaced
+        # maker would skew the timed client metrics below
+        runtime = MakerRuntime(server, num_entries=args.kb_entries)
+        for kind in args.kb_makers.split(","):
+            runtime.register(kind.strip(), batch_size=args.batch,
+                             min_period_s=args.kb_maker_period)
+        runtime.start()
+
     def client(t: int, n_calls: int):
         crng = np.random.default_rng(args.seed + 1 + t)
         for _ in range(n_calls):
@@ -92,6 +106,11 @@ def serve_kb(args) -> None:
     stats = dict(server.engine.search_stats)
     rebuilds = refresher.rebuilds if refresher else 0
     shard_rebuilds = refresher.shard_rebuilds if refresher else 0
+    maker_stats = {}
+    if runtime is not None:
+        runtime.stop()
+        maker_stats = server.maker_stats
+    index = server.engine.ann_index
     server.close()
     calls = args.clients * args.gen * 3
     print(f"kb-serve backend={args.kb_backend} search={args.kb_search} "
@@ -103,6 +122,22 @@ def serve_kb(args) -> None:
           f"{server.metrics['requests']} requests, "
           f"nn ivf/exact={stats['ivf']}/{stats['exact']}, "
           f"index rebuilds={rebuilds} ({shard_rebuilds} shard builds))")
+    for line in format_maker_stats(maker_stats):
+        print(line)
+    if index is not None and hasattr(index, "shard_stats"):
+        # per-shard bucket skew: cap vs mean occupancy. headroom->0 marks
+        # the shard whose next rebuild forces a full repack
+        for st in index.shard_stats():
+            print(f"ivf shard {st['shard']}: cap={st['bucket_cap']} "
+                  f"mean_occ={st['mean_occupancy']:.1f} "
+                  f"max_occ={st['max_occupancy']} "
+                  f"skew=x{st['skew']:.2f} headroom={st['headroom']}")
+    elif index is not None:
+        st = index.bucket_stats()
+        print(f"ivf buckets: cap={st['bucket_cap']} "
+              f"mean_occ={st['mean_occupancy']:.1f} "
+              f"max_occ={st['max_occupancy']} skew=x{st['skew']:.2f} "
+              f"headroom={st['headroom']}")
 
 
 def main(argv=None):
@@ -126,6 +161,17 @@ def main(argv=None):
     ap.add_argument("--nprobe", type=int, default=8,
                     help="IVF partitions probed per query")
     ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--kb-makers", default="",
+                    help="comma list of checkpoint-free maker kinds (e.g. "
+                         "graph_builder) to run as background engine "
+                         "clients while serving; their counters print "
+                         "with the serve summary (their traffic shares "
+                         "the server, so the timed req/s includes the "
+                         "maker load)")
+    ap.add_argument("--kb-maker-period", type=float, default=0.05,
+                    help="pacing floor (s) for --kb-makers jobs; keeps "
+                         "background makers from saturating the timed "
+                         "serving window")
     ap.add_argument("--no-coalesce", action="store_true",
                     help="per-call locked baseline (benchmark ablation)")
     args = ap.parse_args(argv)

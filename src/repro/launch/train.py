@@ -4,10 +4,20 @@
       --steps 100 --batch 8 --seq 64
 
 On this CPU container only --reduced configs are runnable; the full configs
-go through the dry-run (repro.launch.dryrun). The loop is the in-graph CARLS
-step: KB lookup -> loss(CE + graph reg) -> lazy grad push -> AdamW, with
-periodic checkpointing and a maker refresh pass (synchronous-maker mode; the
-thread-async mode lives in repro.core.async_runtime and examples/).
+go through the dry-run (repro.launch.dryrun). The default loop is the
+in-graph CARLS step: KB lookup -> loss(CE + graph reg) -> lazy grad push ->
+AdamW, with periodic checkpointing and a maker refresh pass
+(synchronous-maker mode), all KB traffic through the ``KBOps`` facade.
+
+``--makers`` switches to the paper's full asynchronous topology: the
+trainer and a ``MakerRuntime`` fleet (any of embedding_refresh /
+label_mining / graph_agreement / graph_builder) run concurrently as
+clients of ONE request-coalescing ``KnowledgeBankServer``, and the run
+ends with per-maker counters (maker_steps / rows_written /
+ckpt_version_lag):
+
+  PYTHONPATH=src python -m repro.launch.train --makers \
+      label_mining,graph_agreement --steps 20 --batch 8
 """
 from __future__ import annotations
 
@@ -20,8 +30,9 @@ import numpy as np
 
 from repro.checkpoint import DiskCheckpointStore
 from repro.configs import ARCH_IDS, get_config
-from repro.core import (kb_create, make_carls_train_step,
-                        make_embedding_refresh)
+from repro.core import (format_maker_stats, kb_create,
+                        make_carls_train_step, make_embedding_refresh,
+                        run_async_training)
 from repro.data import SyntheticGraphCorpus
 from repro.models import build_model
 from repro.optim import AdamW, warmup_cosine
@@ -40,6 +51,19 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--nodes", type=int, default=2048)
     ap.add_argument("--maker-every", type=int, default=10)
+    ap.add_argument("--makers", default="",
+                    help="comma list of async maker kinds (embedding_refresh"
+                         ",label_mining,graph_agreement,graph_builder); "
+                         "non-empty switches to the async trainer+"
+                         "MakerRuntime topology over one coalescing server")
+    ap.add_argument("--maker-batch", type=int, default=64)
+    ap.add_argument("--maker-period", type=float, default=0.0,
+                    help="per-maker pacing floor in seconds")
+    ap.add_argument("--ckpt-period", type=int, default=5,
+                    help="async mode: trainer steps between checkpoint "
+                         "publishes (the data-freshness axis)")
+    ap.add_argument("--kb-backend", choices=["dense", "pallas", "sharded"],
+                    default="dense", help="async mode: bank engine backend")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
@@ -59,6 +83,9 @@ def main(argv=None):
     dist = DistContext()
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"(reduced={args.reduced})")
+
+    if args.makers:
+        return run_async(model, cfg, args)
 
     params = model.init(jax.random.key(args.seed))
     n_par = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
@@ -95,6 +122,35 @@ def main(argv=None):
     dt = time.perf_counter() - t0
     print(f"done: {args.steps} steps in {dt:.1f}s "
           f"({dt/args.steps*1e3:.0f} ms/step)")
+
+
+def run_async(model, cfg, args) -> None:
+    """``--makers``: trainer + MakerRuntime concurrently against one
+    coalescing KnowledgeBankServer (the paper's Figure-1 triangle)."""
+    makers = [m.strip() for m in args.makers.split(",") if m.strip()]
+    corpus = SyntheticGraphCorpus(
+        num_nodes=args.nodes, vocab_size=cfg.vocab_size,
+        seq_len=args.seq + 1, neighbors_per_node=cfg.carls.num_neighbors,
+        num_clusters=4, labeled_frac=0.3, label_noise=0.3,
+        seed=args.seed)
+    print(f"async CARLS: trainer + makers {makers} "
+          f"(kb backend: {args.kb_backend})")
+    t0 = time.perf_counter()
+    res = run_async_training(
+        model, corpus, steps=args.steps, batch_size=args.batch,
+        makers=makers, maker_batch=args.maker_batch,
+        maker_period_s=args.maker_period, ckpt_period=args.ckpt_period,
+        lr=args.lr, trainer_push=True, kb_backend=args.kb_backend,
+        seed=args.seed)
+    dt = time.perf_counter() - t0
+    print(f"loss {res.losses[0]:.4f} -> {np.mean(res.losses[-5:]):.4f} "
+          f"over {args.steps} steps in {dt:.1f}s; "
+          f"mean row staleness {res.mean_staleness:.2f} trainer steps")
+    m = res.server.metrics
+    print(f"kb server: {m['requests']} requests -> {m['dispatches']} "
+          f"dispatches (coalescing x{res.server.coalescing_factor:.1f})")
+    for line in format_maker_stats(res.server.maker_stats):
+        print(line)
 
 
 if __name__ == "__main__":

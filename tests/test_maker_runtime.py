@@ -1,0 +1,373 @@
+"""MakerRuntime + KBOps facade: trainers and knowledge makers as engine
+clients (ISSUE 4).
+
+- KBOps facade: dense and sharded backends agree through the same closure
+  bundle; graph-agreement excludes the querying node on BOTH backends.
+- MakerRuntime: sync-vs-async embedding parity (same checkpoint -> same
+  bank rows), per-maker pacing + clean shutdown, checkpoint-version
+  tagging under concurrent trainer writes, idle backoff, and the stats
+  surface on the server.
+- ShardedIVFIndex.shard_stats / IVFIndex.bucket_stats: per-shard bucket
+  skew (capacity vs mean occupancy).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (KnowledgeBankServer, MakerRuntime, kb_create,
+                        graph_agreement_labels, feature_store_create,
+                        fs_update_labels, make_carls_train_step,
+                        make_embed_fn, make_kb_ops)
+from repro.core.ann_index import (build_ivf_index, build_sharded_ivf_index,
+                                  clustered_bank)
+from repro.data import SyntheticGraphCorpus
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.optim import AdamW, constant_lr
+from repro.sharding.partition import DistContext
+
+DIST = DistContext()
+
+
+def mesh_dist():
+    return DistContext(mesh=make_host_mesh((1, 1), ("data", "model")))
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("yi-6b").reduced().replace(num_layers=2)
+    model = build_model(cfg)
+    corpus = SyntheticGraphCorpus(num_nodes=128, vocab_size=cfg.vocab_size,
+                                  seq_len=17, num_clusters=4,
+                                  neighbors_per_node=4, labeled_frac=0.3,
+                                  seed=0)
+    params = model.init(jax.random.key(0))
+    return cfg, model, corpus, params
+
+
+# ---------------------------------------------------------------------------
+# KBOps facade
+# ---------------------------------------------------------------------------
+
+def test_kb_ops_dense_sharded_same_sequence():
+    """The facade's closures run the same op sequence to the same state on
+    the dense and (1x1-mesh) sharded backends."""
+    ops_d = make_kb_ops(DIST)
+    ops_s = make_kb_ops(mesh_dist())
+    assert ops_d.backend_name == "dense"
+    assert ops_s.backend_name == "sharded"
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, 32, 8).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    grads = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    states = {}
+    for name, ops in (("dense", ops_d), ("sharded", ops_s)):
+        kb = kb_create(32, 16, key=jax.random.key(1))
+        kb = ops.update(kb, ids, vals)
+        kb = ops.lazy_grad(kb, ids, grads)
+        v, kb = ops.lookup(kb, ids)
+        kb = ops.flush(kb)
+        s, i = ops.nn_search(kb, vals, 5, exclude_ids=ids[:, None])
+        states[name] = (np.asarray(kb.table), np.asarray(v),
+                        np.asarray(s), np.asarray(i))
+    for a, b in zip(states["dense"], states["sharded"]):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_trainer_step_on_sharded_facade(tiny):
+    """The trainer's step builder runs on the sharded backend purely via
+    the facade (no mesh branch in trainer.py anymore)."""
+    cfg, model, corpus, params = tiny
+    dist = mesh_dist()
+    opt = AdamW(lr=constant_lr(1e-3), weight_decay=0.0)
+    ops = make_kb_ops(dist, lazy_lr=cfg.carls.lazy_lr,
+                      zmax=cfg.carls.outlier_zmax)
+    step = jax.jit(make_carls_train_step(model, opt, DIST, kb_ops=ops))
+    kb = kb_create(corpus.num_nodes, cfg.d_model, key=jax.random.key(1))
+    b = {k: jnp.asarray(v) for k, v in
+         corpus.batch(np.random.default_rng(0), 4).items()}
+    _, _, kb2, m = step(params, opt.init(params), kb, b)
+    assert np.isfinite(float(m["loss"]))
+    assert (np.asarray(kb2.version)[np.asarray(b["sample_ids"])] > 0).all()
+
+
+def test_graph_agreement_excludes_self_on_sharded():
+    """ISSUE 4 satellite: the sharded vote path must exclude the querying
+    node (it used to search without exclusion, letting nodes vote for
+    themselves). Dense and sharded agree bit-for-bit."""
+    n, d = 32, 8
+    rng = np.random.default_rng(3)
+    table = rng.normal(size=(n, d)).astype(np.float32)
+    table /= np.linalg.norm(table, axis=1, keepdims=True)
+    kb = kb_create(n, d)._replace(table=jnp.asarray(3.0 * table))
+    fs = feature_store_create(n, 4)
+    # every node labeled, label = own parity -> a self-vote would ALWAYS
+    # win (a node is its own nearest neighbor at 3x norm)
+    labels = (np.arange(n) % 2).astype(np.int32)
+    fs = fs_update_labels(fs, jnp.arange(n), jnp.asarray(labels),
+                          jnp.ones(n))
+    q_ids = np.arange(8)
+    q = jnp.asarray(table[q_ids])
+    outs = {}
+    for name, ops in (("dense", make_kb_ops(DIST)),
+                      ("sharded", make_kb_ops(mesh_dist()))):
+        pred, conf = graph_agreement_labels(
+            kb, fs, q, jnp.asarray(q_ids), k=4, num_classes=2, kb_ops=ops)
+        outs[name] = (np.asarray(pred), np.asarray(conf))
+    np.testing.assert_array_equal(outs["dense"][0], outs["sharded"][0])
+    np.testing.assert_allclose(outs["dense"][1], outs["sharded"][1],
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MakerRuntime
+# ---------------------------------------------------------------------------
+
+def _wait_for(cond, timeout_s=60.0):
+    deadline = time.time() + timeout_s
+    while not cond():
+        if time.time() > deadline:
+            raise AssertionError("timeout waiting for maker condition")
+        time.sleep(0.01)
+
+
+def test_sync_async_embedding_refresh_parity(tiny):
+    """A MakerRuntime embedding_refresh fleet pinned to ONE checkpoint
+    must converge the bank to exactly what a synchronous inline refresh of
+    every node computes."""
+    from repro.checkpoint import MemoryCheckpointStore
+    cfg, model, corpus, params = tiny
+    embed = jax.jit(make_embed_fn(model, DIST))
+    n = corpus.num_nodes
+    with KnowledgeBankServer(n, cfg.d_model) as server:
+        ckpts = MemoryCheckpointStore()
+        ckpts.save(0, params)
+        rt = MakerRuntime(server, corpus, ckpts=ckpts, embed_fn=embed)
+        job = rt.register("embedding_refresh", batch_size=32)
+        rt.start()
+        _wait_for(lambda: job.rows_written >= n)   # full round-robin pass
+        rt.stop()
+        assert job.last_error is None
+        tbl = server.table_snapshot()
+    want = np.asarray(embed(params,
+                            jnp.asarray(corpus.node_tokens(
+                                np.arange(n))[:, :-1])))
+    np.testing.assert_allclose(tbl, want, rtol=1e-4, atol=1e-5)
+
+
+def test_maker_pacing_and_shutdown():
+    """min_period_s paces each job independently; stop() joins cleanly."""
+    corpus = SyntheticGraphCorpus(num_nodes=64, seq_len=9,
+                                  neighbors_per_node=4)
+    with KnowledgeBankServer(64, 8) as server:
+        server.update(np.arange(64),
+                      np.random.default_rng(0).normal(
+                          size=(64, 8)).astype(np.float32))
+        rt = MakerRuntime(server, corpus, builder_k=4)
+        fast = rt.register("graph_builder", batch_size=8, name="fast")
+        slow = rt.register("graph_builder", batch_size=8, name="slow",
+                           min_period_s=0.25)
+        rt.start()
+        _wait_for(lambda: fast.steps >= 8)
+        elapsed0 = time.time()
+        rt.stop()
+        elapsed = time.time() - elapsed0
+        assert elapsed < 5.0                      # prompt join
+        assert not fast.is_alive() and not slow.is_alive()
+        # the paced job cannot have taken more steps than its period allows
+        # (generous bound: wall time is unknown, but fast >> slow holds)
+        assert fast.steps > slow.steps
+        stats = server.maker_stats
+        assert stats["fast"]["maker_steps"] == fast.steps
+        assert stats["slow"]["rows_written"] == slow.rows_written
+        assert stats["fast"]["error"] is None
+
+
+def test_ckpt_version_tagging_under_concurrent_trainer_writes(tiny):
+    """Maker writes carry the ckpt step the maker LOADED, even while a
+    trainer thread is writing other rows with its own (newer) step tags;
+    ckpt_version_lag tracks trainer_step - ckpt_step_used."""
+    from repro.checkpoint import MemoryCheckpointStore
+    cfg, model, corpus, params = tiny
+    embed = jax.jit(make_embed_fn(model, DIST))
+    n = corpus.num_nodes
+    with KnowledgeBankServer(n, cfg.d_model) as server:
+        ckpts = MemoryCheckpointStore()
+        ckpts.save(0, params)
+        rt = MakerRuntime(server, corpus, ckpts=ckpts, embed_fn=embed)
+        # maker owns rows [0, 64); the "trainer" writes rows [64, 128)
+        job = rt.register("embedding_refresh", batch_size=16,
+                          node_slice=np.arange(64))
+        rt.start()
+        _wait_for(lambda: job.steps >= 2)
+        ckpts.save(5, params)                     # trainer publishes v5
+        rt.trainer_step = 7                       # ...and keeps training
+        rng = np.random.default_rng(1)
+        for s in range(7, 10):                    # concurrent trainer push
+            server.update(64 + rng.integers(0, 64, 8),
+                          rng.normal(size=(8, cfg.d_model)), src_step=s)
+        before = job.steps
+        _wait_for(lambda: job.steps >= before + 3)
+        rt.stop()
+        assert job.last_error is None
+        # every batch was tagged with a PUBLISHED checkpoint step
+        assert set(job.ckpt_steps_used) <= {0, 5}
+        # once v5 was live and the trainer clock said 7, lag settles at 2
+        assert job.last_lag == 2
+        assert job.lag_sum > 0
+        src = server._row_src_step
+        # maker rows carry maker ckpt tags; trainer rows trainer steps
+        assert set(np.unique(src[:64])) <= {-1, 0, 5}
+        written = src[64:] >= 0
+        assert set(np.unique(src[64:][written])) <= {7, 8, 9}
+
+
+def test_idle_maker_backs_off_without_burning_steps():
+    """A maker whose preconditions aren't met (label mining with zero
+    labeled nodes) idles at the backoff period instead of spinning."""
+    corpus = SyntheticGraphCorpus(num_nodes=64, seq_len=9,
+                                  neighbors_per_node=4)
+    from repro.checkpoint import MemoryCheckpointStore
+    ckpts = MemoryCheckpointStore()
+    ckpts.save(0, {})
+    with KnowledgeBankServer(64, 8) as server:
+        rt = MakerRuntime(server, corpus, ckpts=ckpts,
+                          embed_fn=lambda p, t: np.zeros((t.shape[0], 8)),
+                          seed_labels=False)
+        job = rt.register("label_mining", batch_size=8)
+        rt.start()
+        time.sleep(0.3)
+        rt.stop()
+        assert job.steps == 0                     # idle cycles don't count
+        assert job.last_error is None
+
+
+def test_graph_builder_narrower_than_store_width():
+    """A builder_k below the store's neighbor width pads with the missing
+    marker instead of crashing every step (the store is sized for the
+    corpus's static degree)."""
+    corpus = SyntheticGraphCorpus(num_nodes=64, seq_len=9,
+                                  neighbors_per_node=8)
+    with KnowledgeBankServer(64, 8) as server:
+        server.update(np.arange(64),
+                      np.random.default_rng(0).normal(
+                          size=(64, 8)).astype(np.float32))
+        rt = MakerRuntime(server, corpus, builder_k=4)
+        job = rt.register("graph_builder", batch_size=8)
+        rt.start()
+        _wait_for(lambda: job.steps >= 2)
+        rt.stop()
+        assert job.last_error is None and job.errors == 0
+        assert job.rows_written > 0
+        fs = rt.feature_store.snapshot()
+        written = np.asarray(fs.nbr_ids[job.nodes[:8]])
+        assert (written[:, :4] >= 0).all()        # k live neighbors
+        assert (written[:, 4:] == -1).all()       # padded to store width
+        # self-exclusion via the server's exclude_ids path
+        assert (written[:, :4] != job.nodes[:8, None]).all()
+
+
+def test_crashed_maker_steps_count_as_errors_not_steps():
+    """A permanently-failing maker must not look productive: batches that
+    raise land in ``errors``, never in ``maker_steps``."""
+    from repro.checkpoint import MemoryCheckpointStore
+    corpus = SyntheticGraphCorpus(num_nodes=64, seq_len=9,
+                                  neighbors_per_node=4)
+    ckpts = MemoryCheckpointStore()
+    ckpts.save(0, {})
+
+    def broken_embed(params, toks):
+        raise RuntimeError("boom")
+
+    with KnowledgeBankServer(64, 8) as server:
+        rt = MakerRuntime(server, corpus, ckpts=ckpts,
+                          embed_fn=broken_embed)
+        job = rt.register("embedding_refresh", batch_size=8)
+        rt.start()
+        _wait_for(lambda: job.errors >= 3)
+        rt.stop()
+        assert job.steps == 0 and job.rows_written == 0
+        s = server.maker_stats[job.name]
+        assert s["errors"] >= 3 and "boom" in s["error"]
+
+
+def test_server_nn_search_exclude_ids():
+    """exclude_ids through the server (and its coalescing path) matches
+    the engine's exact-path exclusion semantics."""
+    rng = np.random.default_rng(5)
+    vals = rng.normal(size=(32, 8)).astype(np.float32)
+    vals /= np.linalg.norm(vals, axis=1, keepdims=True)  # MIPS: self wins
+    with KnowledgeBankServer(32, 8) as server:
+        server.update(np.arange(32), vals)
+        q = vals[:4]
+        s0, i0 = server.nn_search(q, k=3)
+        assert (i0[:, 0] == np.arange(4)).all()   # self wins unexcluded
+        s1, i1 = server.nn_search(q, k=3,
+                                  exclude_ids=np.arange(4)[:, None])
+        assert (i1 != np.arange(4)[:, None]).all()
+        # banned candidates gone, next-best preserved in order
+        np.testing.assert_array_equal(i1[:, :2], i0[:, 1:])
+
+
+def test_engine_nn_search_exclude_rides_the_ivf_path():
+    """exclude_ids must not force the exact path: the engine over-fetches
+    k+E through the live (IVF) program and masks host-side."""
+    from repro.core import KBEngine
+    bank = clustered_bank(256, 16, 8, seed=2)
+    eng = KBEngine(256, 16, search_mode="ivf", ann_nlist=8)
+    eng.update(np.arange(256), bank)
+    eng.rebuild_ann_index()
+    q = bank[:4]
+    s, i = eng.nn_search(q, 8, exclude_ids=np.arange(4)[:, None])
+    assert eng.search_stats["ivf"] == 1 and eng.search_stats["exact"] == 0
+    assert (i != np.arange(4)[:, None]).all()
+    assert np.isfinite(s).all()
+
+
+def test_graph_agreement_labels_no_labeled_candidates_yields_zero_conf():
+    """All-unlabeled candidate sets must produce conf 0 (gated no-op),
+    not NaN."""
+    n, d = 16, 4
+    rng = np.random.default_rng(7)
+    kb = kb_create(n, d)._replace(
+        table=jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)))
+    fs = feature_store_create(n, 4)               # nobody is labeled
+    q_ids = np.arange(4)
+    pred, conf = graph_agreement_labels(
+        kb, fs, jnp.asarray(np.asarray(kb.table)[q_ids]),
+        jnp.asarray(q_ids), k=4, num_classes=2, kb_ops=make_kb_ops(DIST))
+    assert np.isfinite(np.asarray(conf)).all()
+    np.testing.assert_array_equal(np.asarray(conf), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# IVF bucket-skew stats
+# ---------------------------------------------------------------------------
+
+def test_ivf_bucket_stats():
+    bank = clustered_bank(1024, 16, 8, seed=0)
+    idx = build_ivf_index(bank, nlist=16)
+    st = idx.bucket_stats()
+    assert st["nlist"] == 16 and st["bucket_cap"] == idx.bucket_cap
+    assert st["max_occupancy"] <= idx.bucket_cap
+    assert st["headroom"] == idx.bucket_cap - st["max_occupancy"]
+    # every row lands in exactly one bucket
+    assert st["mean_occupancy"] * st["nlist"] == pytest.approx(1024)
+    assert st["skew"] >= 1.0
+
+
+def test_sharded_ivf_shard_stats():
+    bank = clustered_bank(1024, 16, 8, seed=1)
+    idx = build_sharded_ivf_index(bank, 4, nlist=8)
+    stats = idx.shard_stats()
+    assert [s["shard"] for s in stats] == [0, 1, 2, 3]
+    total = sum(s["mean_occupancy"] * s["nlist"] for s in stats)
+    assert total == pytest.approx(1024)           # all rows accounted for
+    for s in stats:
+        assert s["bucket_cap"] == idx.bucket_cap  # capacity is common
+        assert s["max_occupancy"] <= idx.bucket_cap
+        assert s["skew"] >= 1.0

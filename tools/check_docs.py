@@ -1,6 +1,6 @@
 """Docs CI: keep README/docs honest.
 
-Two checks, zero dependencies:
+Three checks, zero dependencies:
 
 1. **Snippet execution** — every fenced ```python block in README.md and
    docs/*.md is extracted and executed via ``python -c`` with
@@ -10,18 +10,34 @@ Two checks, zero dependencies:
 2. **Link check** — every relative markdown link in README.md, docs/,
    and ROADMAP.md must resolve to an existing file (anchors stripped;
    http(s)/mailto links skipped — no network in CI).
+3. **Bench-key guard** — the README results table is regenerated from
+   ``BENCH_nn_search.json``; the keys it relies on must stay present in
+   whatever ``benchmarks/nn_search_bench.py`` emits. Runs when the file
+   exists (CI runs it right after the quick-bench step writes one);
+   ``--bench`` runs ONLY this check and fails if the file is missing.
 
-Usage:  python tools/check_docs.py
-Exit code 0 = all snippets ran and all links resolve.
+Usage:  python tools/check_docs.py [--bench]
+Exit code 0 = all selected checks pass.
 """
 from __future__ import annotations
 
+import json
 import os
 import re
 import subprocess
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BENCH_JSON = "BENCH_nn_search.json"
+# what README.md's results table is built from: per-size timing/recall
+# pairs plus the sharded section. Renaming any of these in
+# benchmarks/nn_search_bench.py silently orphans the README numbers.
+BENCH_TOP_KEYS = ("rows", "config", "sizes", "sharded")
+BENCH_SIZE_KEYS = ("nlist", "nprobe", "us_exact_ref", "us_ivf_ref",
+                   "us_build", "recall_at_10", "ivf_speedup_vs_exact")
+BENCH_SHARDED_KEYS = ("n_shards", "us_sharded_exact", "us_sharded_ivf",
+                      "recall_at_10", "ivf_speedup_vs_sharded_exact")
 
 SNIPPET_FILES = ["README.md"]
 LINK_FILES = ["README.md", "ROADMAP.md"]
@@ -75,8 +91,49 @@ def check_links() -> int:
     return failures
 
 
-def main() -> int:
-    bad = run_snippets() + check_links()
+def check_bench_keys(required: bool = False) -> int:
+    """README's results table references BENCH_nn_search.json fields; a
+    bench rewrite that drops/renames them must fail CI, not a reader."""
+    path = os.path.join(ROOT, BENCH_JSON)
+    if not os.path.exists(path):
+        if required:
+            print(f"FAIL {BENCH_JSON} missing (run benchmarks/run.py "
+                  "--only nn_search_bench first)", file=sys.stderr)
+            return 1
+        print(f"skip {BENCH_JSON} (not present; quick-bench CI runs this "
+              "check after generating it)")
+        return 0
+    with open(path) as f:
+        data = json.load(f)
+    failures = 0
+
+    def need(obj, keys, where):
+        nonlocal failures
+        for k in keys:
+            if k not in obj:
+                failures += 1
+                print(f"FAIL {BENCH_JSON}: missing key {where}.{k} "
+                      "(referenced by the README results table)",
+                      file=sys.stderr)
+
+    need(data, BENCH_TOP_KEYS, "$")
+    if not data.get("sizes"):
+        failures += 1
+        print(f"FAIL {BENCH_JSON}: 'sizes' is empty", file=sys.stderr)
+    for n, size in data.get("sizes", {}).items():
+        need(size, BENCH_SIZE_KEYS, f"sizes[{n}]")
+    need(data.get("sharded", {}), BENCH_SHARDED_KEYS, "sharded")
+    if not failures:
+        print(f"ok   {BENCH_JSON} keys")
+    return failures
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if "--bench" in argv:
+        bad = check_bench_keys(required=True)
+    else:
+        bad = run_snippets() + check_links() + check_bench_keys()
     if bad:
         print(f"{bad} doc check(s) failed", file=sys.stderr)
         return 1
