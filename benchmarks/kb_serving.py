@@ -13,6 +13,13 @@ lookup clients each:
                  (``coalesce=False``) — dispatch amortization only.
 - coalescing   : the dispatcher drains concurrent requests into one
                  batched op (``coalesce=True``).
+- socket-loopback : the same coalescing server behind the TCP wire
+                 protocol (``repro.core.kb_transport``) on 127.0.0.1 —
+                 the 8 clients share one pipelined ``RemoteKnowledgeBank``
+                 connection, so this row IS the transport overhead
+                 (framing + loopback + codec) over the in-proc
+                 coalescing row. Tracked so the cross-process seam
+                 (ISSUE 5) can never silently regress serving.
 
 Acceptance (ISSUE 1): coalescing >= 2x eager-locked lookup throughput at 8
 clients. Buckets are pre-compiled via ``server.warmup`` so the numbers are
@@ -28,7 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import KnowledgeBankServer, knowledge_bank as kbm
+from repro.core import (KBTransportServer, KnowledgeBankServer,
+                        RemoteKnowledgeBank, knowledge_bank as kbm)
 
 N, D = 4096, 64
 CLIENTS = 8
@@ -77,17 +85,26 @@ def run(quick: bool = False) -> List[Dict]:
     calls = 30 if quick else 120
     table = np.random.default_rng(0).normal(size=(N, D)).astype(np.float32)
     rows, thru = [], {}
-    for mode in ("eager-locked", "jit-locked", "coalescing"):
+    for mode in ("eager-locked", "jit-locked", "coalescing",
+                 "socket-loopback"):
+        transport = remote = None
         if mode == "eager-locked":
             server = _EagerLockedServer(N, D)
             server.update(np.arange(N), table)
             server.lookup(np.arange(BATCH))            # one-time tracing
         else:
             server = KnowledgeBankServer(N, D,
-                                         coalesce=(mode == "coalescing"))
+                                         coalesce=(mode != "jit-locked"))
             server.update(np.arange(N), table)
             server.warmup(BATCH * CLIENTS)
-        thru[mode] = _drive(server, calls)
+        target = server
+        if mode == "socket-loopback":
+            transport = KBTransportServer(server)
+            remote = RemoteKnowledgeBank("127.0.0.1", transport.port,
+                                         client_name="bench")
+            remote.lookup(np.arange(BATCH))            # prime the wire
+            target = remote
+        thru[mode] = _drive(target, calls)
         extra = ""
         if mode == "coalescing":
             extra = (f" coalescing_factor={server.coalescing_factor:.1f}"
@@ -95,6 +112,15 @@ def run(quick: bool = False) -> List[Dict]:
                      f"{thru[mode] / thru['eager-locked']:.2f}x"
                      f" speedup_vs_jit="
                      f"{thru[mode] / thru['jit-locked']:.2f}x")
+        if mode == "socket-loopback":
+            # per-call wire cost = the whole row's delta vs in-proc
+            overhead = 1e6 / thru[mode] - 1e6 / thru["coalescing"]
+            extra = (f" coalescing_factor={server.coalescing_factor:.1f}"
+                     f" wire_overhead_us={overhead:.0f}"
+                     f" vs_inproc_coalescing="
+                     f"{thru[mode] / thru['coalescing']:.2f}x")
+            remote.close()
+            transport.close()
         server.close()
         rows.append({
             "name": f"kb_serving/{mode}/clients={CLIENTS}",

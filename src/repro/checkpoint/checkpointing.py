@@ -50,10 +50,31 @@ def unflatten_params(template, flat: Dict[str, np.ndarray]):
 
 
 class DiskCheckpointStore:
-    def __init__(self, directory: str, keep: int = 3):
+    """npz checkpoints on disk — the weight channel when trainers and
+    makers are SEPARATE PROCESSES (a standalone ``launch/maker_worker.py``
+    polls this directory the way in-process makers poll the memory store).
+
+    ``template`` (or ``set_template``) binds a params pytree once so
+    ``load_latest()`` can be called template-free — the maker-runtime
+    contract shared with ``MemoryCheckpointStore``."""
+
+    def __init__(self, directory: str, keep: int = 3, template: Any = None):
         self.dir = directory
         self.keep = keep
+        self.template = template
         os.makedirs(directory, exist_ok=True)
+
+    def set_template(self, template: Any) -> "DiskCheckpointStore":
+        self.template = template
+        return self
+
+    def _template(self, template):
+        if template is None:
+            template = self.template
+        if template is None:
+            raise ValueError("DiskCheckpointStore needs a params template "
+                             "(pass one, or bind it via set_template)")
+        return template
 
     def _path(self, step: int) -> str:
         return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
@@ -86,12 +107,12 @@ class DiskCheckpointStore:
         s = self.steps()
         return s[-1] if s else None
 
-    def load(self, step: int, template) -> Any:
+    def load(self, step: int, template: Any = None) -> Any:
         with np.load(self._path(step)) as z:
             flat = {k: z[k] for k in z.files}
-        return unflatten_params(template, flat)
+        return unflatten_params(self._template(template), flat)
 
-    def load_latest(self, template) -> Tuple[Optional[int], Any]:
+    def load_latest(self, template: Any = None) -> Tuple[Optional[int], Any]:
         s = self.latest_step()
         if s is None:
             return None, None

@@ -23,10 +23,16 @@ from repro.core.knowledge_maker import (graph_agreement_labels,
                                         make_embedding_refresh,
                                         make_graph_builder, make_label_mining,
                                         vote_agreement_labels)
-from repro.core.async_runtime import (AsyncRunResult, KnowledgeBankServer,
-                                      MakerJob, MakerRuntime,
-                                      SharedFeatureStore, format_maker_stats,
-                                      run_async_training)
+from repro.core.async_runtime import (AsyncRunResult, KBServerClosedError,
+                                      KnowledgeBankServer, MakerJob,
+                                      MakerRuntime, SharedFeatureStore,
+                                      format_maker_stats, run_async_training)
+from repro.core.kb_protocol import (PROTOCOL_VERSION, InProcessTransport,
+                                    KBClient, ProtocolError, RemoteKBError,
+                                    Transport)
+from repro.core.kb_transport import (KBTransportServer, RemoteKnowledgeBank,
+                                     SocketTransport, TransportError,
+                                     parse_hostport)
 
 __all__ = [
     "FeatureStore", "KBState", "feature_store_create", "fs_lookup_neighbors",
@@ -43,6 +49,11 @@ __all__ = [
     "make_inline_baseline_step", "model_loss",
     "graph_agreement_labels", "make_embed_fn", "make_embedding_refresh",
     "make_graph_builder", "make_label_mining", "vote_agreement_labels",
-    "AsyncRunResult", "KnowledgeBankServer", "MakerJob", "MakerRuntime",
-    "SharedFeatureStore", "format_maker_stats", "run_async_training",
+    "AsyncRunResult", "KBServerClosedError", "KnowledgeBankServer",
+    "MakerJob", "MakerRuntime", "SharedFeatureStore", "format_maker_stats",
+    "run_async_training",
+    "PROTOCOL_VERSION", "InProcessTransport", "KBClient", "ProtocolError",
+    "RemoteKBError", "Transport",
+    "KBTransportServer", "RemoteKnowledgeBank", "SocketTransport",
+    "TransportError", "parse_hostport",
 ]

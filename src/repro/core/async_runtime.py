@@ -11,7 +11,13 @@ the pluggable KB engine (``repro.core.kb_engine``):
   maximal FIFO run of same-op requests. N concurrent clients cost one device
   dispatch — the RPC-amortization trick CARLS' DynamicEmbedding servers and
   TF-GNN's bulk graph services use, in-process. Set ``coalesce=False`` for
-  the per-call locked baseline (kept as the benchmark ablation).
+  the per-call locked baseline (kept as the benchmark ablation). The
+  server's whole client surface is also a versioned wire protocol
+  (``repro.core.kb_protocol`` / ``kb_transport``): remote processes'
+  requests enter the same queue via ``enqueue_op``, so they coalesce with
+  in-process callers', and everything here takes the ``KBClient``
+  duck-type — a ``RemoteKnowledgeBank`` drops in wherever the concrete
+  server does.
 - ``MakerRuntime`` + ``MakerJob``: the paper's knowledge makers as
   independently-paced background engine clients — the same
   load-latest-checkpoint / compute / push loop the ``IVFRefresher`` index
@@ -64,6 +70,7 @@ import numpy as np
 
 from repro.checkpoint import MemoryCheckpointStore
 from repro.core.kb_engine import KBEngine
+from repro.core.kb_protocol import KBClient
 from repro.core.knowledge_bank import (feature_store_create, fs_update_labels,
                                        fs_update_neighbors)
 from repro.core.knowledge_maker import vote_agreement_labels
@@ -72,6 +79,12 @@ from repro.data.pipeline import SyntheticGraphCorpus
 from repro.models.model import LM
 from repro.optim import AdamW
 from repro.sharding.partition import DistContext
+
+
+class KBServerClosedError(RuntimeError):
+    """Raised by requests submitted after ``KnowledgeBankServer.close()``
+    began — fail fast instead of hanging in ``_Request.wait()`` behind a
+    dispatcher that is (or has finished) draining."""
 
 
 class _Request:
@@ -219,10 +232,45 @@ class KnowledgeBankServer:
                                      excl=excl))
 
     def table_snapshot(self) -> np.ndarray:
-        """Consistent snapshot: barriers behind every queued write first."""
-        self._submit(_Request("barrier"))       # drain queued writes first
+        """Consistent snapshot: barriers behind every queued write first.
+        Still legal after a CLEAN close (results summaries read the final
+        table): the drain emptied the queue, so the barrier is vacuous and
+        the engine is quiescent. During a close still in progress the
+        barrier fails fast like any other request."""
+        if not (self._closed and self._dispatcher is None):
+            self._submit(_Request("barrier"))   # drain queued writes first
         with self._elock:
             return self.engine.table_snapshot()
+
+    def stats(self) -> dict:
+        """Everything a remote operator can ask in one call — the payload
+        of the wire protocol's ``StatsRequest`` (flat numbers / strings /
+        sub-dicts only, so it serializes pickle-free): server metrics, the
+        derived staleness/coalescing ratios, the engine's search counters,
+        and any attached maker fleet's per-maker counters."""
+        with self._mlock:
+            m = dict(self.metrics)
+        return {
+            "metrics": m,
+            "mean_staleness": float(self.mean_staleness),
+            "coalescing_factor": float(self.coalescing_factor),
+            "search_stats": dict(self.engine.search_stats),
+            "backend": self.engine.backend.name,
+            "num_entries": int(self.engine.num_entries),
+            "dim": int(self.engine.dim),
+            "maker_stats": self.maker_stats,
+        }
+
+    @property
+    def num_entries(self) -> int:
+        """Bank geometry, mirrored from the engine — part of the client
+        duck-type (``RemoteKnowledgeBank`` learns these from the wire
+        handshake instead)."""
+        return self.engine.num_entries
+
+    @property
+    def dim(self) -> int:
+        return self.engine.dim
 
     def warmup(self, max_batch: int = 256) -> None:
         """Pre-compile the engine's jit buckets up to ``max_batch``."""
@@ -268,22 +316,35 @@ class KnowledgeBankServer:
         return self._ann_refresher
 
     def close(self, timeout_s: float = 60.0) -> None:
-        """Stop the dispatcher after draining; later calls run direct.
-        Raises if the drain does not finish within ``timeout_s`` — metrics
-        and snapshots are only consistent once the dispatcher has exited."""
+        """Stop the dispatcher after draining every already-queued request.
+        The moment close() begins, NEW submissions fail fast with
+        ``KBServerClosedError`` — they used to race the drain and could
+        block forever in ``_Request.wait()`` on a queue nobody would ever
+        service again. Raises if the drain does not finish within
+        ``timeout_s``; requests still stranded in the queue at that point
+        are failed with the same error, never left hanging."""
         if self._ann_refresher is not None:
             self._ann_refresher.stop()
             self._ann_refresher = None
-        if self._dispatcher is None:
-            return
         with self._cond:
             self._closed = True
             self._cond.notify_all()
+        if self._dispatcher is None:
+            return
         self._dispatcher.join(timeout=timeout_s)
         if self._dispatcher.is_alive():
+            with self._cond:
+                stranded = list(self._queue)
+                self._queue.clear()
+            err = KBServerClosedError(
+                f"request abandoned: KB dispatcher did not drain within "
+                f"{timeout_s}s of close()")
+            for r in stranded:
+                r.error = err
+                r.event.set()
             raise RuntimeError(
                 f"KB dispatcher did not drain within {timeout_s}s "
-                f"({len(self._queue)} requests still queued)")
+                f"({len(stranded)} stranded requests failed)")
         self._dispatcher = None
 
     def __enter__(self):
@@ -294,24 +355,46 @@ class KnowledgeBankServer:
 
     # -- execution ---------------------------------------------------------
 
-    def _submit(self, req: _Request):
-        if req.op != "barrier":         # barriers never dispatch; keep the
-            with self._mlock:           # coalescing_factor ratio honest
-                self.metrics["requests"] += 1
-        if self.coalesce and not self._closed:
+    def enqueue_op(self, op: str, *, ids=None, payload=None, k=None,
+                   mode=None, excl=None, shape=None, meta: int = 0):
+        """Queue one client op WITHOUT waiting and return the pending
+        request (call ``.wait()`` for the result). This is the transport
+        layer's entry point (``repro.core.kb_transport``): a connection
+        reader enqueues decoded wire requests here back-to-back, so
+        cross-process traffic lands in the same coalescing window as
+        in-process callers'. Raises ``KBServerClosedError`` once close()
+        has begun."""
+        return self._submit_nowait(_Request(op, ids, payload, k=k,
+                                            mode=mode, excl=excl,
+                                            shape=shape, meta=meta))
+
+    def _submit_nowait(self, req: _Request) -> _Request:
+        if self.coalesce:
             with self._cond:
-                if not self._closed:        # re-check under the lock
-                    self._queue.append(req)
-                    self._cond.notify()
-                    queued = True
-                else:
-                    queued = False
-            if queued:
-                return req.wait()
-        # per-call locked baseline (and post-close stragglers)
+                if self._closed:
+                    raise KBServerClosedError(
+                        "KnowledgeBankServer is closed — request submitted "
+                        "after close() began")
+                if req.op != "barrier":     # barriers never dispatch; keep
+                    with self._mlock:       # coalescing_factor honest
+                        self.metrics["requests"] += 1
+                self._queue.append(req)
+                self._cond.notify()
+            return req
+        # per-call locked baseline (coalesce=False)
+        if self._closed:
+            raise KBServerClosedError(
+                "KnowledgeBankServer is closed — request submitted after "
+                "close() began")
+        if req.op != "barrier":
+            with self._mlock:
+                self.metrics["requests"] += 1
         with self._elock:
             self._execute_run([req])
-        return req.wait()
+        return req
+
+    def _submit(self, req: _Request):
+        return self._submit_nowait(req).wait()
 
     def _dispatch_loop(self):
         while True:
@@ -500,6 +583,20 @@ class MakerJob(threading.Thread):
         self.ckpt_steps_used: deque = deque(maxlen=4096)
         self.last_error: Optional[BaseException] = None
         self._cursor = 0
+        self._ckpt_cache: Optional[tuple] = None    # (step, params)
+
+    def _load_ckpt(self):
+        """Latest checkpoint, re-READ only when the published step moved:
+        ``latest_step()`` is a cheap probe (dict max / listdir), while a
+        full ``load_latest()`` on the disk store re-parses every weight —
+        at maker pacing that would be the whole npz per batch."""
+        store = self.runtime.ckpts
+        latest = store.latest_step()
+        if latest is None:
+            return None, None
+        if self._ckpt_cache is None or self._ckpt_cache[0] != latest:
+            self._ckpt_cache = store.load_latest()
+        return self._ckpt_cache
 
     def _next_ids(self) -> np.ndarray:
         ids = self.nodes[np.arange(self._cursor,
@@ -517,7 +614,7 @@ class MakerJob(threading.Thread):
         while not self.stop_event.is_set():
             try:
                 if rt.ckpts is not None:
-                    step, params = rt.ckpts.load_latest()
+                    step, params = self._load_ckpt()
                 else:
                     step, params = None, None
                 if self.needs_ckpt and params is None:
@@ -553,7 +650,14 @@ class MakerJob(threading.Thread):
 
 class MakerRuntime:
     """Registry + lifecycle for the paper's knowledge makers, all clients
-    of ONE coalescing ``KnowledgeBankServer``.
+    of ONE knowledge bank.
+
+    ``server`` is any ``repro.core.kb_protocol.KBClient`` — the concrete
+    in-process ``KnowledgeBankServer`` (the zero-copy case) or a
+    ``RemoteKnowledgeBank`` connected over the wire — which is what lets
+    the SAME runtime run its fleet inside the trainer process or as a
+    standalone maker worker (``launch/maker_worker.py --connect``) against
+    a bank in another process.
 
     ``register(kind)`` instantiates any of the four maker types as a
     ``MakerJob`` with its own batch size, pacing (``min_period_s``), and
@@ -582,7 +686,7 @@ class MakerRuntime:
     MAKER_KINDS = ("embedding_refresh", "label_mining", "graph_agreement",
                    "graph_builder")
 
-    def __init__(self, server: KnowledgeBankServer,
+    def __init__(self, server: KBClient,
                  corpus: Optional[SyntheticGraphCorpus] = None, *,
                  num_entries: Optional[int] = None,
                  ckpts: Optional[MemoryCheckpointStore] = None,
@@ -595,6 +699,10 @@ class MakerRuntime:
                  seed_labels: bool = True, seed_conf: float = 0.5):
         self.server, self.corpus = server, corpus
         self.ckpts, self.embed_fn = ckpts, embed_fn
+        if corpus is None and num_entries is None:
+            # the client duck-type carries the bank geometry (handshake or
+            # live engine), so corpus-less runtimes need no explicit size
+            num_entries = getattr(server, "num_entries", None)
         if corpus is None and num_entries is None:
             raise ValueError("MakerRuntime needs a corpus or num_entries "
                              "(trainer-less serving runs only the "
@@ -624,6 +732,11 @@ class MakerRuntime:
                     lab, corpus.noisy_labels[lab].astype(np.int32),
                     np.full(lab.size, seed_conf, np.float32))
         self.trainer_step = 0           # published by the trainer loop
+        # label_mining's per-class centroids, cached across maker steps and
+        # recomputed only when the loaded checkpoint changes (see
+        # _label_mining_step); the hit counter is the observability hook
+        self._centroid_cache: Optional[tuple] = None
+        self.centroid_cache_hits = 0
         self.jobs: List[MakerJob] = []
         server.attach_maker_runtime(self)
 
@@ -646,19 +759,38 @@ class MakerRuntime:
     def _label_mining_step(self, params, step: int, ids) -> int:
         """§4.2.1 online label mining, asynchronous form: the class
         read-out is the labeled-centroid classifier over CURRENT bank rows
-        (fetched through the server like any other client)."""
+        (fetched through the server like any other client).
+
+        The centroids are CACHED between maker steps and recomputed only
+        when the loaded checkpoint step changes: the labeled-row read-back
+        is a full ``centroid_sample``-row server lookup, and paying it once
+        per published checkpoint instead of once per maker step is what
+        keeps a fast-pacing mining fleet from dominating bank traffic
+        (``centroid_cache_hits`` counts the lookups saved). Within one
+        checkpoint the classifier is intentionally frozen — bank rows
+        written since the cache was built shift the centroids only after
+        the next checkpoint publish, which is the same staleness contract
+        every maker already runs under."""
         fs = self.feature_store
-        lab = fs.labeled_ids(cap=self.centroid_sample)
-        if lab.size == 0:
-            return None                 # idle: nothing to calibrate against
+        cached = self._centroid_cache
+        if cached is not None and cached[0] == step:
+            cent = cached[1]
+            self.centroid_cache_hits += 1
+        else:
+            lab = fs.labeled_ids(cap=self.centroid_sample)
+            if lab.size == 0:
+                return None             # idle: nothing to calibrate against
+            lab_emb = self.server.lookup(lab,
+                                         trainer_step=self.trainer_step)
+            lab_cls = fs.labels()[lab]
+            cent = np.zeros((self.num_classes, lab_emb.shape[1]),
+                            np.float32)
+            for c in range(self.num_classes):
+                m = lab_cls == c
+                if m.any():
+                    cent[c] = lab_emb[m].mean(0)
+            self._centroid_cache = (step, cent)
         emb = self._embed(params, ids)
-        lab_emb = self.server.lookup(lab, trainer_step=self.trainer_step)
-        lab_cls = fs.labels()[lab]
-        cent = np.zeros((self.num_classes, emb.shape[1]), np.float32)
-        for c in range(self.num_classes):
-            m = lab_cls == c
-            if m.any():
-                cent[c] = lab_emb[m].mean(0)
         probs = np.asarray(jax.nn.softmax(
             jnp.asarray(emb @ cent.T * self.label_temp), -1))
         conf = probs.max(-1)
@@ -805,6 +937,7 @@ def run_async_training(model: LM, corpus: SyntheticGraphCorpus, *,
                        trainer_push: bool = False,
                        kb_backend: str = "dense",
                        coalesce: bool = True,
+                       kb_client: Optional[KBClient] = None,
                        seed: int = 0) -> AsyncRunResult:
     """End-to-end asynchronous CARLS training on one host: the trainer loop
     plus a ``MakerRuntime`` fleet, all clients of one coalescing server.
@@ -814,7 +947,13 @@ def run_async_training(model: LM, corpus: SyntheticGraphCorpus, *,
     jobs over disjoint node slices — preserves the historical behaviour.
     ``trainer_push=True`` additionally pushes the trainer's own pooled
     sample embeddings to the bank each step ("synchronous maker" mode, the
-    in-graph step's ``trainer_push`` as a server client)."""
+    in-graph step's ``trainer_push`` as a server client).
+
+    ``kb_client``: an already-connected bank client — typically a
+    ``RemoteKnowledgeBank`` (``launch/train.py --kb-connect``) — used
+    INSTEAD of constructing an in-process server; every trainer and maker
+    KB call then goes over that client's transport, and the final close()
+    drops only this process's connection, never the remote bank."""
     from repro.optim import constant_lr
     cfg = model.cfg
     dist = DistContext()
@@ -823,15 +962,26 @@ def run_async_training(model: LM, corpus: SyntheticGraphCorpus, *,
     opt_state = opt.init(params)
     train_core, embed_fn = make_async_train_fns(model, opt, dist,
                                                 reg_weight=reg_weight)
-    kb_dist = None
-    if kb_backend == "sharded":
-        # the bank gets its own meshed context (the trainer's stays as-is)
-        from repro.launch.mesh import make_host_mesh
-        kb_dist = DistContext(mesh=make_host_mesh())
-    server = KnowledgeBankServer(
-        corpus.num_nodes, cfg.d_model, backend=kb_backend, dist=kb_dist,
-        lazy_lr=cfg.carls.lazy_lr, zmax=cfg.carls.outlier_zmax,
-        lazy_update=lazy_update, coalesce=coalesce)
+    if kb_client is not None:
+        if kb_client.num_entries < corpus.num_nodes:
+            raise ValueError(
+                f"remote bank holds {kb_client.num_entries} entries but the "
+                f"corpus has {corpus.num_nodes} nodes")
+        if kb_client.dim != cfg.d_model:
+            raise ValueError(f"remote bank dim {kb_client.dim} != model "
+                             f"d_model {cfg.d_model}")
+        server = kb_client
+    else:
+        kb_dist = None
+        if kb_backend == "sharded":
+            # the bank gets its own meshed context (the trainer's stays
+            # as-is)
+            from repro.launch.mesh import make_host_mesh
+            kb_dist = DistContext(mesh=make_host_mesh())
+        server = KnowledgeBankServer(
+            corpus.num_nodes, cfg.d_model, backend=kb_backend, dist=kb_dist,
+            lazy_lr=cfg.carls.lazy_lr, zmax=cfg.carls.outlier_zmax,
+            lazy_update=lazy_update, coalesce=coalesce)
     ckpts = MemoryCheckpointStore()
     ckpts.save(0, params)
     runtime = None

@@ -505,6 +505,9 @@ class KBEngine:
         q = np.concatenate([queries, np.zeros((pad, queries.shape[1]),
                                               np.float32)])
         mode = self.search_mode if mode is None else mode
+        if mode not in ("exact", "ivf"):
+            raise ValueError(f"unknown nn_search mode {mode!r} "
+                             "(want exact | ivf)")
         idx = self.ann_index
         use_ivf = (mode == "ivf" and idx is not None
                    and getattr(idx, "n_shards", 1) == self.ann_shards

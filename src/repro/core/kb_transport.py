@@ -1,0 +1,637 @@
+"""TCP transport for the Knowledge-Bank protocol: cross-process clients of
+one coalescing ``KnowledgeBankServer``.
+
+This is the piece that makes CARLS *cross-platform* in the paper's sense —
+trainers and knowledge makers in separate OS processes (or hosts) against a
+single bank — rather than threads in one interpreter:
+
+- ``KBTransportServer``: an acceptor thread plus one reader/writer thread
+  pair per connection. The reader decodes protocol records and FEEDS THE
+  EXISTING COALESCING QUEUE (``KnowledgeBankServer.enqueue_op``) without
+  waiting, so requests from different processes — and from the in-process
+  clients sharing the server — merge into the same batched device dispatches.
+  The writer resolves futures in FIFO order, which is what lets the client
+  side match responses to requests without per-message ids. ``max_inflight``
+  bounds the unanswered requests one connection may pipeline (backpressure
+  is TCP itself: the reader simply stops reading).
+- ``SocketTransport``: the client half. Thread-safe and pipelined — callers
+  append a future and send under one lock; a receiver thread resolves
+  futures FIFO — so several maker threads sharing one connection get their
+  requests coalesced server-side. Connection loss fails all in-flight
+  futures, then ``request`` redials with linear backoff and retries
+  (at-least-once semantics; see docs/tuning.md for the ``lazy_grad`` caveat)
+  up to ``max_retries`` times.
+- ``RemoteKnowledgeBank``: the client stub. Same duck-type as the concrete
+  server (``repro.core.kb_protocol.KBClient``), numpy in / numpy out, so
+  ``MakerRuntime``, the trainer loop, and the launch layer run unmodified
+  against a bank in another process. Works over ``SocketTransport`` or the
+  zero-copy ``InProcessTransport``.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from collections import deque
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.core.kb_protocol import (PROTOCOL_VERSION, ErrorResponse,
+                                    FlushRequest, Hello, LazyGradRequest,
+                                    LookupRequest, NNSearchRequest,
+                                    NNSearchResponse, OkResponse,
+                                    ProtocolError, RemoteKBError,
+                                    SnapshotRequest, StatsRequest,
+                                    StatsResponse, Transport, UpdateRequest,
+                                    ValuesResponse, Welcome, decode_message,
+                                    frame_message, read_frame_length)
+
+
+class TransportError(ConnectionError):
+    """The connection died before a response arrived. The request MAY have
+    executed server-side — retries are at-least-once."""
+
+
+def _read_frame(sock: socket.socket) -> bytes:
+    """One length-prefixed frame off a blocking socket; raises
+    ``TransportError`` on EOF / reset mid-frame."""
+    prefix = _recv_exact(sock, 4)
+    return _recv_exact(sock, read_frame_length(prefix))
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        try:
+            m = sock.recv_into(view[got:], n - got)
+        except OSError as e:
+            raise TransportError(f"connection lost mid-frame: {e}") from e
+        if m == 0:
+            raise TransportError("connection closed by peer")
+        got += m
+    return bytes(buf)
+
+
+def _configure(sock: socket.socket, sock_buf: int) -> None:
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    # accepted sockets do NOT inherit the listener's SO_REUSEADDR; without
+    # it a lingering connection pins the port and blocks re-exposing the
+    # bank on the same endpoint (the restart/reconnect path)
+    sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    if sock_buf:
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, sock_buf)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, sock_buf)
+
+
+def parse_hostport(spec: str) -> Tuple[str, int]:
+    """``"HOST:PORT"`` -> (host, port) — the launchers' --listen/--connect
+    argument format."""
+    host, sep, port = spec.rpartition(":")
+    if not sep or not host:
+        raise ValueError(f"expected HOST:PORT, got {spec!r}")
+    return host, int(port)
+
+
+# ---------------------------------------------------------------------------
+# server side
+# ---------------------------------------------------------------------------
+
+class _Sentinel(NamedTuple):
+    """Writer-queue end marker (reader exited)."""
+
+
+class _Conn:
+    """One accepted connection: reader decodes+enqueues, writer responds
+    FIFO. Two threads so a slow device op never stops the reader from
+    feeding further requests into the coalescing window."""
+
+    def __init__(self, tsrv: "KBTransportServer", sock: socket.socket,
+                 addr) -> None:
+        self.tsrv, self.sock, self.addr = tsrv, sock, addr
+        self.entries: deque = deque()       # (resolve_fn,) in request order
+        self.cond = threading.Condition()
+        self.inflight = threading.Semaphore(tsrv.max_inflight)
+        self.reader = threading.Thread(target=self._read_loop, daemon=True,
+                                       name=f"kb-conn-r-{addr}")
+        self.writer = threading.Thread(target=self._write_loop, daemon=True,
+                                       name=f"kb-conn-w-{addr}")
+        self.reader.start()
+        self.writer.start()
+
+    # -- reader ------------------------------------------------------------
+
+    def _read_loop(self) -> None:
+        srv = self.tsrv.server
+        try:
+            hello = decode_message(_read_frame(self.sock))
+            if not isinstance(hello, Hello):
+                raise ProtocolError(f"expected Hello, got "
+                                    f"{type(hello).__name__}")
+            if hello.version != PROTOCOL_VERSION:
+                self.sock.sendall(frame_message(ErrorResponse(
+                    "version_mismatch",
+                    f"server speaks v{PROTOCOL_VERSION}, client sent "
+                    f"v{hello.version}")))
+                return
+            self.sock.sendall(frame_message(Welcome(
+                PROTOCOL_VERSION, srv.engine.num_entries, srv.engine.dim)))
+            while not self.tsrv._stop.is_set():
+                msg = decode_message(_read_frame(self.sock))
+                while not self.inflight.acquire(timeout=1.0):
+                    # pipelining credit; poll so a dead writer (whose
+                    # releases will never come) can't pin this thread
+                    if self.tsrv._stop.is_set() or not self.writer.is_alive():
+                        raise TransportError("connection writer exited")
+                self._push(self._start(srv, msg))
+        except TransportError:
+            pass                                # client went away: normal
+        except Exception as e:                  # protocol garbage: tell the
+            # peer once, then hang up — routed through the WRITER queue so
+            # the error frame can neither interleave with a response the
+            # writer is mid-sendall on nor overtake queued responses (the
+            # client matches responses to requests by FIFO order)
+            resp = ErrorResponse(type(e).__name__, str(e))
+            self._push(lambda: resp)
+        finally:
+            self._push(_Sentinel())
+
+    def _start(self, srv, msg):
+        """Begin executing ``msg``; return a thunk the writer calls (in
+        FIFO order) to produce the response record. KB ops enqueue into the
+        server's coalescing queue HERE — before the previous response is
+        even written — which is exactly how cross-process requests land in
+        the same coalescing window as in-process ones."""
+        with self.tsrv._metrics_lock:
+            self.tsrv.requests_served += 1
+        try:
+            if isinstance(msg, LookupRequest):
+                ids = np.asarray(msg.ids).reshape(-1)
+                req = srv.enqueue_op("lookup", ids=ids, shape=ids.shape,
+                                     meta=int(msg.trainer_step))
+                return lambda: ValuesResponse(req.wait())
+            if isinstance(msg, UpdateRequest):
+                ids = np.asarray(msg.ids).reshape(-1)
+                req = srv.enqueue_op(
+                    "update", ids=ids,
+                    payload=np.asarray(msg.values).reshape(ids.size, -1),
+                    meta=int(msg.src_step))
+                return lambda: (req.wait(), OkResponse())[1]
+            if isinstance(msg, LazyGradRequest):
+                ids = np.asarray(msg.ids).reshape(-1)
+                req = srv.enqueue_op(
+                    "lazy_grad", ids=ids,
+                    payload=np.asarray(msg.grads,
+                                       np.float32).reshape(ids.size, -1))
+                return lambda: (req.wait(), OkResponse())[1]
+            if isinstance(msg, FlushRequest):
+                req = srv.enqueue_op("flush")
+                return lambda: (req.wait(), OkResponse())[1]
+            if isinstance(msg, NNSearchRequest):
+                q = np.asarray(msg.queries)
+                excl = (None if msg.exclude_ids is None
+                        else np.asarray(msg.exclude_ids,
+                                        np.int32).reshape(q.shape[0], -1))
+                req = srv.enqueue_op("nn", payload=q, k=int(msg.k),
+                                     mode=msg.mode, excl=excl)
+                return lambda: NNSearchResponse(*req.wait())
+            if isinstance(msg, StatsRequest):
+                # introspection runs in the writer thread, AFTER every
+                # earlier response on this connection was produced
+                return lambda: StatsResponse(srv.stats())
+            if isinstance(msg, SnapshotRequest):
+                return lambda: ValuesResponse(srv.table_snapshot())
+            raise ProtocolError(f"{type(msg).__name__} is not a request "
+                                "record")
+        except Exception as e:          # enqueue refused (server closing,
+            resp = ErrorResponse(type(e).__name__, str(e))  # bad record):
+            return lambda: resp         # deliver as an in-order error
+
+    def _push(self, entry) -> None:
+        with self.cond:
+            self.entries.append(entry)
+            self.cond.notify()
+
+    # -- writer ------------------------------------------------------------
+
+    def _write_loop(self) -> None:
+        try:
+            while True:
+                with self.cond:
+                    while not self.entries:
+                        self.cond.wait()
+                    entry = self.entries.popleft()
+                if isinstance(entry, _Sentinel):
+                    return
+                try:
+                    resp = entry()
+                    payload = frame_message(resp)
+                except Exception as e:  # op failed server-side OR the
+                    # response itself won't encode (e.g. a snapshot past
+                    # MAX_FRAME_BYTES): report per-request, serve on —
+                    # never tear down the connection for one bad response
+                    payload = frame_message(ErrorResponse(
+                        type(e).__name__, str(e)))
+                self.sock.sendall(payload)
+                self.inflight.release()
+        except OSError:
+            pass                        # peer gone mid-response
+        finally:
+            try:
+                self.sock.close()
+            except OSError:
+                pass
+            self.tsrv._forget(self)
+
+    def close(self) -> None:
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class KBTransportServer:
+    """Host a ``KnowledgeBankServer`` on a TCP endpoint.
+
+    ``port=0`` binds an ephemeral port (read it back from ``.port``). The
+    transport owns only sockets and threads — closing it never closes the
+    underlying bank, so a server can be re-exposed or serve in-process
+    clients after the listener goes away.
+
+    Knobs (docs/tuning.md): ``max_inflight`` pipelining credits per
+    connection, ``sock_buf`` bytes for SO_SNDBUF/SO_RCVBUF (0 = OS
+    default), ``backlog`` for pending accepts."""
+
+    def __init__(self, server, host: str = "127.0.0.1", port: int = 0, *,
+                 max_inflight: int = 32, sock_buf: int = 0,
+                 backlog: int = 16):
+        self.server = server
+        self.max_inflight = max_inflight
+        self.sock_buf = sock_buf
+        self._stop = threading.Event()
+        self._conns: set = set()
+        self._conns_lock = threading.Lock()
+        self._metrics_lock = threading.Lock()
+        self.connections_accepted = 0
+        self.requests_served = 0
+        self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._lsock.bind((host, port))
+        self._lsock.listen(backlog)
+        self.host, self.port = self._lsock.getsockname()[:2]
+        self._acceptor = threading.Thread(target=self._accept_loop,
+                                          daemon=True, name="kb-accept")
+        self._acceptor.start()
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                sock, addr = self._lsock.accept()
+            except OSError:
+                return                  # listener closed: shutting down
+            _configure(sock, self.sock_buf)
+            conn = _Conn(self, sock, addr)
+            with self._conns_lock:
+                if self._stop.is_set():
+                    conn.close()
+                    continue
+                self._conns.add(conn)
+                self.connections_accepted += 1
+
+    def _forget(self, conn: "_Conn") -> None:
+        with self._conns_lock:
+            self._conns.discard(conn)
+
+    @property
+    def active_connections(self) -> int:
+        with self._conns_lock:
+            return len(self._conns)
+
+    def close(self, timeout_s: float = 10.0) -> None:
+        """Stop accepting, hang up every connection, join the threads.
+        In-flight requests already fed to the bank still complete on the
+        bank's dispatcher; only their responses are dropped."""
+        self._stop.set()
+        try:
+            # shutdown (not just close) wakes the acceptor blocked in
+            # accept(); a bare close leaves the kernel socket LISTENing —
+            # pinned by the in-flight accept syscall — so the port could
+            # never be rebound
+            self._lsock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._lsock.close()
+        except OSError:
+            pass
+        self._acceptor.join(timeout=timeout_s)
+        with self._conns_lock:
+            conns = list(self._conns)
+        for c in conns:
+            c.close()
+        for c in conns:
+            c.reader.join(timeout=timeout_s)
+            c.writer.join(timeout=timeout_s)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# client side
+# ---------------------------------------------------------------------------
+
+class _Future:
+    __slots__ = ("event", "value", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.value = None
+        self.error = None
+
+    def set(self, value=None, error=None):
+        self.value, self.error = value, error
+        self.event.set()
+
+    def wait(self):
+        self.event.wait()
+        if self.error is not None:
+            raise self.error
+        return self.value
+
+
+class _Live:
+    """One live dialed connection: socket + FIFO of unanswered futures +
+    the receiver thread resolving them in arrival order. ``send_lock``
+    serializes [append future + sendall] so the pending FIFO matches the
+    byte order on the wire; the receiver never takes it on the hot path
+    (only in its death handler), so a sender blocked in sendall can never
+    stall response draining."""
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.pending: deque = deque()
+        self.dead = False
+        self.send_lock = threading.Lock()
+        self.receiver: Optional[threading.Thread] = None
+
+
+class SocketTransport:
+    """Client half of the TCP transport. ``request`` is thread-safe and
+    pipelined; reconnection is automatic with linear backoff
+    (``reconnect_backoff_s * attempt``) up to ``max_retries`` redials per
+    request. Retries are AT-LEAST-ONCE: a request whose connection died
+    after the send may have executed — idempotent ops (lookup / update /
+    nn_search / flush / snapshot / stats) are safe, a retried ``lazy_grad``
+    can double-cache one gradient batch (set ``max_retries=0`` to fail
+    instead)."""
+
+    def __init__(self, host: str, port: int, *, client_name: str = "",
+                 connect_timeout_s: float = 10.0, max_retries: int = 3,
+                 reconnect_backoff_s: float = 0.05, sock_buf: int = 0):
+        self.host, self.port = host, port
+        self.client_name = client_name
+        self.connect_timeout_s = connect_timeout_s
+        self.max_retries = max_retries
+        self.reconnect_backoff_s = reconnect_backoff_s
+        self.sock_buf = sock_buf
+        self.reconnects = 0
+        self._lock = threading.Lock()       # connection mgmt + frame sends
+        self._live: Optional[_Live] = None
+        self._closed = False
+        self.num_entries = self.dim = 0     # set by the first handshake
+        with self._lock:
+            self._ensure_live()             # fail fast on a bad address
+
+    # -- connection lifecycle (all under self._lock) -----------------------
+
+    def _ensure_live(self) -> _Live:
+        if self._closed:
+            raise TransportError("transport is closed")
+        if self._live is not None and not self._live.dead:
+            return self._live
+        if self._live is not None:
+            self.reconnects += 1
+        sock = socket.create_connection((self.host, self.port),
+                                        timeout=self.connect_timeout_s)
+        try:
+            _configure(sock, self.sock_buf)
+            sock.sendall(frame_message(Hello(PROTOCOL_VERSION,
+                                             self.client_name)))
+            welcome = decode_message(_read_frame(sock))
+            if isinstance(welcome, ErrorResponse):
+                raise ProtocolError(f"server refused handshake: "
+                                    f"[{welcome.kind}] {welcome.message}")
+            if not isinstance(welcome, Welcome):
+                raise ProtocolError(f"expected Welcome, got "
+                                    f"{type(welcome).__name__}")
+            sock.settimeout(None)
+        except BaseException:
+            sock.close()
+            raise
+        self.num_entries, self.dim = welcome.num_entries, welcome.dim
+        live = _Live(sock)
+        live.receiver = threading.Thread(target=self._recv_loop,
+                                         args=(live,), daemon=True,
+                                         name="kb-client-recv")
+        live.receiver.start()
+        self._live = live
+        return live
+
+    def _recv_loop(self, live: _Live) -> None:
+        err: Optional[Exception] = None
+        try:
+            while True:
+                msg = decode_message(_read_frame(live.sock))
+                # bare popleft: senders append under live.send_lock in
+                # wire order, and taking no lock here means a sender
+                # blocked mid-sendall can never stop response draining
+                fut = live.pending.popleft() if live.pending else None
+                if fut is None:
+                    raise ProtocolError("response with no pending request")
+                fut.set(value=msg)
+        except Exception as e:          # ANY decode/socket failure —
+            err = (e if isinstance(e, TransportError)     # struct.error,
+                   else TransportError(str(e)))   # bad dtype, unicode...
+        finally:
+            # ...must mark the connection dead and strand every in-flight
+            # future: _Future.wait() has no timeout, so a skipped cleanup
+            # is a caller parked forever. send_lock excludes a concurrent
+            # sender: either its future is already pending (stranded
+            # here) or it sees dead=True and never appends.
+            if err is None:
+                err = TransportError("receiver exited")
+            with live.send_lock:
+                live.dead = True
+                stranded = list(live.pending)
+                live.pending.clear()
+            for fut in stranded:        # NEVER leave a caller hanging
+                fut.set(error=err)
+            try:
+                live.sock.close()
+            except OSError:
+                pass
+
+    # -- the one public verb ----------------------------------------------
+
+    def request(self, msg) -> NamedTuple:
+        last: Optional[Exception] = None
+        for attempt in range(self.max_retries + 1):
+            if attempt:
+                time.sleep(self.reconnect_backoff_s * attempt)
+            try:
+                with self._lock:        # connection management only — the
+                    live = self._ensure_live()  # blocking send happens
+                fut = _Future()                 # outside this lock
+                frame = frame_message(msg)
+                with live.send_lock:
+                    if live.dead:
+                        raise TransportError("connection lost")
+                    live.pending.append(fut)
+                    live.sock.sendall(frame)
+                resp = fut.wait()
+            except (TransportError, OSError) as e:
+                last = e
+                continue                # redial-and-retry path
+            if isinstance(resp, ErrorResponse):
+                # the server EXECUTED and failed — retrying won't help
+                raise RemoteKBError(f"[{resp.kind}] {resp.message}")
+            return resp
+        raise TransportError(
+            f"kb request failed after {self.max_retries + 1} attempts to "
+            f"{self.host}:{self.port}") from last
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            live, self._live = self._live, None
+        if live is not None:
+            try:
+                live.sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                live.sock.close()
+            except OSError:
+                pass
+            if live.receiver is not None:
+                live.receiver.join(timeout=5.0)
+
+
+class RemoteKnowledgeBank:
+    """Client stub with the concrete server's duck-type
+    (``repro.core.kb_protocol.KBClient``): numpy in / numpy out, blocking
+    calls, ``trainer_step`` / ``src_step`` tags — so ``MakerRuntime`` jobs
+    and the trainer loop run against another process's bank unchanged.
+
+    Construct from an address (``RemoteKnowledgeBank("host", port)``), or
+    from any ``Transport`` — ``InProcessTransport(server)`` gives the
+    zero-copy in-process case of the same interface."""
+
+    def __init__(self, transport, port: Optional[int] = None, **kw):
+        if isinstance(transport, str):
+            transport = SocketTransport(transport, port, **kw)
+        self._t: Transport = transport
+        self.num_entries = transport.num_entries
+        self.dim = transport.dim
+        self._maker_runtime = None
+        self._final_stats: Optional[dict] = None
+
+    # -- the five KB ops ---------------------------------------------------
+
+    def lookup(self, ids, *, trainer_step: int = 0) -> np.ndarray:
+        ids = np.asarray(ids)
+        resp = self._t.request(LookupRequest(ids.reshape(-1),
+                                             int(trainer_step)))
+        return resp.values.reshape(*ids.shape, -1)
+
+    def update(self, ids, values, *, src_step: int = 0) -> None:
+        ids = np.asarray(ids)
+        self._t.request(UpdateRequest(
+            ids.reshape(-1), np.asarray(values).reshape(ids.size, -1),
+            int(src_step)))
+
+    def lazy_grad(self, ids, grads) -> None:
+        ids = np.asarray(ids)
+        self._t.request(LazyGradRequest(
+            ids.reshape(-1),
+            np.asarray(grads, np.float32).reshape(ids.size, -1)))
+
+    def flush(self) -> None:
+        self._t.request(FlushRequest())
+
+    def nn_search(self, queries, k: int, *, mode: Optional[str] = None,
+                  exclude_ids=None) -> Tuple[np.ndarray, np.ndarray]:
+        queries = np.asarray(queries)
+        excl = (None if exclude_ids is None
+                else np.asarray(exclude_ids,
+                                np.int32).reshape(queries.shape[0], -1))
+        resp = self._t.request(NNSearchRequest(queries, int(k), mode, excl))
+        return resp.scores, resp.ids
+
+    # -- introspection / lifecycle ----------------------------------------
+
+    def table_snapshot(self) -> np.ndarray:
+        return self._t.request(SnapshotRequest()).values
+
+    def stats(self) -> dict:
+        """The server's full stats dict (metrics, staleness, search stats,
+        server-side maker stats). After ``close`` this returns the final
+        snapshot taken at close time."""
+        if self._final_stats is not None:
+            return self._final_stats
+        return self._t.request(StatsRequest()).stats
+
+    @property
+    def metrics(self) -> dict:
+        return self.stats()["metrics"]
+
+    @property
+    def mean_staleness(self) -> float:
+        return self.stats()["mean_staleness"]
+
+    @property
+    def coalescing_factor(self) -> float:
+        return self.stats()["coalescing_factor"]
+
+    @property
+    def maker_stats(self) -> dict:
+        """Stats of the LOCALLY attached ``MakerRuntime`` when this process
+        owns one (the maker-worker case), else the server-side makers'."""
+        if self._maker_runtime is not None:
+            return self._maker_runtime.stats()
+        return self.stats().get("maker_stats", {})
+
+    def attach_maker_runtime(self, runtime) -> None:
+        self._maker_runtime = runtime
+
+    def warmup(self, max_batch: int = 256) -> None:
+        """No-op: jit warmup belongs to the process hosting the engine."""
+
+    def close(self) -> None:
+        """Close THIS client's connection (the bank keeps serving others).
+        Snapshots final stats first so post-close reads of ``metrics`` /
+        ``mean_staleness`` — e.g. a result summary — still work."""
+        if self._final_stats is None:
+            try:
+                self._final_stats = self.stats()
+            except Exception:
+                self._final_stats = {"metrics": {}, "mean_staleness": 0.0,
+                                     "coalescing_factor": 0.0,
+                                     "maker_stats": {}}
+        self._t.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

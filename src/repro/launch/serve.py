@@ -7,6 +7,8 @@ serving mode.
   PYTHONPATH=src python -m repro.launch.serve --kb --kb-backend pallas \
       --clients 8 --kb-search ivf --nlist 64 --nprobe 8
 
+  PYTHONPATH=src python -m repro.launch.serve --kb --listen 127.0.0.1:7787
+
 LM mode runs a reduced config end-to-end: prefill the prompt batch, then
 greedy decode. Full-size serve programs (decode_32k / long_500k) are
 exercised via the dry-run lowering of the same ``decode_step``.
@@ -20,10 +22,19 @@ background refresher thread (repro.core.ann_index); with ``--kb-backend
 sharded`` each bank shard carries its own sub-index, queries merge
 per-shard shortlists hierarchically, and stale shards re-cluster
 independently. See docs/tuning.md for the knob guide.
+
+``--listen HOST:PORT`` exposes the same bank on the TCP wire protocol
+(repro.core.kb_transport) instead of driving synthetic local clients:
+separate trainer/maker PROCESSES connect with ``launch/train.py
+--kb-connect`` and ``launch/maker_worker.py --connect``, and their requests
+coalesce with any in-process traffic. Port 0 binds an ephemeral port
+(printed on the "listening" line). Serves until SIGINT/SIGTERM or
+``--serve-seconds``, then prints the same serving summary.
 """
 from __future__ import annotations
 
 import argparse
+import signal
 import threading
 import time
 
@@ -87,22 +98,47 @@ def serve_kb(args) -> None:
                              min_period_s=args.kb_maker_period)
         runtime.start()
 
-    def client(t: int, n_calls: int):
-        crng = np.random.default_rng(args.seed + 1 + t)
-        for _ in range(n_calls):
-            ids = crng.integers(0, args.kb_entries, (args.batch,))
-            vals = server.lookup(ids)
-            server.lazy_grad(ids, 0.01 * vals)
-            server.nn_search(vals, k=8)
+    if args.listen:
+        # -- wire-serving mode: host the bank for OTHER processes ---------
+        from repro.core import KBTransportServer, parse_hostport
+        from repro.core.kb_protocol import PROTOCOL_VERSION
+        host, port = parse_hostport(args.listen)
+        transport = KBTransportServer(server, host, port,
+                                      max_inflight=args.max_inflight,
+                                      sock_buf=args.sock_buf)
+        print(f"kb server listening on {transport.host}:{transport.port} "
+              f"(protocol v{PROTOCOL_VERSION}, backend={args.kb_backend}, "
+              f"bank {args.kb_entries}x{args.kb_dim}, "
+              f"search={args.kb_search})", flush=True)
+        stop = threading.Event()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            signal.signal(sig, lambda *_: stop.set())
+        stop.wait(args.serve_seconds or None)
+        conns = transport.connections_accepted
+        wire_reqs = transport.requests_served
+        transport.close()
+        summary = (f"{conns} connections, {wire_reqs} wire requests, ")
+    else:
+        # -- local-driver mode: synthetic concurrent in-process clients ---
+        def client(t: int, n_calls: int):
+            crng = np.random.default_rng(args.seed + 1 + t)
+            for _ in range(n_calls):
+                ids = crng.integers(0, args.kb_entries, (args.batch,))
+                vals = server.lookup(ids)
+                server.lazy_grad(ids, 0.01 * vals)
+                server.nn_search(vals, k=8)
 
-    threads = [threading.Thread(target=client, args=(t, args.gen))
-               for t in range(args.clients)]
-    t0 = time.perf_counter()
-    for th in threads:
-        th.start()
-    for th in threads:
-        th.join()
-    dt = time.perf_counter() - t0
+        threads = [threading.Thread(target=client, args=(t, args.gen))
+                   for t in range(args.clients)]
+        t0 = time.perf_counter()
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        dt = time.perf_counter() - t0
+        calls = args.clients * args.gen * 3
+        summary = (f"clients={args.clients}: {calls / dt:.0f} req/s "
+                   f"({dt / calls * 1e6:.0f} us/req), ")
     stats = dict(server.engine.search_stats)
     rebuilds = refresher.rebuilds if refresher else 0
     shard_rebuilds = refresher.shard_rebuilds if refresher else 0
@@ -112,16 +148,14 @@ def serve_kb(args) -> None:
         maker_stats = server.maker_stats
     index = server.engine.ann_index
     server.close()
-    calls = args.clients * args.gen * 3
     print(f"kb-serve backend={args.kb_backend} search={args.kb_search} "
-          f"coalesce={not args.no_coalesce} clients={args.clients}: "
-          f"{calls / dt:.0f} req/s "
-          f"({dt / calls * 1e6:.0f} us/req, "
+          f"coalesce={not args.no_coalesce} {summary}"
           f"coalescing x{server.coalescing_factor:.1f}, "
           f"{server.metrics['dispatches']} device dispatches for "
           f"{server.metrics['requests']} requests, "
           f"nn ivf/exact={stats['ivf']}/{stats['exact']}, "
-          f"index rebuilds={rebuilds} ({shard_rebuilds} shard builds))")
+          f"index rebuilds={rebuilds} ({shard_rebuilds} shard builds)",
+          flush=True)
     for line in format_maker_stats(maker_stats):
         print(line)
     if index is not None and hasattr(index, "shard_stats"):
@@ -174,6 +208,21 @@ def main(argv=None):
                          "serving window")
     ap.add_argument("--no-coalesce", action="store_true",
                     help="per-call locked baseline (benchmark ablation)")
+    ap.add_argument("--listen", default="", metavar="HOST:PORT",
+                    help="expose the bank on the TCP wire protocol for "
+                         "cross-process trainers/makers (port 0 = "
+                         "ephemeral, printed on startup) instead of "
+                         "driving synthetic local clients")
+    ap.add_argument("--serve-seconds", type=float, default=0.0,
+                    help="--listen: exit after this long (0 = until "
+                         "SIGINT/SIGTERM)")
+    ap.add_argument("--max-inflight", type=int, default=32,
+                    help="--listen: pipelining credits per connection "
+                         "(unanswered requests before the reader applies "
+                         "TCP backpressure)")
+    ap.add_argument("--sock-buf", type=int, default=0,
+                    help="--listen: SO_SNDBUF/SO_RCVBUF bytes "
+                         "(0 = OS default)")
     args = ap.parse_args(argv)
 
     if args.kb:

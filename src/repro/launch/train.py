@@ -18,6 +18,15 @@ ckpt_version_lag):
 
   PYTHONPATH=src python -m repro.launch.train --makers \
       label_mining,graph_agreement --steps 20 --batch 8
+
+``--kb-connect HOST:PORT`` (async mode) sends the trainer's host-side KB
+traffic — neighbor lookups, lazy gradient pushes, trainer-push updates, and
+any ``--makers`` registered in this process — over the TCP wire protocol to
+a bank hosted elsewhere (``launch/serve.py --kb --listen``), the paper's
+cross-platform topology:
+
+  PYTHONPATH=src python -m repro.launch.train --makers graph_builder \
+      --kb-connect 127.0.0.1:7787 --steps 20 --batch 8
 """
 from __future__ import annotations
 
@@ -64,10 +73,21 @@ def main(argv=None):
                          "publishes (the data-freshness axis)")
     ap.add_argument("--kb-backend", choices=["dense", "pallas", "sharded"],
                     default="dense", help="async mode: bank engine backend")
+    ap.add_argument("--kb-connect", default="", metavar="HOST:PORT",
+                    help="async mode: send all KB traffic to a remote bank "
+                         "over the wire protocol (serve.py --kb --listen) "
+                         "instead of hosting one in-process; --nodes must "
+                         "not exceed the remote bank's entries")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.kb_connect and not args.makers:
+        # the sync in-graph loop owns its KBState and never talks to a
+        # server — silently training against a local bank while the user
+        # believes traffic goes remote would be the worst failure mode
+        ap.error("--kb-connect requires the async topology: pass --makers "
+                 "(e.g. --makers graph_builder)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -133,15 +153,25 @@ def run_async(model, cfg, args) -> None:
         seq_len=args.seq + 1, neighbors_per_node=cfg.carls.num_neighbors,
         num_clusters=4, labeled_frac=0.3, label_noise=0.3,
         seed=args.seed)
-    print(f"async CARLS: trainer + makers {makers} "
-          f"(kb backend: {args.kb_backend})")
+    kb_client = None
+    if args.kb_connect:
+        from repro.core import RemoteKnowledgeBank, parse_hostport
+        host, port = parse_hostport(args.kb_connect)
+        kb_client = RemoteKnowledgeBank(host, port,
+                                        client_name="trainer")
+        print(f"async CARLS: trainer + makers {makers} over the wire "
+              f"(bank at {host}:{port}: "
+              f"{kb_client.num_entries}x{kb_client.dim})")
+    else:
+        print(f"async CARLS: trainer + makers {makers} "
+              f"(kb backend: {args.kb_backend})")
     t0 = time.perf_counter()
     res = run_async_training(
         model, corpus, steps=args.steps, batch_size=args.batch,
         makers=makers, maker_batch=args.maker_batch,
         maker_period_s=args.maker_period, ckpt_period=args.ckpt_period,
         lr=args.lr, trainer_push=True, kb_backend=args.kb_backend,
-        seed=args.seed)
+        kb_client=kb_client, seed=args.seed)
     dt = time.perf_counter() - t0
     print(f"loss {res.losses[0]:.4f} -> {np.mean(res.losses[-5:]):.4f} "
           f"over {args.steps} steps in {dt:.1f}s; "

@@ -95,3 +95,21 @@ def test_flatten_unflatten_identity():
     assert jax.tree.all(jax.tree.map(
         lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()),
         params, back))
+
+
+def test_disk_checkpoint_bound_template(tmp_path):
+    """A template bound at construction (the maker-worker pattern) makes
+    ``load_latest()`` callable template-free — the same contract the
+    in-memory store gives MakerJob."""
+    params = {"w": jnp.arange(4, dtype=jnp.float32)}
+    store = DiskCheckpointStore(str(tmp_path), template=params)
+    assert store.load_latest() == (None, None)    # empty dir, no raise
+    store.save(3, {"w": 7 * jnp.ones((4,), jnp.float32)})
+    step, loaded = store.load_latest()
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(loaded["w"]), 7.0)
+    bare = DiskCheckpointStore(str(tmp_path))
+    with pytest.raises(ValueError, match="template"):
+        bare.load_latest()
+    step, loaded = bare.set_template(params).load_latest()
+    assert step == 3

@@ -257,12 +257,18 @@ def test_coalescing_server_stress_matches_serial_baseline():
     assert srv.metrics["dispatches"] <= srv.metrics["requests"]
 
 
-def test_server_close_then_call_still_works():
+def test_server_close_then_call_fails_fast():
+    """Post-close requests fail fast with a typed error (ISSUE 5: they
+    used to fall through to a direct path — and could hang forever when
+    racing the drain); read-only snapshots of the drained server stay
+    legal for result summaries."""
+    from repro.core import KBServerClosedError
     srv = KnowledgeBankServer(N, D)
     srv.update(np.array([1]), np.ones((1, D)))
     srv.close()
-    vals = srv.lookup(np.array([1]))            # direct locked path
-    np.testing.assert_allclose(vals[0], 1.0)
+    with pytest.raises(KBServerClosedError):
+        srv.lookup(np.array([1]))
+    np.testing.assert_allclose(srv.table_snapshot()[1], 1.0)
 
 
 def test_make_backend_rejects_unknown():

@@ -1,0 +1,475 @@
+"""The cross-process seam (ISSUE 5): wire protocol round-trips, transport
+parity, the close() race fix, and maker workers as separate OS processes.
+
+- kb_protocol codec: property round-trips over dtypes / empty batches /
+  large ids / exclude_ids, plus the corruption and no-pickle guards.
+- In-proc vs socket parity: the SAME op sequence through
+  ``RemoteKnowledgeBank`` over ``InProcessTransport`` and over a real TCP
+  loopback produces bit-identical results on all five ops.
+- ``KnowledgeBankServer.close()``: submissions racing (or following)
+  shutdown fail fast with ``KBServerClosedError`` instead of hanging.
+- End-to-end: a maker running in a SEPARATE PROCESS via
+  ``launch/maker_worker.py --connect`` writes a bit-identical bank to the
+  same maker run in-process (the acceptance criterion), a SIGKILLed worker
+  leaves the server healthy (crash isolation + a fresh worker resumes),
+  and a client survives a transport-server restart via reconnect backoff.
+"""
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (InProcessTransport, KBServerClosedError,
+                        KBTransportServer, KnowledgeBankServer, MakerRuntime,
+                        RemoteKnowledgeBank, SocketTransport, TransportError,
+                        parse_hostport)
+from repro.core import kb_protocol as kbp
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+# ---------------------------------------------------------------------------
+# protocol codec
+# ---------------------------------------------------------------------------
+
+def _roundtrip(msg):
+    out = kbp.decode_message(kbp.encode_message(msg))
+    assert type(out) is type(msg)
+    return out
+
+
+_DTYPES = [np.float32, np.float64, np.int32, np.int64, np.uint32, np.bool_]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, len(_DTYPES) - 1), st.integers(0, 33),
+       st.integers(1, 17))
+def test_protocol_lookup_roundtrip_dtypes_and_empty(dt_i, n, step):
+    """ids of every dtype — including EMPTY batches and 2**62-range ids —
+    survive the wire bit-for-bit."""
+    dtype = _DTYPES[dt_i]
+    rng = np.random.default_rng(n * 31 + dt_i)
+    ids = rng.integers(0, 100, n).astype(dtype)
+    if dtype == np.int64 and n:
+        ids[0] = 2**62 + 12345          # far beyond float precision
+    out = _roundtrip(kbp.LookupRequest(ids, step))
+    assert out.ids.dtype == ids.dtype and out.ids.shape == ids.shape
+    np.testing.assert_array_equal(out.ids, ids)
+    assert out.trainer_step == step
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 17), st.integers(1, 9), st.integers(0, 2))
+def test_protocol_nn_roundtrip_mode_and_exclude(b, k, variant):
+    """NNSearchRequest: mode None vs str, exclude_ids None vs (B, E) —
+    exactly the coalescing-relevant shape distinctions."""
+    rng = np.random.default_rng(b * 7 + k)
+    q = rng.normal(size=(b, 8)).astype(np.float32)
+    mode = [None, "exact", "ivf"][variant]
+    excl = (None if variant == 0
+            else rng.integers(-1, 50, (b, variant)).astype(np.int32))
+    out = _roundtrip(kbp.NNSearchRequest(q, k, mode, excl))
+    np.testing.assert_array_equal(out.queries, q)
+    assert out.k == k and out.mode == mode
+    if excl is None:
+        assert out.exclude_ids is None
+    else:
+        assert out.exclude_ids.dtype == np.int32
+        np.testing.assert_array_equal(out.exclude_ids, excl)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 9), st.integers(0, len(_DTYPES) - 3))
+def test_protocol_update_lazy_grad_roundtrip(n, dt_i):
+    dtype = _DTYPES[dt_i]
+    rng = np.random.default_rng(n + 100 * dt_i)
+    ids = rng.integers(0, 64, n).astype(np.int64)
+    vals = rng.normal(size=(n, 6)).astype(dtype)
+    up = _roundtrip(kbp.UpdateRequest(ids, vals, 7))
+    np.testing.assert_array_equal(up.values, vals)
+    assert up.values.dtype == dtype and up.src_step == 7
+    lg = _roundtrip(kbp.LazyGradRequest(ids, vals.astype(np.float32)))
+    np.testing.assert_array_equal(lg.grads, vals.astype(np.float32))
+
+
+def test_protocol_fortran_order_and_slices_roundtrip():
+    """Non-contiguous inputs (F-order, strided views) arrive contiguous
+    with identical contents — the codec must not assume C layout."""
+    a = np.asfortranarray(np.arange(24, dtype=np.float32).reshape(4, 6))
+    out = _roundtrip(kbp.ValuesResponse(a))
+    np.testing.assert_array_equal(out.values, a)
+    view = np.arange(20, dtype=np.int64)[::2]
+    out = _roundtrip(kbp.LookupRequest(view, 0))
+    np.testing.assert_array_equal(out.ids, view)
+
+
+def test_protocol_stats_nested_dict_roundtrip():
+    stats = {"metrics": {"requests": 12, "max_run": 3},
+             "mean_staleness": 0.5, "backend": "dense",
+             "maker_stats": {"m0": {"kind": "graph_builder", "errors": 0,
+                                    "error": None}}}
+    out = _roundtrip(kbp.StatsResponse(stats))
+    assert out.stats == stats
+
+
+def test_protocol_handshake_and_error_roundtrip():
+    h = _roundtrip(kbp.Hello(kbp.PROTOCOL_VERSION, "maker-worker:über"))
+    assert h.client == "maker-worker:über"
+    w = _roundtrip(kbp.Welcome(1, 4096, 64))
+    assert (w.num_entries, w.dim) == (4096, 64)
+    e = _roundtrip(kbp.ErrorResponse("ValueError", "bad ids"))
+    assert e.kind == "ValueError"
+    _roundtrip(kbp.FlushRequest())
+    _roundtrip(kbp.OkResponse())
+
+
+def test_protocol_rejects_garbage():
+    with pytest.raises(kbp.ProtocolError, match="unknown wire code"):
+        kbp.decode_message(b"\xff\x7f")
+    with pytest.raises(kbp.ProtocolError, match="trailing"):
+        kbp.decode_message(kbp.encode_message(kbp.FlushRequest()) + b"x")
+    with pytest.raises(kbp.ProtocolError, match="object arrays"):
+        kbp.encode_message(kbp.ValuesResponse(np.array([object()])))
+    with pytest.raises(kbp.ProtocolError, match="not a protocol record"):
+        kbp.encode_message(("lookup", 1))
+    with pytest.raises(kbp.ProtocolError, match="MAX_FRAME_BYTES"):
+        kbp.read_frame_length(
+            np.uint32(kbp.MAX_FRAME_BYTES + 1).tobytes())
+
+
+def test_parse_hostport():
+    assert parse_hostport("127.0.0.1:7787") == ("127.0.0.1", 7787)
+    with pytest.raises(ValueError):
+        parse_hostport("7787")
+
+
+# ---------------------------------------------------------------------------
+# transport parity: in-proc zero-copy vs TCP loopback
+# ---------------------------------------------------------------------------
+
+def _drive_all_ops(client, tbl):
+    """One scripted pass over all five ops + snapshot; returns every
+    result for bit-compare."""
+    out = {}
+    client.update(np.arange(tbl.shape[0]), tbl, src_step=1)
+    out["lookup"] = client.lookup(np.array([[3, 5], [7, 9]]),
+                                  trainer_step=2)
+    client.lazy_grad([1, 2, 2], 0.1 * np.ones((3, tbl.shape[1]),
+                                              np.float32))
+    client.flush()
+    out["nn"] = client.nn_search(tbl[:6], 4,
+                                 exclude_ids=np.arange(6)[:, None])
+    out["snapshot"] = client.table_snapshot()
+    return out
+
+
+def test_inproc_vs_socket_parity_all_ops():
+    """The same duck-type over the zero-copy transport and over TCP gives
+    bit-identical answers on lookup/update/lazy_grad/flush/nn_search."""
+    rng = np.random.default_rng(0)
+    tbl = rng.normal(size=(32, 8)).astype(np.float32)
+    results = {}
+    for name in ("inproc", "socket"):
+        with KnowledgeBankServer(32, 8) as srv:
+            if name == "inproc":
+                client = RemoteKnowledgeBank(InProcessTransport(srv))
+                results[name] = _drive_all_ops(client, tbl)
+            else:
+                with KBTransportServer(srv) as ts:
+                    client = RemoteKnowledgeBank("127.0.0.1", ts.port)
+                    assert (client.num_entries, client.dim) == (32, 8)
+                    results[name] = _drive_all_ops(client, tbl)
+                    client.close()
+    a, b = results["inproc"], results["socket"]
+    np.testing.assert_array_equal(a["lookup"], b["lookup"])
+    np.testing.assert_array_equal(a["nn"][0], b["nn"][0])
+    np.testing.assert_array_equal(a["nn"][1], b["nn"][1])
+    np.testing.assert_array_equal(a["snapshot"], b["snapshot"])
+    assert a["lookup"].shape == (2, 2, 8)      # client-side reshape
+
+
+def test_socket_clients_coalesce_with_inprocess_traffic():
+    """Wire requests land in the SAME coalescing window as in-process
+    callers: concurrent remote + local lookups merge into batched
+    dispatches (max_run > 1)."""
+    with KnowledgeBankServer(64, 8, coalesce_window_s=0.005) as srv:
+        srv.update(np.arange(64),
+                   np.random.default_rng(0).normal(
+                       size=(64, 8)).astype(np.float32))
+        srv.warmup(64)
+        with KBTransportServer(srv) as ts:
+            clients = [RemoteKnowledgeBank("127.0.0.1", ts.port)
+                       for _ in range(2)]
+
+            def hammer(c):
+                rng = np.random.default_rng(id(c) % 1000)
+                for _ in range(30):
+                    c.lookup(rng.integers(0, 64, 8))
+
+            threads = ([threading.Thread(target=hammer, args=(c,))
+                        for c in clients]
+                       + [threading.Thread(target=hammer, args=(srv,))])
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            for c in clients:
+                c.close()
+        assert srv.metrics["max_run"] > 1
+        assert srv.metrics["lookups"] == 90
+
+
+def test_version_mismatch_refused():
+    """A client speaking another protocol version is refused at handshake
+    with a typed error, before any op is served."""
+    with KnowledgeBankServer(8, 4) as srv:
+        with KBTransportServer(srv) as ts:
+            sock = socket.create_connection(("127.0.0.1", ts.port),
+                                            timeout=5)
+            try:
+                sock.sendall(kbp.frame_message(kbp.Hello(999, "future")))
+                prefix = sock.recv(4)
+                body = b""
+                want = int.from_bytes(prefix, "little")
+                while len(body) < want:
+                    body += sock.recv(want - len(body))
+                resp = kbp.decode_message(body)
+            finally:
+                sock.close()
+            assert isinstance(resp, kbp.ErrorResponse)
+            assert resp.kind == "version_mismatch"
+
+
+def test_server_error_propagates_as_remote_error():
+    """An op the server rejects surfaces client-side as RemoteKBError,
+    and the connection keeps serving afterwards."""
+    with KnowledgeBankServer(16, 4) as srv:
+        with KBTransportServer(srv) as ts:
+            client = RemoteKnowledgeBank("127.0.0.1", ts.port)
+            with pytest.raises(kbp.RemoteKBError):
+                client.nn_search(np.zeros((2, 4), np.float32), 4,
+                                 mode="nonsense")
+            v = client.lookup([0, 1])           # still alive
+            assert v.shape == (2, 4)
+            client.close()
+
+
+def test_client_reconnects_after_transport_restart():
+    """Connection loss fails over: the client redials with backoff and the
+    request succeeds against a re-exposed bank (same port, same engine)."""
+    with KnowledgeBankServer(16, 4) as srv:
+        srv.update(np.arange(16), np.ones((16, 4), np.float32))
+        ts1 = KBTransportServer(srv)
+        port = ts1.port
+        client = RemoteKnowledgeBank("127.0.0.1", port, max_retries=20,
+                                     reconnect_backoff_s=0.05)
+        np.testing.assert_array_equal(client.lookup([1]),
+                                      np.ones((1, 4), np.float32))
+        ts1.close()                             # the bank's endpoint dies
+        ts2 = KBTransportServer(srv, port=port)  # ...and comes back
+        np.testing.assert_array_equal(client.lookup([2]),
+                                      np.ones((1, 4), np.float32))
+        assert client._t.reconnects >= 1
+        client.close()
+        ts2.close()
+
+
+def test_maker_runtime_over_socket():
+    """A MakerRuntime holding only a RemoteKnowledgeBank runs the
+    checkpoint-free maker against the wire: bank traffic lands server-side,
+    stats stay client-side (the maker-worker topology, in-process)."""
+    with KnowledgeBankServer(64, 8) as srv:
+        srv.update(np.arange(64),
+                   np.random.default_rng(1).normal(
+                       size=(64, 8)).astype(np.float32))
+        with KBTransportServer(srv) as ts:
+            client = RemoteKnowledgeBank("127.0.0.1", ts.port)
+            rt = MakerRuntime(client, builder_k=4)   # num_entries: handshake
+            job = rt.register("graph_builder", batch_size=8)
+            rt.start()
+            deadline = time.time() + 60
+            while job.steps < 3 and time.time() < deadline:
+                time.sleep(0.01)
+            rt.stop()
+            assert job.last_error is None and job.steps >= 3
+            assert client.maker_stats[job.name]["rows_written"] > 0
+            client.close()
+        assert srv.metrics["lookups"] >= 3          # traffic hit the bank
+        assert srv.stats()["metrics"]["rows_served"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the close() race (satellite): fail fast, never hang
+# ---------------------------------------------------------------------------
+
+def test_close_then_submit_fails_fast():
+    srv = KnowledgeBankServer(16, 4)
+    srv.lookup([1])
+    srv.close()
+    with pytest.raises(KBServerClosedError):
+        srv.lookup([1])
+    with pytest.raises(KBServerClosedError):
+        srv.update([1], np.zeros((1, 4), np.float32))
+    # read-only introspection of the drained server stays legal (result
+    # summaries read the final table after run_async_training closed it)
+    assert srv.table_snapshot().shape == (16, 4)
+
+
+def test_close_uncoalesced_also_fails_fast():
+    srv = KnowledgeBankServer(16, 4, coalesce=False)
+    srv.lookup([1])
+    srv.close()
+    with pytest.raises(KBServerClosedError):
+        srv.lookup([1])
+
+
+def test_submissions_racing_close_never_hang():
+    """Clients hammering the server while close() runs either get served
+    or get KBServerClosedError — nobody blocks forever in wait()."""
+    srv = KnowledgeBankServer(64, 8)
+    srv.warmup(32)
+    outcomes = []
+    lock = threading.Lock()
+
+    def hammer():
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            try:
+                srv.lookup(rng.integers(0, 64, 4))
+                ok = "served"
+            except KBServerClosedError:
+                ok = "refused"
+            with lock:
+                outcomes.append(ok)
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)
+    srv.close()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive(), "a submitter hung across close()"
+    assert outcomes.count("served") > 0         # the race was real
+    # whatever was accepted completed; everything else failed fast
+    assert set(outcomes) <= {"served", "refused"}
+
+
+# ---------------------------------------------------------------------------
+# separate-process end-to-end (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def _worker_cmd(port, *extra):
+    return [sys.executable, "-m", "repro.launch.maker_worker",
+            "--connect", f"127.0.0.1:{port}", *extra]
+
+
+@pytest.mark.slow
+def test_worker_process_bank_writes_bit_identical_to_inprocess(tmp_path):
+    """ISSUE 5 acceptance: embedding_refresh run as a SEPARATE OS PROCESS
+    (maker_worker --connect) writes the bit-identical bank rows the same
+    maker writes in-process — same seed, same on-disk checkpoint."""
+    import jax
+    from repro.checkpoint import DiskCheckpointStore
+    from repro.configs import get_config
+    from repro.core import make_embed_fn
+    from repro.data import SyntheticGraphCorpus
+    from repro.models import build_model
+    from repro.sharding.partition import DistContext
+
+    n, batch, seq, seed = 64, 16, 16, 0
+    steps = n // batch
+    cfg = get_config("yi-6b").reduced().replace(num_layers=2)
+    model = build_model(cfg)
+    template = model.init(jax.random.key(seed))
+    ckpt_dir = str(tmp_path / "ckpts")
+    ckpts = DiskCheckpointStore(ckpt_dir, template=template)
+    ckpts.save(0, template)                     # ONE pinned checkpoint
+    # corpus args must mirror maker_worker's defaults exactly
+    corpus = SyntheticGraphCorpus(
+        num_nodes=n, vocab_size=cfg.vocab_size, seq_len=seq + 1,
+        neighbors_per_node=cfg.carls.num_neighbors, num_clusters=4,
+        labeled_frac=0.3, label_noise=0.3, seed=seed)
+
+    # -- in-process reference run (same disk checkpoint round-trip) --------
+    embed = jax.jit(make_embed_fn(model, DistContext()))
+    with KnowledgeBankServer(n, cfg.d_model) as srv:
+        rt = MakerRuntime(srv, corpus, ckpts=ckpts, embed_fn=embed)
+        job = rt.register("embedding_refresh", batch_size=batch)
+        rt.start()
+        deadline = time.time() + 120
+        while job.steps < steps and time.time() < deadline:
+            time.sleep(0.01)
+        rt.stop()
+        assert job.last_error is None and job.steps >= steps
+        want = srv.table_snapshot()
+
+    # -- the same maker, separate OS process, over the wire ----------------
+    with KnowledgeBankServer(n, cfg.d_model) as srv2:
+        with KBTransportServer(srv2) as ts:
+            r = subprocess.run(
+                _worker_cmd(ts.port, "--makers", "embedding_refresh",
+                            "--ckpt-dir", ckpt_dir, "--steps", str(steps),
+                            "--batch", str(batch), "--seq", str(seq),
+                            "--layers", "2", "--seed", str(seed)),
+                env=_env(), capture_output=True, text=True, timeout=600)
+            assert r.returncode == 0, r.stdout + r.stderr
+            assert "rows_written=0" not in r.stdout
+            got = srv2.table_snapshot()
+    np.testing.assert_array_equal(got, want)    # BIT-identical
+
+
+@pytest.mark.slow
+def test_worker_crash_isolation_and_fresh_worker_resumes():
+    """SIGKILLing a maker worker mid-run leaves the bank serving; a fresh
+    worker process connects and makes progress (crash isolation — the
+    property threads never had)."""
+    with KnowledgeBankServer(64, 8) as srv:
+        srv.update(np.arange(64),
+                   np.random.default_rng(0).normal(
+                       size=(64, 8)).astype(np.float32))
+        with KBTransportServer(srv) as ts:
+            p1 = subprocess.Popen(
+                _worker_cmd(ts.port, "--makers", "graph_builder",
+                            "--batch", "8", "--steps", "0"),
+                env=_env(), stdout=subprocess.PIPE,
+                stderr=subprocess.STDOUT, text=True)
+            try:
+                deadline = time.time() + 300
+                while srv.metrics["lookups"] < 2:   # worker is mid-stride
+                    assert p1.poll() is None, p1.stdout.read()
+                    assert time.time() < deadline, "worker never got going"
+                    time.sleep(0.05)
+                p1.send_signal(signal.SIGKILL)      # crash, mid-request
+                p1.wait(timeout=30)
+            finally:
+                if p1.poll() is None:
+                    p1.kill()
+            # the server never noticed: in-process clients still served
+            v = srv.lookup(np.arange(4))
+            assert v.shape == (4, 8)
+            served_before = srv.metrics["lookups"]
+            # a replacement worker joins the SAME bank and finishes cleanly
+            r = subprocess.run(
+                _worker_cmd(ts.port, "--makers", "graph_builder",
+                            "--batch", "8", "--steps", "3"),
+                env=_env(), capture_output=True, text=True, timeout=600)
+            assert r.returncode == 0, r.stdout + r.stderr
+            assert "maker-worker done:" in r.stdout
+            assert "rows_written=0" not in r.stdout
+            assert srv.metrics["lookups"] > served_before

@@ -371,3 +371,34 @@ def test_sharded_ivf_shard_stats():
         assert s["bucket_cap"] == idx.bucket_cap  # capacity is common
         assert s["max_occupancy"] <= idx.bucket_cap
         assert s["skew"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# label-mining centroid cache (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+def test_label_mining_centroid_cache_invalidates_on_ckpt_change(tiny):
+    """The per-class centroids are computed ONCE per loaded checkpoint:
+    further mining steps under the same checkpoint reuse the cache (no
+    labeled-row server read-back), and a new checkpoint step recomputes."""
+    from repro.checkpoint import MemoryCheckpointStore
+    cfg, model, corpus, params = tiny
+    embed = jax.jit(make_embed_fn(model, DIST))
+    n = corpus.num_nodes
+    with KnowledgeBankServer(n, cfg.d_model) as server:
+        server.update(np.arange(n),
+                      np.random.default_rng(0).normal(
+                          size=(n, cfg.d_model)).astype(np.float32))
+        ckpts = MemoryCheckpointStore()
+        ckpts.save(0, params)
+        rt = MakerRuntime(server, corpus, ckpts=ckpts, embed_fn=embed)
+        rt._label_mining_step(params, 0, np.arange(8))
+        base = server.metrics["lookups"]          # centroid read-back paid
+        assert base >= 1
+        rt._label_mining_step(params, 0, np.arange(8, 16))
+        rt._label_mining_step(params, 0, np.arange(16, 24))
+        assert server.metrics["lookups"] == base  # cache hits: zero reads
+        assert rt.centroid_cache_hits == 2
+        rt._label_mining_step(params, 5, np.arange(24, 32))  # new ckpt
+        assert server.metrics["lookups"] == base + 1         # recomputed
+        assert rt.centroid_cache_hits == 2

@@ -1,0 +1,101 @@
+"""Multi-process CI smoke: the cross-process CARLS topology end to end.
+
+Boots the real deployment shape with zero test scaffolding:
+
+1. ``repro.launch.serve --kb --listen 127.0.0.1:0`` in one process
+   (ephemeral port parsed from its "listening on" line),
+2. ``repro.launch.maker_worker --connect`` in a second process running a
+   checkpoint-free ``graph_builder`` fleet for a few steps,
+3. asserts the worker reported ``rows_written > 0`` and exited 0,
+4. SIGTERMs the server and asserts it printed its serving summary with a
+   non-zero wire-request count, and exited 0.
+
+Usage:  python tools/smoke_multiproc.py     (exit 0 = pass)
+"""
+from __future__ import annotations
+
+import os
+import re
+import select
+import signal
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+STARTUP_TIMEOUT_S = 300         # cold jax import + jit warmup on CI
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def main() -> int:
+    serve = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "--kb",
+         "--kb-entries", "256", "--kb-dim", "32",
+         "--listen", "127.0.0.1:0", "--serve-seconds", "600"],
+        env=_env(), cwd=ROOT, stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT, text=True)
+    port = None
+    serve_lines = []
+    try:
+        deadline = time.time() + STARTUP_TIMEOUT_S
+        # select-with-deadline, NOT a bare readline: a server that wedges
+        # before printing anything must fail here at the startup budget,
+        # not at the CI job timeout with zero diagnostics
+        while port is None:
+            if time.time() > deadline:
+                raise RuntimeError("server never reported listening "
+                                   f"within {STARTUP_TIMEOUT_S}s:\n"
+                                   + "".join(serve_lines))
+            ready, _, _ = select.select([serve.stdout], [], [], 5.0)
+            if not ready:
+                if serve.poll() is not None:
+                    raise RuntimeError(
+                        f"server exited early:\n{''.join(serve_lines)}")
+                continue
+            line = serve.stdout.readline()
+            if not line:
+                raise RuntimeError(
+                    f"server exited early:\n{''.join(serve_lines)}")
+            serve_lines.append(line)
+            print("[serve]", line, end="", flush=True)
+            m = re.search(r"listening on [\d.]+:(\d+)", line)
+            if m:
+                port = int(m.group(1))
+
+        worker = subprocess.run(
+            [sys.executable, "-m", "repro.launch.maker_worker",
+             "--connect", f"127.0.0.1:{port}",
+             "--makers", "graph_builder", "--steps", "5", "--batch", "16"],
+            env=_env(), cwd=ROOT, capture_output=True, text=True,
+            timeout=STARTUP_TIMEOUT_S)
+        print("[worker]", worker.stdout, worker.stderr, flush=True)
+        if worker.returncode != 0:
+            raise RuntimeError(f"worker exited {worker.returncode}")
+        m = re.search(r"rows_written=(\d+)", worker.stdout)
+        if not m or int(m.group(1)) <= 0:
+            raise RuntimeError("worker reported no rows_written")
+
+        serve.send_signal(signal.SIGTERM)
+        out, _ = serve.communicate(timeout=120)
+        print("[serve]", out, flush=True)
+        if serve.returncode != 0:
+            raise RuntimeError(f"server exited {serve.returncode}")
+        m = re.search(r"(\d+) wire requests", out)
+        if not m or int(m.group(1)) <= 0:
+            raise RuntimeError("server served no wire requests")
+    finally:
+        if serve.poll() is None:
+            serve.kill()
+    print("multi-process smoke: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
