@@ -33,6 +33,8 @@ from repro.core.kb_protocol import (PROTOCOL_VERSION, InProcessTransport,
 from repro.core.kb_transport import (KBTransportServer, RemoteKnowledgeBank,
                                      SocketTransport, TransportError,
                                      parse_hostport)
+from repro.core.kb_router import (KBPartitionDownError, KBRouter,
+                                  PartitionMap, connect_kb)
 
 __all__ = [
     "FeatureStore", "KBState", "feature_store_create", "fs_lookup_neighbors",
@@ -56,4 +58,5 @@ __all__ = [
     "RemoteKBError", "Transport",
     "KBTransportServer", "RemoteKnowledgeBank", "SocketTransport",
     "TransportError", "parse_hostport",
+    "KBPartitionDownError", "KBRouter", "PartitionMap", "connect_kb",
 ]

@@ -125,6 +125,34 @@ def _mergeable(prev: _Request, r: _Request) -> bool:
     return pw == rw
 
 
+def _commutes(a: _Request, b: _Request) -> bool:
+    """May ``a`` execute before ``b`` even though ``b`` was queued first?
+    The legality table behind cross-op reordering (``reorder=True``):
+
+    - lookup/lookup: always. Lookups mutate (they apply pending lazy
+      gradients) but the application is idempotent per row — whichever
+      lookup runs first applies and clears the pending cache, and both
+      observe the same post-apply rows either way.
+    - lazy_grad/lazy_grad: always — cache adds commute (the one EMA-
+      weighting caveat is identical to merging them, see module docstring).
+    - nn/nn: always — pure functions of (state, index snapshot); index
+      refresh timing relative to queue order is already unordered.
+    - any other pair within {lookup, update, lazy_grad}: only when the id
+      sets are DISJOINT — then neither op observes or clobbers the other's
+      rows (update/update last-writer-wins only matters on shared ids;
+      lookup's pending-apply and lazy_grad's cache add touch only own ids).
+    - flush / barrier / nn-vs-write: never — flush applies EVERY pending
+      gradient, a barrier is a consistency point, and nn_search scores
+      reflect table rows that any write or pending-apply could move.
+    """
+    if a.op == b.op and a.op in ("lookup", "lazy_grad", "nn"):
+        return True
+    if (a.op in ("lookup", "update", "lazy_grad")
+            and b.op in ("lookup", "update", "lazy_grad")):
+        return not bool(np.isin(a.ids, b.ids).any())
+    return False
+
+
 class KnowledgeBankServer:
     """Thread-safe KB server with request coalescing over a ``KBEngine``.
 
@@ -139,6 +167,7 @@ class KnowledgeBankServer:
                  lazy_lr: float = 0.1, zmax: float = 3.0,
                  lazy_update: bool = True, coalesce: bool = True,
                  coalesce_window_s: float = 0.0, max_coalesce: int = 256,
+                 reorder: bool = False, reorder_window: int = 8,
                  search_mode: str = "exact", ann_nlist: int = 64,
                  ann_nprobe: int = 8,
                  ann_stale_rows: Optional[int] = None):
@@ -155,12 +184,20 @@ class KnowledgeBankServer:
         self.coalesce = coalesce
         self.coalesce_window_s = coalesce_window_s
         self.max_coalesce = max_coalesce
+        # cross-op reordering (off by default: FIFO run formation is the
+        # bit-exact baseline): a request may hop over up to reorder_window
+        # earlier runs it commutes with (see _commutes) to join a mergeable
+        # run — interleaved multi-client streams then coalesce into bigger
+        # dispatches instead of run-length-1 ping-pong
+        self.reorder = reorder
+        self.reorder_window = reorder_window
         # row -> trainer step of the checkpoint that produced the row
         self._row_src_step = np.full((engine.num_entries,), -1, np.int64)
         self.metrics = {"lookups": 0, "updates": 0, "lazy_grads": 0,
                         "rows_served": 0, "stale_rows_served": 0,
                         "staleness_sum": 0.0,
-                        "requests": 0, "dispatches": 0, "max_run": 0}
+                        "requests": 0, "dispatches": 0, "max_run": 0,
+                        "reorders": 0}
         self._mlock = threading.Lock()      # metrics + row_src_step
         self._elock = threading.Lock()      # engine state (direct path)
         self._queue: deque = deque()
@@ -409,16 +446,52 @@ class KnowledgeBankServer:
                 batch = [self._queue.popleft()
                          for _ in range(min(len(self._queue),
                                             self.max_coalesce))]
-            # maximal FIFO runs of the same op -> one device dispatch each
-            runs: List[List[_Request]] = []
-            for r in batch:
-                if runs and _mergeable(runs[-1][0], r):
-                    runs[-1].append(r)
-                else:
-                    runs.append([r])
-            for run in runs:
+            for run in self._form_runs(batch):
                 with self._elock:
                     self._execute_run(run)
+
+    def _form_runs(self, batch: List[_Request]) -> List[List[_Request]]:
+        """Group a popped batch into runs, each one batched device dispatch.
+
+        FIFO mode (default): maximal runs of consecutive same-op requests —
+        execution order IS queue order. With ``reorder=True`` a request
+        that can't extend the tail run may instead hop backwards over up to
+        ``reorder_window`` earlier runs and join the nearest mergeable one,
+        PROVIDED it commutes with every request it crosses (``_commutes``).
+        Hoisting is legal exactly then: the reordered schedule is a series
+        of transpositions of commuting pairs away from FIFO, and joining a
+        run is the ordinary coalescing merge — so results are bit-identical
+        to the FIFO schedule (tests/test_kb_router.py proves it property-
+        style, reorder-on vs reorder-off). Per-client program order is
+        safe for pipelined clients too: their in-flight requests reorder
+        only when the id sets are disjoint, where order is unobservable."""
+        runs: List[List[_Request]] = []
+        hoisted = 0
+        for r in batch:
+            if runs and _mergeable(runs[-1][0], r):
+                runs[-1].append(r)
+                continue
+            if self.reorder and runs:
+                target = None
+                i = len(runs) - 1
+                hops = 0
+                while i >= 0 and hops < self.reorder_window:
+                    if not all(_commutes(r, q) for q in runs[i]):
+                        break
+                    i -= 1
+                    hops += 1
+                    if i >= 0 and _mergeable(runs[i][0], r):
+                        target = i
+                        break
+                if target is not None:
+                    runs[target].append(r)
+                    hoisted += 1
+                    continue
+            runs.append([r])
+        if hoisted:
+            with self._mlock:
+                self.metrics["reorders"] += hoisted
+        return runs
 
     def _execute_run(self, run: List[_Request]):
         op = run[0].op

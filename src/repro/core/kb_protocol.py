@@ -24,11 +24,16 @@ an in-process bank or a bank in another OS process:
   (``repro.core.kb_transport``) is the same records over TCP.
 
 Versioning rules (documented in docs/architecture.md): a connection opens
-with ``Hello(version) -> Welcome(version, num_entries, dim)``; the server
-refuses mismatched versions with an ``ErrorResponse`` (kind
+with ``Hello(version) -> Welcome(version, num_entries, dim, partition)``;
+the server refuses mismatched versions with an ``ErrorResponse`` (kind
 ``"version_mismatch"``) before serving anything. ``PROTOCOL_VERSION`` must
-be bumped whenever a record, field, or codec byte changes meaning — v1 has
-no negotiation, equality is the contract.
+be bumped whenever a record, field, or codec byte changes meaning — there
+is no negotiation, equality is the contract. v2 added partition metadata
+to the handshake (``Hello.expect_partition`` / ``Welcome.partition``) for
+the scale-out router (``repro.core.kb_router``): a partitioned fleet
+member advertises which ring slot it serves, and a client that expects a
+specific slot is refused (kind ``"partition_mismatch"``) instead of
+silently reading another partition's rows.
 """
 from __future__ import annotations
 
@@ -37,7 +42,7 @@ from typing import Dict, NamedTuple, Optional, Protocol, Tuple
 
 import numpy as np
 
-PROTOCOL_VERSION = 1
+PROTOCOL_VERSION = 2
 
 # refuse absurd frames before allocating: a corrupt length prefix must fail
 # fast, not OOM the server. 1 GiB comfortably fits any real snapshot.
@@ -59,17 +64,23 @@ class RemoteKBError(RuntimeError):
 # ---------------------------------------------------------------------------
 
 class Hello(NamedTuple):
-    """Connection opener; ``client`` is a free-form label for server logs."""
+    """Connection opener; ``client`` is a free-form label for server logs.
+    ``expect_partition`` ("" = any) pins the connection to one ring slot —
+    a router dialing partition "2/4" must not land on "3/4" because an
+    endpoint list was shuffled; the server refuses the mismatch."""
     version: int
     client: str
+    expect_partition: str
 
 
 class Welcome(NamedTuple):
     """Handshake reply: the bank's geometry, so clients need no side-channel
-    config (``RemoteKnowledgeBank.num_entries`` / ``dim`` come from here)."""
+    config (``RemoteKnowledgeBank.num_entries`` / ``dim`` come from here).
+    ``partition`` is the serving ring slot ("p/N"; "" = unpartitioned)."""
     version: int
     num_entries: int
     dim: int
+    partition: str
 
 
 class LookupRequest(NamedTuple):
@@ -345,10 +356,11 @@ class InProcessTransport:
     keeps the single-process path regression-free while every client speaks
     protocol records."""
 
-    def __init__(self, server):
+    def __init__(self, server, *, partition: str = ""):
         self.server = server
         self.num_entries = server.engine.num_entries
         self.dim = server.engine.dim
+        self.partition = partition      # ring slot label ("p/N"; "" = none)
 
     def request(self, msg) -> NamedTuple:
         srv = self.server
@@ -373,7 +385,12 @@ class InProcessTransport:
         if isinstance(msg, SnapshotRequest):
             return ValuesResponse(srv.table_snapshot())
         if isinstance(msg, Hello):
-            return Welcome(PROTOCOL_VERSION, self.num_entries, self.dim)
+            if msg.expect_partition and msg.expect_partition != self.partition:
+                raise ProtocolError(
+                    f"client expects partition {msg.expect_partition!r}, "
+                    f"this bank serves {self.partition!r}")
+            return Welcome(PROTOCOL_VERSION, self.num_entries, self.dim,
+                           self.partition)
         raise ProtocolError(f"{type(msg).__name__} is not a request record")
 
     def close(self) -> None:

@@ -1,0 +1,447 @@
+"""Scale-out Knowledge-Bank serving: a consistent-hash partitioned fleet of
+bank servers behind one ``KBClient``-shaped router.
+
+After the transport layer (``kb_protocol`` / ``kb_transport``) every
+deployment still funneled all traffic into ONE ``KnowledgeBankServer``, so
+aggregate QPS was capped by a single dispatcher and a single device's
+memory. This module is the paper's "millions of users" shape (§2: bank
+services scale horizontally like DynamicEmbedding's sharded servers): the
+id space is split across N independent partition servers and a ``KBRouter``
+— the same duck-type as the concrete server — fans every client call out
+over the existing ``Transport`` seam, so trainers and makers scale out
+without a code change:
+
+- ``PartitionMap``: a consistent-hash ring (``vnodes`` virtual nodes per
+  partition, splitmix64 point hashing — deterministic across processes, no
+  ``PYTHONHASHSEED`` anywhere) assigns every global id an owning partition
+  plus a dense LOCAL rank within it, so partition ``p`` hosts a bank of
+  exactly ``counts[p]`` rows. Ring stability is the reason for the ring:
+  adding/removing a partition moves only ~1/P of the ids, and every moved
+  id lands on the added partition (tests/test_kb_router.py proves both).
+- ``KBRouter``: point ops (lookup / update / lazy_grad) split each batch by
+  owning partition, issue the per-partition sub-requests concurrently, and
+  re-assemble results in caller order — a batch that lands wholly in one
+  partition takes a no-copy fast path. ``nn_search`` fans out to ALL
+  partitions with per-partition ``k``-shortlists and merges hierarchically
+  (the ``ShardedIVFIndex`` math one level up): each partition returns its
+  local top-``min(k+E, counts[p])``, ids translate local -> global, banned
+  ids mask to -inf AFTER the merge, and a stable top-k wins — the global
+  top-(k+E) provably survives, so exclude_ids semantics are bit-compatible
+  with a single server. ``stats`` / ``table_snapshot`` aggregate.
+- Fail-fast partitions: a dead partition raises ``KBPartitionDownError``
+  naming it — but ONLY for requests owning rows there; the rest of the
+  fleet keeps serving (the smoke test SIGKILLs a partition to prove it).
+
+``connect_kb`` is the launcher entry point: a single ``host:port`` gives a
+plain ``RemoteKnowledgeBank``, a comma list gives a router over one
+``SocketTransport`` per partition (handshake-verified: each server's
+advertised partition label and row count must match the ring's).
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.kb_protocol import (FlushRequest, LazyGradRequest,
+                                    LookupRequest, NNSearchRequest,
+                                    RemoteKBError, SnapshotRequest,
+                                    StatsRequest, Transport, UpdateRequest)
+
+
+class KBPartitionDownError(RuntimeError):
+    """A partition's transport failed mid-request. Carries ``partition``
+    (its index) so supervisors can restart exactly the dead member; other
+    partitions are unaffected and the router keeps serving ids they own."""
+
+    def __init__(self, partition: int, message: str):
+        super().__init__(f"kb partition {partition} is down: {message}")
+        self.partition = partition
+
+
+def _mix64(x) -> np.ndarray:
+    """splitmix64 finalizer over uint64 — the ring's point hash. Pure
+    integer mixing with numpy wraparound semantics, so every process (and
+    every run) agrees on id placement; Python's ``hash`` would not."""
+    x = np.asarray(x, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        x = x + np.uint64(0x9E3779B97F4A7C15)
+        x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        x = x ^ (x >> np.uint64(31))
+    return x
+
+
+class PartitionMap:
+    """Deterministic id-space partitioning via a consistent-hash ring.
+
+    Every global id ``g`` hashes to a point; the first partition vnode
+    clockwise owns it. ``owner[g]`` / ``local[g]`` are precomputed dense
+    arrays so the router's per-batch split is two gathers, and
+    ``global_ids(p)`` inverts the mapping for snapshot re-assembly and
+    nn-result translation. Stability: partitions project ``vnodes`` points
+    each from hashes of ``(p, v)`` only, so growing P -> P+1 adds points
+    without moving the existing ones — ids change owner only where a new
+    point cut an arc, i.e. ~1/(P+1) of them, all onto the new partition."""
+
+    def __init__(self, num_entries: int, num_partitions: int, *,
+                 vnodes: int = 64):
+        if num_entries <= 0 or num_partitions <= 0:
+            raise ValueError("num_entries and num_partitions must be >= 1")
+        self.num_entries = int(num_entries)
+        self.num_partitions = int(num_partitions)
+        self.vnodes = int(vnodes)
+        pv = np.arange(num_partitions * vnodes, dtype=np.uint64)
+        # point hash of (partition, vnode); partitions claim disjoint id
+        # ranges of the mix input so their point sets are independent
+        points = _mix64((pv // np.uint64(vnodes)) << np.uint64(32)
+                        | (pv % np.uint64(vnodes)))
+        order = np.argsort(points, kind="stable")
+        self._points = points[order]
+        self._point_owner = (pv // np.uint64(vnodes)).astype(np.int32)[order]
+        idh = _mix64(np.arange(num_entries, dtype=np.uint64))
+        idx = np.searchsorted(self._points, idh, side="left")
+        self.owner = self._point_owner[idx % len(self._points)]
+        self.counts = np.bincount(self.owner,
+                                  minlength=num_partitions).astype(np.int64)
+        if (self.counts == 0).any():
+            empty = int(np.flatnonzero(self.counts == 0)[0])
+            raise ValueError(
+                f"partition {empty} owns 0 of {num_entries} ids — too many "
+                f"partitions (or too few vnodes) for this bank size")
+        # dense local rank: partition p's rows are its global ids in
+        # ascending order, so a partition bank holds exactly counts[p] rows
+        self.local = np.zeros(num_entries, dtype=np.int64)
+        self._global_ids: List[np.ndarray] = []
+        for p in range(num_partitions):
+            g = np.flatnonzero(self.owner == p)
+            self.local[g] = np.arange(g.size, dtype=np.int64)
+            self._global_ids.append(g)
+
+    def global_ids(self, p: int) -> np.ndarray:
+        """Ascending global ids owned by partition ``p`` (its local id
+        ``i`` is row ``global_ids(p)[i]``)."""
+        return self._global_ids[p]
+
+    def owner_of(self, ids) -> np.ndarray:
+        ids = np.asarray(ids).reshape(-1)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.num_entries):
+            raise ValueError(
+                f"ids outside [0, {self.num_entries}) cannot be routed")
+        return self.owner[ids]
+
+    def to_local(self, ids) -> np.ndarray:
+        return self.local[np.asarray(ids).reshape(-1)]
+
+
+class KBRouter:
+    """``KBClient`` over N partition servers reached through ``Transport``s.
+
+    ``transports[p]`` must be partition ``p`` of the ring: its advertised
+    ``num_entries`` must equal ``counts[p]``, and when the handshake
+    carries a partition label (``serve.py --kb-join p/N`` sets one) it must
+    read ``"p/N"`` — a shuffled endpoint list fails construction instead of
+    silently serving every row from the wrong partition."""
+
+    def __init__(self, transports: Sequence[Transport], *,
+                 pmap: Optional[PartitionMap] = None, vnodes: int = 64):
+        self._transports = list(transports)
+        if not self._transports:
+            raise ValueError("KBRouter needs at least one partition")
+        P = len(self._transports)
+        total = sum(int(t.num_entries) for t in self._transports)
+        self.pmap = pmap or PartitionMap(total, P, vnodes=vnodes)
+        if self.pmap.num_partitions != P:
+            raise ValueError(f"PartitionMap has {self.pmap.num_partitions} "
+                             f"partitions, got {P} transports")
+        for p, t in enumerate(self._transports):
+            want = int(self.pmap.counts[p])
+            if int(t.num_entries) != want:
+                raise ValueError(
+                    f"partition {p} serves {t.num_entries} rows, ring "
+                    f"assigns {want} — endpoint list out of order, or the "
+                    f"server was sized without this ring?")
+            label = getattr(t, "partition", "")
+            if label and label != f"{p}/{P}":
+                raise ValueError(
+                    f"endpoint {p} identifies as partition {label!r}, "
+                    f"expected '{p}/{P}' — endpoint list out of order?")
+        self.num_entries = self.pmap.num_entries
+        self.dim = int(self._transports[0].dim)
+        for p, t in enumerate(self._transports):
+            if int(t.dim) != self.dim:
+                raise ValueError(f"partition {p} dim {t.dim} != {self.dim}")
+        self.router_metrics = {"fanouts": 0, "single_partition_fastpath": 0,
+                               "partition_requests": 0}
+        self._mlock = threading.Lock()
+        self._pool = (ThreadPoolExecutor(max_workers=P,
+                                         thread_name_prefix="kb-router")
+                      if P > 1 else None)
+        self._maker_runtime = None
+        self._final_stats: Optional[dict] = None
+        self._closed = False
+
+    # -- fan-out plumbing --------------------------------------------------
+
+    def _request(self, p: int, msg):
+        """One sub-request to partition ``p``; transport-level failures
+        become ``KBPartitionDownError`` (``RemoteKBError`` means the
+        partition is alive and EXECUTED — it passes through untouched)."""
+        try:
+            return self._transports[p].request(msg)
+        except RemoteKBError:
+            raise
+        except (ConnectionError, OSError, RuntimeError) as e:
+            # TransportError is a ConnectionError; KBServerClosedError (the
+            # in-process analogue of a dead peer) is a RuntimeError
+            raise KBPartitionDownError(p, f"{type(e).__name__}: {e}") from e
+
+    def _fanout(self, requests: Dict[int, object]) -> Dict[int, object]:
+        """Issue per-partition sub-requests concurrently; every sub-request
+        runs to completion before the first error re-raises, so one dead
+        partition never cancels writes the others already accepted."""
+        with self._mlock:
+            self.router_metrics["fanouts"] += 1
+            self.router_metrics["partition_requests"] += len(requests)
+            if len(requests) == 1:
+                self.router_metrics["single_partition_fastpath"] += 1
+        parts = sorted(requests)
+        if self._pool is None or len(parts) == 1:
+            return {p: self._request(p, requests[p]) for p in parts}
+        futs = {p: self._pool.submit(self._request, p, requests[p])
+                for p in parts}
+        out, first_err = {}, None
+        for p in parts:
+            try:
+                out[p] = futs[p].result()
+            except Exception as e:
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
+        return out
+
+    def _split(self, flat_ids: np.ndarray):
+        """(partition -> positions into ``flat_ids``) for one batch."""
+        owner = self.pmap.owner_of(flat_ids)
+        return {int(p): np.flatnonzero(owner == p)
+                for p in np.unique(owner)}
+
+    # -- the five KB ops ---------------------------------------------------
+
+    def lookup(self, ids, *, trainer_step: int = 0) -> np.ndarray:
+        ids = np.asarray(ids)
+        flat = ids.reshape(-1)
+        split = self._split(flat)
+        reqs = {p: LookupRequest(self.pmap.to_local(flat[pos]),
+                                 int(trainer_step))
+                for p, pos in split.items()}
+        resps = self._fanout(reqs)
+        if len(split) == 1:
+            (p,) = split
+            return resps[p].values.reshape(*ids.shape, -1)
+        out = np.empty((flat.size, self.dim), np.float32)
+        for p, pos in split.items():
+            out[pos] = resps[p].values
+        return out.reshape(*ids.shape, -1)
+
+    def update(self, ids, values, *, src_step: int = 0) -> None:
+        ids = np.asarray(ids)
+        flat = ids.reshape(-1)
+        values = np.asarray(values).reshape(flat.size, -1)
+        split = self._split(flat)
+        self._fanout({p: UpdateRequest(self.pmap.to_local(flat[pos]),
+                                       values[pos], int(src_step))
+                      for p, pos in split.items()})
+
+    def lazy_grad(self, ids, grads) -> None:
+        ids = np.asarray(ids)
+        flat = ids.reshape(-1)
+        grads = np.asarray(grads, np.float32).reshape(flat.size, -1)
+        split = self._split(flat)
+        self._fanout({p: LazyGradRequest(self.pmap.to_local(flat[pos]),
+                                         grads[pos])
+                      for p, pos in split.items()})
+
+    def flush(self) -> None:
+        self._fanout({p: FlushRequest()
+                      for p in range(len(self._transports))})
+
+    def nn_search(self, queries, k: int, *, mode: Optional[str] = None,
+                  exclude_ids=None) -> Tuple[np.ndarray, np.ndarray]:
+        """Hierarchical top-k over all partitions. Each partition answers
+        its local top-``min(k+E, counts[p])`` WITHOUT any exclusion pushed
+        down (exclusions are global ids; partitions know local ones); the
+        merged shortlist therefore contains the global top-(k+E), of which
+        at most E are banned — so masking banned globals post-merge and
+        taking a stable top-k reproduces single-server exclude semantics
+        across partition boundaries."""
+        queries = np.asarray(queries)
+        B = queries.shape[0]
+        excl = (None if exclude_ids is None
+                else np.asarray(exclude_ids, np.int32).reshape(B, -1))
+        E = 0 if excl is None else excl.shape[1]
+        fetch = int(k) + E
+        reqs = {p: NNSearchRequest(
+                    queries, min(fetch, int(self.pmap.counts[p])), mode, None)
+                for p in range(len(self._transports))}
+        resps = self._fanout(reqs)
+        all_scores, all_ids = [], []
+        for p in sorted(resps):
+            r = resps[p]
+            gl = self.pmap.global_ids(p)
+            lids = np.asarray(r.ids)
+            gids = np.where(lids >= 0, gl[np.clip(lids, 0, None)], -1)
+            all_scores.append(np.asarray(r.scores))
+            all_ids.append(gids)
+        scores = np.concatenate(all_scores, axis=1)
+        gids = np.concatenate(all_ids, axis=1)
+        if excl is not None:
+            banned = ((gids[:, :, None] == excl[:, None, :])
+                      & (excl[:, None, :] >= 0)).any(-1)
+            scores = np.where(banned, -np.inf, scores)
+            gids = np.where(banned, -1, gids)
+        # stable sort keeps partition-0-first order on ties, matching the
+        # engine's own stable top-k tie-break discipline
+        order = np.argsort(-scores, axis=1, kind="stable")[:, :int(k)]
+        return (np.take_along_axis(scores, order, axis=1),
+                np.take_along_axis(gids, order, axis=1))
+
+    # -- introspection / lifecycle ----------------------------------------
+
+    def table_snapshot(self) -> np.ndarray:
+        resps = self._fanout({p: SnapshotRequest()
+                              for p in range(len(self._transports))})
+        out = np.zeros((self.num_entries, self.dim), np.float32)
+        for p, r in resps.items():
+            out[self.pmap.global_ids(p)] = np.asarray(r.values)
+        return out
+
+    def stats(self) -> dict:
+        """Fleet-wide aggregate with the single-server stats shape
+        (summed counters, request-weighted staleness) plus a
+        ``partitions`` list of the raw per-partition dicts and the
+        router's own fan-out counters."""
+        if self._final_stats is not None:
+            return self._final_stats
+        resps = self._fanout({p: StatsRequest()
+                              for p in range(len(self._transports))})
+        per = [resps[p].stats for p in sorted(resps)]
+        metrics: Dict[str, float] = {}
+        for s in per:
+            for key, v in s.get("metrics", {}).items():
+                if isinstance(v, (int, float)):
+                    metrics[key] = metrics.get(key, 0) + v
+        served = max(sum(s.get("metrics", {}).get("rows_served", 0)
+                         for s in per), 1)
+        stale = sum(s.get("metrics", {}).get("staleness_sum", 0.0)
+                    for s in per)
+        dispatches = max(metrics.get("dispatches", 0), 1)
+        maker_stats: Dict[str, Dict] = {}
+        for p, s in enumerate(per):
+            for name, ms in s.get("maker_stats", {}).items():
+                maker_stats[f"p{p}/{name}" if len(per) > 1 else name] = ms
+        with self._mlock:
+            router = dict(self.router_metrics)
+        router["partitions"] = len(per)
+        return {
+            "metrics": metrics,
+            "mean_staleness": stale / served,
+            "coalescing_factor": metrics.get("requests", 0) / dispatches,
+            "num_entries": int(self.num_entries),
+            "dim": int(self.dim),
+            "maker_stats": maker_stats,
+            "partitions": per,
+            "router": router,
+        }
+
+    @property
+    def metrics(self) -> dict:
+        return self.stats()["metrics"]
+
+    @property
+    def mean_staleness(self) -> float:
+        return self.stats()["mean_staleness"]
+
+    @property
+    def coalescing_factor(self) -> float:
+        return self.stats()["coalescing_factor"]
+
+    @property
+    def maker_stats(self) -> dict:
+        if self._maker_runtime is not None:
+            return self._maker_runtime.stats()
+        return self.stats().get("maker_stats", {})
+
+    def attach_maker_runtime(self, runtime) -> None:
+        self._maker_runtime = runtime
+
+    def warmup(self, max_batch: int = 256) -> None:
+        """No-op: jit warmup belongs to the processes hosting the engines
+        (``serve.py`` warms each partition server before exposing it)."""
+
+    def partition_slices(self) -> List[np.ndarray]:
+        """Global ids per partition — the affinity hook: a client working
+        one slice keeps every batch on a single partition (the router's
+        no-copy fast path) and the fleet load-balances by construction."""
+        return [self.pmap.global_ids(p)
+                for p in range(len(self._transports))]
+
+    def close(self) -> None:
+        """Close this client's connections (the partition servers keep
+        serving others). Final stats snapshot first, best-effort — some
+        partitions may already be gone."""
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._final_stats = self.stats()
+        except Exception:
+            self._final_stats = {"metrics": {}, "mean_staleness": 0.0,
+                                 "coalescing_factor": 0.0, "maker_stats": {},
+                                 "partitions": [], "router": {}}
+        for t in self._transports:
+            try:
+                t.close()
+            except Exception:
+                pass
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def connect_kb(spec: str, **kw):
+    """Dial a bank from a ``--kb-connect`` spec. ``"host:port"`` returns a
+    plain ``RemoteKnowledgeBank``; ``"host:p0,host:p1,..."`` returns a
+    ``KBRouter`` whose endpoint ORDER is the partition order (each
+    partition server's handshake label and row count are verified against
+    the ring). Keyword args pass through to ``SocketTransport``."""
+    from repro.core.kb_transport import (RemoteKnowledgeBank,
+                                         SocketTransport, parse_hostport)
+    endpoints = [e.strip() for e in spec.split(",") if e.strip()]
+    if not endpoints:
+        raise ValueError(f"empty --kb-connect spec {spec!r}")
+    if len(endpoints) == 1:
+        host, port = parse_hostport(endpoints[0])
+        return RemoteKnowledgeBank(host, port, **kw)
+    transports = []
+    try:
+        for p, ep in enumerate(endpoints):
+            host, port = parse_hostport(ep)
+            transports.append(SocketTransport(
+                host, port, expect_partition=f"{p}/{len(endpoints)}", **kw))
+        return KBRouter(transports)
+    except BaseException:
+        for t in transports:
+            try:
+                t.close()
+            except Exception:
+                pass
+        raise

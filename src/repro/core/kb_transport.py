@@ -18,7 +18,8 @@ single bank — rather than threads in one interpreter:
   append a future and send under one lock; a receiver thread resolves
   futures FIFO — so several maker threads sharing one connection get their
   requests coalesced server-side. Connection loss fails all in-flight
-  futures, then ``request`` redials with linear backoff and retries
+  futures, then ``request`` redials with capped exponential backoff +
+  jitter (``reconnects`` counted in client stats) and retries
   (at-least-once semantics; see docs/tuning.md for the ``lazy_grad`` caveat)
   up to ``max_retries`` times.
 - ``RemoteKnowledgeBank``: the client stub. Same duck-type as the concrete
@@ -29,6 +30,7 @@ single bank — rather than threads in one interpreter:
 """
 from __future__ import annotations
 
+import random
 import socket
 import threading
 import time
@@ -136,8 +138,19 @@ class _Conn:
                     f"server speaks v{PROTOCOL_VERSION}, client sent "
                     f"v{hello.version}")))
                 return
+            if (hello.expect_partition
+                    and hello.expect_partition != self.tsrv.partition):
+                # a router dialing a shuffled endpoint list must fail the
+                # handshake, not silently serve another partition's rows
+                self.sock.sendall(frame_message(ErrorResponse(
+                    "partition_mismatch",
+                    f"client expects partition "
+                    f"{hello.expect_partition!r}, this bank serves "
+                    f"{self.tsrv.partition!r}")))
+                return
             self.sock.sendall(frame_message(Welcome(
-                PROTOCOL_VERSION, srv.engine.num_entries, srv.engine.dim)))
+                PROTOCOL_VERSION, srv.engine.num_entries, srv.engine.dim,
+                self.tsrv.partition)))
             while not self.tsrv._stop.is_set():
                 msg = decode_message(_read_frame(self.sock))
                 while not self.inflight.acquire(timeout=1.0):
@@ -198,9 +211,14 @@ class _Conn:
                                      mode=msg.mode, excl=excl)
                 return lambda: NNSearchResponse(*req.wait())
             if isinstance(msg, StatsRequest):
-                # introspection runs in the writer thread, AFTER every
-                # earlier response on this connection was produced
-                return lambda: StatsResponse(srv.stats())
+                # fast-path: snapshot the counters NOW, in the reader
+                # thread, instead of when the writer reaches this entry —
+                # a cheap stats poll pipelined behind a multi-second
+                # snapshot used to wait for it; now only its DELIVERY is
+                # FIFO (response matching has no per-message ids), the
+                # observation happens at request arrival
+                resp = StatsResponse(srv.stats())
+                return lambda: resp
             if isinstance(msg, SnapshotRequest):
                 return lambda: ValuesResponse(srv.table_snapshot())
             raise ProtocolError(f"{type(msg).__name__} is not a request "
@@ -266,14 +284,18 @@ class KBTransportServer:
 
     Knobs (docs/tuning.md): ``max_inflight`` pipelining credits per
     connection, ``sock_buf`` bytes for SO_SNDBUF/SO_RCVBUF (0 = OS
-    default), ``backlog`` for pending accepts."""
+    default), ``backlog`` for pending accepts. ``partition`` labels this
+    bank's ring slot ("p/N", set by ``serve.py --kb-join``): it travels in
+    every Welcome, and clients that pinned a slot via
+    ``Hello.expect_partition`` are refused on mismatch."""
 
     def __init__(self, server, host: str = "127.0.0.1", port: int = 0, *,
                  max_inflight: int = 32, sock_buf: int = 0,
-                 backlog: int = 16):
+                 backlog: int = 16, partition: str = ""):
         self.server = server
         self.max_inflight = max_inflight
         self.sock_buf = sock_buf
+        self.partition = partition
         self._stop = threading.Event()
         self._conns: set = set()
         self._conns_lock = threading.Lock()
@@ -387,24 +409,33 @@ class _Live:
 
 class SocketTransport:
     """Client half of the TCP transport. ``request`` is thread-safe and
-    pipelined; reconnection is automatic with linear backoff
-    (``reconnect_backoff_s * attempt``) up to ``max_retries`` redials per
+    pipelined; reconnection is automatic with capped exponential backoff
+    plus jitter — attempt ``a`` sleeps
+    ``min(cap, base * 2**(a-1)) * uniform(0.5, 1.5)`` so a restarting
+    server isn't hammered at a fixed cadence and a fleet of clients
+    doesn't redial in lockstep — up to ``max_retries`` redials per
     request. Retries are AT-LEAST-ONCE: a request whose connection died
     after the send may have executed — idempotent ops (lookup / update /
     nn_search / flush / snapshot / stats) are safe, a retried ``lazy_grad``
     can double-cache one gradient batch (set ``max_retries=0`` to fail
-    instead)."""
+    instead). ``expect_partition`` pins the handshake to one ring slot
+    (see ``KBTransportServer``)."""
 
     def __init__(self, host: str, port: int, *, client_name: str = "",
                  connect_timeout_s: float = 10.0, max_retries: int = 3,
-                 reconnect_backoff_s: float = 0.05, sock_buf: int = 0):
+                 reconnect_backoff_s: float = 0.05,
+                 reconnect_backoff_cap_s: float = 2.0, sock_buf: int = 0,
+                 expect_partition: str = ""):
         self.host, self.port = host, port
         self.client_name = client_name
         self.connect_timeout_s = connect_timeout_s
         self.max_retries = max_retries
         self.reconnect_backoff_s = reconnect_backoff_s
+        self.reconnect_backoff_cap_s = reconnect_backoff_cap_s
         self.sock_buf = sock_buf
+        self.expect_partition = expect_partition
         self.reconnects = 0
+        self.partition = ""                 # set by the first handshake
         self._lock = threading.Lock()       # connection mgmt + frame sends
         self._live: Optional[_Live] = None
         self._closed = False
@@ -426,7 +457,8 @@ class SocketTransport:
         try:
             _configure(sock, self.sock_buf)
             sock.sendall(frame_message(Hello(PROTOCOL_VERSION,
-                                             self.client_name)))
+                                             self.client_name,
+                                             self.expect_partition)))
             welcome = decode_message(_read_frame(sock))
             if isinstance(welcome, ErrorResponse):
                 raise ProtocolError(f"server refused handshake: "
@@ -439,6 +471,7 @@ class SocketTransport:
             sock.close()
             raise
         self.num_entries, self.dim = welcome.num_entries, welcome.dim
+        self.partition = welcome.partition
         live = _Live(sock)
         live.receiver = threading.Thread(target=self._recv_loop,
                                          args=(live,), daemon=True,
@@ -487,7 +520,13 @@ class SocketTransport:
         last: Optional[Exception] = None
         for attempt in range(self.max_retries + 1):
             if attempt:
-                time.sleep(self.reconnect_backoff_s * attempt)
+                # capped exponential backoff + jitter: linear backoff kept
+                # clients polling a down server at a fixed aggregate rate;
+                # doubling with a cap backs off fast, the jitter de-syncs
+                # a fleet that lost the server at the same instant
+                base = min(self.reconnect_backoff_cap_s,
+                           self.reconnect_backoff_s * (2 ** (attempt - 1)))
+                time.sleep(base * random.uniform(0.5, 1.5))
             try:
                 with self._lock:        # connection management only — the
                     live = self._ensure_live()  # blocking send happens
@@ -585,11 +624,17 @@ class RemoteKnowledgeBank:
 
     def stats(self) -> dict:
         """The server's full stats dict (metrics, staleness, search stats,
-        server-side maker stats). After ``close`` this returns the final
+        server-side maker stats), plus this client's own transport health
+        under ``"transport"`` (``reconnects`` — how many times the
+        connection was redialed). After ``close`` this returns the final
         snapshot taken at close time."""
         if self._final_stats is not None:
             return self._final_stats
-        return self._t.request(StatsRequest()).stats
+        stats = self._t.request(StatsRequest()).stats
+        reconnects = getattr(self._t, "reconnects", None)
+        if reconnects is not None:
+            stats["transport"] = {"reconnects": int(reconnects)}
+        return stats
 
     @property
     def metrics(self) -> dict:

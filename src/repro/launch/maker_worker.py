@@ -35,8 +35,8 @@ import jax
 
 from repro.checkpoint import DiskCheckpointStore
 from repro.configs import ARCH_IDS, get_config
-from repro.core import (MakerRuntime, RemoteKnowledgeBank,
-                        format_maker_stats, make_embed_fn, parse_hostport)
+from repro.core import (MakerRuntime, connect_kb, format_maker_stats,
+                        make_embed_fn)
 from repro.data import SyntheticGraphCorpus
 from repro.models import build_model
 from repro.sharding.partition import DistContext
@@ -44,9 +44,12 @@ from repro.sharding.partition import DistContext
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--connect", required=True, metavar="HOST:PORT",
-                    help="knowledge-bank transport endpoint "
-                         "(serve.py --listen)")
+    ap.add_argument("--connect", required=True,
+                    metavar="HOST:PORT[,HOST:PORT,...]",
+                    help="knowledge-bank transport endpoint (serve.py "
+                         "--listen); a comma list names a partitioned "
+                         "fleet in ring order (serve.py --kb-join), "
+                         "routed through a KBRouter transparently")
     ap.add_argument("--makers", default="graph_builder",
                     help="comma list of maker kinds to run in this process "
                          "(embedding_refresh,label_mining,graph_agreement,"
@@ -78,15 +81,15 @@ def main(argv=None) -> int:
     ap.add_argument("--max-retries", type=int, default=3,
                     help="transport redials per request (at-least-once)")
     ap.add_argument("--reconnect-backoff", type=float, default=0.05,
-                    help="linear backoff base (s) between redials")
+                    help="exponential-backoff base (s) between redials "
+                         "(capped + jittered; see docs/tuning.md)")
     ap.add_argument("--sock-buf", type=int, default=0,
                     help="SO_SNDBUF/SO_RCVBUF bytes (0 = OS default)")
     args = ap.parse_args(argv)
 
     kinds = [k.strip() for k in args.makers.split(",") if k.strip()]
-    host, port = parse_hostport(args.connect)
-    client = RemoteKnowledgeBank(
-        host, port,
+    client = connect_kb(
+        args.connect,
         client_name=args.client_name or f"maker-worker:{','.join(kinds)}",
         max_retries=args.max_retries,
         reconnect_backoff_s=args.reconnect_backoff, sock_buf=args.sock_buf)
@@ -97,7 +100,7 @@ def main(argv=None) -> int:
         # never lands (run_async_training enforces the same invariant)
         ap.error(f"--nodes {n} exceeds the bank's "
                  f"{client.num_entries} entries")
-    print(f"maker-worker connected to {host}:{port} "
+    print(f"maker-worker connected to {args.connect} "
           f"(bank: {client.num_entries} x {client.dim}, corpus nodes: {n})",
           flush=True)
 

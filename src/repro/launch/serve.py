@@ -30,6 +30,18 @@ separate trainer/maker PROCESSES connect with ``launch/train.py
 coalesce with any in-process traffic. Port 0 binds an ephemeral port
 (printed on the "listening" line). Serves until SIGINT/SIGTERM or
 ``--serve-seconds``, then prints the same serving summary.
+
+Scale-out (repro.core.kb_router): ``--kb-partitions N`` splits the id
+space over N in-process partition servers behind a ``KBRouter`` and drives
+THAT with the synthetic clients — the one-process rehearsal of the
+partitioned fleet. ``--kb-join I/N`` makes this process partition I of an
+N-member fleet instead: it hosts ONLY the rows the consistent-hash ring
+assigns to slot I (requires ``--listen``; ``--kb-entries`` is the GLOBAL
+bank size, identical across the fleet), labels its handshake "I/N", and
+refuses clients that pinned a different slot. Routers and workers connect
+with a comma list in ring order: ``--kb-connect host:p0,host:p1``.
+``--kb-reorder`` enables cross-op reordering in the dispatcher (commuting
+requests hoist across the queue into bigger batched dispatches).
 """
 from __future__ import annotations
 
@@ -47,6 +59,72 @@ from repro.models import build_model
 from repro.sharding.partition import DistContext
 
 
+def serve_kb_partitioned(args) -> None:
+    """``--kb-partitions N``: the scale-out topology in one process — N
+    partition servers behind a ``KBRouter``, synthetic clients driving the
+    router. The cross-process version of the same fleet is N ``--kb-join``
+    processes plus router-connected workers."""
+    from repro.core import (InProcessTransport, KBRouter,
+                            KnowledgeBankServer, PartitionMap)
+    P = args.kb_partitions
+    pmap = PartitionMap(args.kb_entries, P)
+    servers = [KnowledgeBankServer(int(pmap.counts[p]), args.kb_dim,
+                                   backend=args.kb_backend,
+                                   coalesce=not args.no_coalesce,
+                                   reorder=args.kb_reorder,
+                                   search_mode=args.kb_search,
+                                   ann_nlist=args.nlist,
+                                   ann_nprobe=args.nprobe)
+               for p in range(P)]
+    router = KBRouter([InProcessTransport(s, partition=f"{p}/{P}")
+                       for p, s in enumerate(servers)], pmap=pmap)
+    rng = np.random.default_rng(args.seed)
+    router.update(np.arange(args.kb_entries),
+                  rng.normal(size=(args.kb_entries, args.kb_dim))
+                  .astype(np.float32))
+    for s in servers:
+        s.warmup(args.batch * args.clients)
+    router.nn_search(np.zeros((args.batch, args.kb_dim), np.float32), k=8)
+
+    def client(t: int, n_calls: int):
+        crng = np.random.default_rng(args.seed + 1 + t)
+        for _ in range(n_calls):
+            ids = crng.integers(0, args.kb_entries, (args.batch,))
+            vals = router.lookup(ids)
+            router.lazy_grad(ids, 0.01 * vals)
+            router.nn_search(vals, k=8)
+
+    threads = [threading.Thread(target=client, args=(t, args.gen))
+               for t in range(args.clients)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    dt = time.perf_counter() - t0
+    calls = args.clients * args.gen * 3
+    stats = router.stats()
+    router.close()
+    for s in servers:
+        s.close()
+    m = stats["metrics"]
+    print(f"kb-serve partitions={P} backend={args.kb_backend} "
+          f"reorder={args.kb_reorder} clients={args.clients}: "
+          f"{calls / dt:.0f} req/s ({dt / calls * 1e6:.0f} us/req), "
+          f"coalescing x{stats['coalescing_factor']:.1f}, "
+          f"{int(m.get('dispatches', 0))} device dispatches for "
+          f"{int(m.get('requests', 0))} requests "
+          f"({int(m.get('reorders', 0))} reordered), "
+          f"router fast-path "
+          f"{stats['router']['single_partition_fastpath']}"
+          f"/{stats['router']['fanouts']} fan-outs", flush=True)
+    for p, s in enumerate(stats["partitions"]):
+        sm = s["metrics"]
+        print(f"  partition {p}/{P}: {int(pmap.counts[p])} rows, "
+              f"{int(sm.get('requests', 0))} requests -> "
+              f"{int(sm.get('dispatches', 0))} dispatches")
+
+
 def serve_kb(args) -> None:
     """Concurrent-client KB serving demo on the coalescing server."""
     from repro.core import (KnowledgeBankServer, MakerRuntime,
@@ -56,15 +134,39 @@ def serve_kb(args) -> None:
     if args.kb_backend == "sharded":
         from repro.launch.mesh import make_host_mesh
         dist = DistContext(mesh=make_host_mesh())
-    server = KnowledgeBankServer(args.kb_entries, args.kb_dim,
+    partition_label = ""
+    num_rows = args.kb_entries
+    fill_ids = np.arange(args.kb_entries)
+    if args.kb_join:
+        # fleet-member mode: host ONLY slot I's rows of the GLOBAL bank.
+        # Every member and every router computes the same ring from
+        # (kb_entries, N), so sizing agrees without a config channel.
+        from repro.core import PartitionMap
+        try:
+            idx, total = (int(x) for x in args.kb_join.split("/"))
+        except ValueError:
+            raise SystemExit(f"--kb-join wants I/N, got {args.kb_join!r}")
+        if not (0 <= idx < total):
+            raise SystemExit(f"--kb-join {args.kb_join}: index out of range")
+        if not args.listen:
+            raise SystemExit("--kb-join requires --listen (a fleet member "
+                             "exists to serve remote routers)")
+        pmap = PartitionMap(args.kb_entries, total)
+        num_rows = int(pmap.counts[idx])
+        partition_label = f"{idx}/{total}"
+        # synthetic fill values keyed by GLOBAL id, so a partitioned
+        # fleet's initial table matches a single server's row-for-row
+        fill_ids = pmap.global_ids(idx)
+    server = KnowledgeBankServer(num_rows, args.kb_dim,
                                  backend=args.kb_backend, dist=dist,
                                  coalesce=not args.no_coalesce,
+                                 reorder=args.kb_reorder,
                                  search_mode=args.kb_search,
                                  ann_nlist=args.nlist,
                                  ann_nprobe=args.nprobe)
-    server.update(np.arange(args.kb_entries),
-                  rng.normal(size=(args.kb_entries, args.kb_dim))
-                  .astype(np.float32))
+    all_vals = rng.normal(size=(args.kb_entries, args.kb_dim)) \
+        .astype(np.float32)
+    server.update(np.arange(num_rows), all_vals[fill_ids])
     server.warmup(args.batch * args.clients)
     refresher = None
     if args.kb_search == "ivf":
@@ -105,10 +207,13 @@ def serve_kb(args) -> None:
         host, port = parse_hostport(args.listen)
         transport = KBTransportServer(server, host, port,
                                       max_inflight=args.max_inflight,
-                                      sock_buf=args.sock_buf)
+                                      sock_buf=args.sock_buf,
+                                      partition=partition_label)
+        part = (f"partition {partition_label}, {num_rows} of "
+                f"{args.kb_entries} rows, " if partition_label else "")
         print(f"kb server listening on {transport.host}:{transport.port} "
               f"(protocol v{PROTOCOL_VERSION}, backend={args.kb_backend}, "
-              f"bank {args.kb_entries}x{args.kb_dim}, "
+              f"{part}bank {args.kb_entries}x{args.kb_dim}, "
               f"search={args.kb_search})", flush=True)
         stop = threading.Event()
         for sig in (signal.SIGINT, signal.SIGTERM):
@@ -208,6 +313,22 @@ def main(argv=None):
                          "serving window")
     ap.add_argument("--no-coalesce", action="store_true",
                     help="per-call locked baseline (benchmark ablation)")
+    ap.add_argument("--kb-partitions", type=int, default=1,
+                    help="split the id space over this many in-process "
+                         "partition servers behind a KBRouter and drive "
+                         "the router (scale-out rehearsal; incompatible "
+                         "with --listen — use --kb-join for a wire fleet)")
+    ap.add_argument("--kb-join", default="", metavar="I/N",
+                    help="be partition I of an N-member fleet: host only "
+                         "the ring slot's rows of the GLOBAL --kb-entries "
+                         "bank and label the handshake I/N (requires "
+                         "--listen); routers connect all members with "
+                         "--kb-connect host:p0,host:p1,... in ring order")
+    ap.add_argument("--kb-reorder", action="store_true",
+                    help="cross-op reordering in the coalescing "
+                         "dispatcher: commuting requests (disjoint-id "
+                         "writes, any lookups) hoist across the queue "
+                         "into bigger batched dispatches")
     ap.add_argument("--listen", default="", metavar="HOST:PORT",
                     help="expose the bank on the TCP wire protocol for "
                          "cross-process trainers/makers (port 0 = "
@@ -226,7 +347,18 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.kb:
-        serve_kb(args)
+        if args.kb_partitions > 1:
+            if args.listen:
+                ap.error("--kb-partitions drives an in-process router; "
+                         "to expose a partitioned fleet on the wire run "
+                         "one process per partition with --kb-join I/N "
+                         "--listen")
+            if args.kb_makers or args.kb_search == "ivf":
+                ap.error("--kb-partitions supports the plain serving "
+                         "drive (no --kb-makers/--kb-search ivf yet)")
+            serve_kb_partitioned(args)
+        else:
+            serve_kb(args)
         return
 
     cfg = get_config(args.arch).reduced()

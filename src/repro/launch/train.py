@@ -73,11 +73,15 @@ def main(argv=None):
                          "publishes (the data-freshness axis)")
     ap.add_argument("--kb-backend", choices=["dense", "pallas", "sharded"],
                     default="dense", help="async mode: bank engine backend")
-    ap.add_argument("--kb-connect", default="", metavar="HOST:PORT",
+    ap.add_argument("--kb-connect", default="",
+                    metavar="HOST:PORT[,HOST:PORT,...]",
                     help="async mode: send all KB traffic to a remote bank "
                          "over the wire protocol (serve.py --kb --listen) "
-                         "instead of hosting one in-process; --nodes must "
-                         "not exceed the remote bank's entries")
+                         "instead of hosting one in-process; a comma list "
+                         "names a PARTITIONED fleet in ring order (one "
+                         "serve.py --kb-join process per endpoint) routed "
+                         "through a KBRouter transparently; --nodes must "
+                         "not exceed the bank's total entries")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
@@ -155,12 +159,12 @@ def run_async(model, cfg, args) -> None:
         seed=args.seed)
     kb_client = None
     if args.kb_connect:
-        from repro.core import RemoteKnowledgeBank, parse_hostport
-        host, port = parse_hostport(args.kb_connect)
-        kb_client = RemoteKnowledgeBank(host, port,
-                                        client_name="trainer")
+        from repro.core import connect_kb
+        kb_client = connect_kb(args.kb_connect, client_name="trainer")
+        parts = getattr(kb_client, "pmap", None)
+        shape = (f"{parts.num_partitions} partitions, " if parts else "")
         print(f"async CARLS: trainer + makers {makers} over the wire "
-              f"(bank at {host}:{port}: "
+              f"(bank at {args.kb_connect}: {shape}"
               f"{kb_client.num_entries}x{kb_client.dim})")
     else:
         print(f"async CARLS: trainer + makers {makers} "

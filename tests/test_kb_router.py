@@ -1,0 +1,295 @@
+"""Scale-out router tests: consistent-hash ring properties, router parity
+with a single server, cross-partition exclude semantics, partition
+fail-fast, the v2 partition handshake, and the dispatcher's cross-op
+reordering (bit-identical to FIFO — property-style over random streams).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.kb_protocol as kbp
+from repro.core import (InProcessTransport, KBPartitionDownError, KBRouter,
+                        KnowledgeBankServer, PartitionMap, ProtocolError,
+                        connect_kb)
+
+N, D = 192, 8
+
+
+def _table(n, d, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _fleet(n, d, parts, table, **srv_kw):
+    """P partition servers filled from ONE global table + a router."""
+    pmap = PartitionMap(n, parts)
+    servers = []
+    for p in range(parts):
+        s = KnowledgeBankServer(int(pmap.counts[p]), d, **srv_kw)
+        s.update(np.arange(int(pmap.counts[p])), table[pmap.global_ids(p)])
+        servers.append(s)
+    router = KBRouter([InProcessTransport(s, partition=f"{p}/{parts}")
+                       for p, s in enumerate(servers)], pmap=pmap)
+    return pmap, servers, router
+
+
+def _close(servers, router=None):
+    if router is not None:
+        router.close()
+    for s in servers:
+        s.close()
+
+
+# -- ring properties --------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 6), st.integers(64, 1024))
+def test_ring_stability_on_grow(parts, n):
+    """Adding a partition moves ~1/(P+1) of the ids, and every moved id
+    lands ON the added partition — the consistent-hash contract (a modulo
+    split would reshuffle nearly everything)."""
+    a = PartitionMap(n, parts)
+    b = PartitionMap(n, parts + 1)
+    moved = a.owner != b.owner
+    assert (b.owner[moved] == parts).all()
+    # expectation is 1/(P+1); allow generous sampling slack, but a modulo
+    # split's (1 - 1/(P+1)) churn must always fail this bound
+    assert moved.mean() <= min(1.0, 3.0 / (parts + 1))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 6), st.integers(64, 1024))
+def test_partition_map_shape(parts, n):
+    """counts partition the id space; local ranks are dense per
+    partition; out-of-range ids refuse to route."""
+    pm = PartitionMap(n, parts)
+    assert int(pm.counts.sum()) == n and (pm.counts > 0).all()
+    for p in range(parts):
+        g = pm.global_ids(p)
+        assert g.size == int(pm.counts[p])
+        np.testing.assert_array_equal(pm.to_local(g), np.arange(g.size))
+        assert (pm.owner_of(g) == p).all()
+    with pytest.raises(ValueError):
+        pm.owner_of([n])
+
+
+def test_ring_deterministic_across_processes():
+    """Placement must not depend on process state (PYTHONHASHSEED et al):
+    a fresh interpreter computes the identical owner array."""
+    pm = PartitionMap(512, 3)
+    code = ("from repro.core.kb_router import PartitionMap\n"
+            "print(PartitionMap(512, 3).owner.tobytes().hex())\n")
+    env = dict(os.environ, PYTHONHASHSEED="12345")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, check=True, env=env)
+    assert bytes.fromhex(out.stdout.strip()) == pm.owner.tobytes()
+
+
+def test_partition_map_rejects_empty_partition():
+    with pytest.raises(ValueError):
+        PartitionMap(3, 64)         # far more partitions than ids
+
+
+# -- router vs single server ------------------------------------------------
+
+def test_router_matches_single_server():
+    """lookup / update / lazy_grad+flush / nn_search / snapshot through a
+    3-partition router are bit-identical to one server holding the same
+    table (the router is a pure re-routing of the same ops)."""
+    table = _table(N, D)
+    single = KnowledgeBankServer(N, D)
+    single.update(np.arange(N), table)
+    pmap, servers, router = _fleet(N, D, 3, table)
+    rng = np.random.default_rng(1)
+    try:
+        ids = rng.integers(0, N, (4, 6))
+        np.testing.assert_array_equal(router.lookup(ids),
+                                      single.lookup(ids))
+        up_ids = rng.integers(0, N, 17)
+        up_vals = rng.normal(size=(17, D)).astype(np.float32)
+        router.update(up_ids, up_vals)
+        single.update(up_ids, up_vals)
+        g_ids = rng.integers(0, N, 9)
+        g = rng.normal(size=(9, D)).astype(np.float32)
+        router.lazy_grad(g_ids, g)
+        single.lazy_grad(g_ids, g)
+        router.flush()
+        single.flush()
+        np.testing.assert_array_equal(router.table_snapshot(),
+                                      single.table_snapshot())
+        q = rng.normal(size=(3, D)).astype(np.float32)
+        s_scores, s_ids = single.nn_search(q, k=5)
+        r_scores, r_ids = router.nn_search(q, k=5)
+        np.testing.assert_array_equal(r_ids, s_ids)
+        np.testing.assert_allclose(r_scores, s_scores, rtol=1e-6)
+        st_ = router.stats()
+        assert st_["router"]["partitions"] == 3
+        assert st_["metrics"]["lookups"] >= 1
+    finally:
+        _close(servers, router)
+        single.close()
+
+
+def test_router_exclude_ids_across_partitions():
+    """exclude_ids are global; partitions only know local ids — the
+    router's over-fetch + post-merge mask must reproduce single-server
+    exclusion even when the banned rows live on different partitions."""
+    table = _table(N, D, seed=3)
+    single = KnowledgeBankServer(N, D)
+    single.update(np.arange(N), table)
+    pmap, servers, router = _fleet(N, D, 3, table)
+    try:
+        # ban each query's actual top-1 (whatever partition it lives on)
+        # PLUS one known row per partition, so the banned set provably
+        # spans partitions and forces a cross-partition re-rank
+        probe = np.array([int(pmap.global_ids(p)[0]) for p in range(3)])
+        q = table[probe]
+        _, top = router.nn_search(q, k=1)
+        excl = np.stack([top[:, 0], probe], axis=1).astype(np.int32)
+        s_scores, s_ids = single.nn_search(q, k=4, exclude_ids=excl)
+        r_scores, r_ids = router.nn_search(q, k=4, exclude_ids=excl)
+        np.testing.assert_array_equal(r_ids, s_ids)
+        np.testing.assert_allclose(r_scores, s_scores, rtol=1e-6)
+        for row, banned in zip(r_ids, excl):
+            assert not np.isin(banned, row).any()
+    finally:
+        _close(servers, router)
+        single.close()
+
+
+def test_router_single_partition_fastpath_counted():
+    table = _table(N, D)
+    pmap, servers, router = _fleet(N, D, 2, table)
+    try:
+        router.lookup(pmap.global_ids(0)[:4])   # wholly partition 0
+        assert router.router_metrics["single_partition_fastpath"] >= 1
+    finally:
+        _close(servers, router)
+
+
+def test_partition_down_fail_fast():
+    """A dead partition raises KBPartitionDownError naming it — but only
+    for ids it owns; the surviving partition keeps serving."""
+    table = _table(N, D)
+    pmap, servers, router = _fleet(N, D, 2, table)
+    try:
+        servers[1].close()                      # partition 1 dies
+        ok_ids = pmap.global_ids(0)[:5]
+        np.testing.assert_allclose(router.lookup(ok_ids), table[ok_ids],
+                                   rtol=1e-5)
+        with pytest.raises(KBPartitionDownError) as ei:
+            router.lookup(pmap.global_ids(1)[:5])
+        assert ei.value.partition == 1
+    finally:
+        _close(servers, router)
+
+
+def test_router_rejects_shuffled_endpoints():
+    pmap = PartitionMap(N, 2)
+    servers = [KnowledgeBankServer(int(pmap.counts[p]), D)
+               for p in range(2)]
+    try:
+        swapped = [InProcessTransport(servers[1], partition="1/2"),
+                   InProcessTransport(servers[0], partition="0/2")]
+        with pytest.raises(ValueError):
+            KBRouter(swapped, pmap=pmap)
+    finally:
+        _close(servers)
+
+
+def test_connect_kb_rejects_empty_spec():
+    with pytest.raises(ValueError):
+        connect_kb(" , ")
+
+
+# -- protocol v2 partition handshake ---------------------------------------
+
+def test_handshake_carries_partition_label():
+    s = KnowledgeBankServer(32, 4)
+    t = InProcessTransport(s, partition="1/2")
+    try:
+        w = t.request(kbp.Hello(kbp.PROTOCOL_VERSION, "test", "1/2"))
+        assert w.partition == "1/2" and w.version == kbp.PROTOCOL_VERSION
+        # "" = any: an unpinned client may dial a partitioned server
+        assert t.request(kbp.Hello(kbp.PROTOCOL_VERSION, "t", ""))
+        with pytest.raises(ProtocolError):
+            t.request(kbp.Hello(kbp.PROTOCOL_VERSION, "test", "0/2"))
+    finally:
+        s.close()
+
+
+# -- cross-op reordering ----------------------------------------------------
+
+def _run_stream(reorder: bool, ops, n=48, d=4):
+    """Replay one op stream through the pipelined enqueue path (so drains
+    see multiple queued requests and reordering CAN trigger); returns
+    (lookup results in stream order, final table, reorder count)."""
+    server = KnowledgeBankServer(n, d, max_coalesce=8, reorder=reorder)
+    server.update(np.arange(n), _table(n, d, seed=9))
+    pending = []
+    for op, ids, vals in ops:
+        if op == "lookup":
+            pending.append(server.enqueue_op("lookup", ids=ids,
+                                             shape=ids.shape))
+        elif op == "update":
+            pending.append(server.enqueue_op("update", ids=ids,
+                                             payload=vals))
+        else:
+            pending.append(server.enqueue_op("lazy_grad", ids=ids,
+                                             payload=vals))
+    results = [r.wait() for r in pending]
+    looks = [np.asarray(r) for o, r in zip(ops, results)
+             if o[0] == "lookup"]
+    snap = np.asarray(server.table_snapshot())
+    reorders = int(server.metrics["reorders"])
+    server.close()
+    return looks, snap, reorders
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_reorder_bit_identical_to_fifo(seed):
+    """The reordered schedule is FIFO plus transpositions of commuting
+    pairs, so for ANY stream — overlapping ids included, where the
+    scheduler simply must not hoist — every lookup result and the final
+    table are bit-identical to the FIFO run."""
+    n, d = 48, 4
+    rng = np.random.default_rng(seed)
+    ops = []
+    for _ in range(24):
+        kind = ("lookup", "update", "lazy_grad")[int(rng.integers(3))]
+        ids = rng.integers(0, n, int(rng.integers(1, 6)))
+        vals = (None if kind == "lookup"
+                else rng.normal(size=(ids.size, d)).astype(np.float32))
+        ops.append((kind, ids, vals))
+    looks_f, snap_f, _ = _run_stream(False, ops, n, d)
+    looks_r, snap_r, _ = _run_stream(True, ops, n, d)
+    for a, b in zip(looks_f, looks_r):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(snap_f, snap_r)
+
+
+def test_reorder_hoists_disjoint_interleaved_streams():
+    """Alternating lookup(low half)/update(high half) is the worst case
+    for FIFO run formation (every run has length 1); with reorder=True the
+    ops commute across each other and coalesce — reorders>0, fewer
+    dispatches, same bits."""
+    n, d = 64, 4
+    rng = np.random.default_rng(5)
+    ops = []
+    for j in range(16):
+        if j % 2 == 0:
+            ops.append(("lookup", np.arange(4) + (3 * j) % (n // 2 - 4),
+                        None))
+        else:
+            ops.append(("update", n // 2 + (j // 2) * 4 + np.arange(4),
+                        rng.normal(size=(4, d)).astype(np.float32)))
+    looks_f, snap_f, re_f = _run_stream(False, ops, n, d)
+    looks_r, snap_r, re_r = _run_stream(True, ops, n, d)
+    assert re_f == 0 and re_r > 0
+    for a, b in zip(looks_f, looks_r):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(snap_f, snap_r)

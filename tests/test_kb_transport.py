@@ -128,10 +128,10 @@ def test_protocol_stats_nested_dict_roundtrip():
 
 
 def test_protocol_handshake_and_error_roundtrip():
-    h = _roundtrip(kbp.Hello(kbp.PROTOCOL_VERSION, "maker-worker:über"))
+    h = _roundtrip(kbp.Hello(kbp.PROTOCOL_VERSION, "maker-worker:über", ""))
     assert h.client == "maker-worker:über"
-    w = _roundtrip(kbp.Welcome(1, 4096, 64))
-    assert (w.num_entries, w.dim) == (4096, 64)
+    w = _roundtrip(kbp.Welcome(2, 4096, 64, "1/4"))
+    assert (w.num_entries, w.dim, w.partition) == (4096, 64, "1/4")
     e = _roundtrip(kbp.ErrorResponse("ValueError", "bad ids"))
     assert e.kind == "ValueError"
     _roundtrip(kbp.FlushRequest())
@@ -242,7 +242,7 @@ def test_version_mismatch_refused():
             sock = socket.create_connection(("127.0.0.1", ts.port),
                                             timeout=5)
             try:
-                sock.sendall(kbp.frame_message(kbp.Hello(999, "future")))
+                sock.sendall(kbp.frame_message(kbp.Hello(999, "future", "")))
                 prefix = sock.recv(4)
                 body = b""
                 want = int.from_bytes(prefix, "little")

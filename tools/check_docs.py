@@ -39,6 +39,16 @@ BENCH_SIZE_KEYS = ("nlist", "nprobe", "us_exact_ref", "us_ivf_ref",
 BENCH_SHARDED_KEYS = ("n_shards", "us_sharded_exact", "us_sharded_ivf",
                       "recall_at_10", "ivf_speedup_vs_sharded_exact")
 
+# the scale-out serving numbers docs/tuning.md quotes; the file is only
+# written by a local `benchmarks.run --only kb_serving` (CI's quick bench
+# doesn't run the suite), so this guard fires only when it is present
+SERVING_JSON = "BENCH_kb_serving.json"
+SERVING_TOP_KEYS = ("rows", "config", "scaleout", "reorder")
+SERVING_SCALE_KEYS = ("partitions", "lookups_per_s", "nn_p50_us",
+                      "speedup_vs_1p")
+SERVING_REORDER_KEYS = ("fifo_s", "reorder_s", "speedup", "reorders",
+                        "bit_identical")
+
 SNIPPET_FILES = ["README.md"]
 LINK_FILES = ["README.md", "ROADMAP.md"]
 for name in sorted(os.listdir(os.path.join(ROOT, "docs"))):
@@ -128,12 +138,45 @@ def check_bench_keys(required: bool = False) -> int:
     return failures
 
 
+def check_serving_keys() -> int:
+    """Same guard for BENCH_kb_serving.json (scale-out rows + reorder
+    comparison) — validated only when present, never required."""
+    path = os.path.join(ROOT, SERVING_JSON)
+    if not os.path.exists(path):
+        print(f"skip {SERVING_JSON} (not present; written by "
+              "benchmarks.run --only kb_serving)")
+        return 0
+    with open(path) as f:
+        data = json.load(f)
+    failures = 0
+
+    def need(obj, keys, where):
+        nonlocal failures
+        for k in keys:
+            if k not in obj:
+                failures += 1
+                print(f"FAIL {SERVING_JSON}: missing key {where}.{k} "
+                      "(referenced by docs/tuning.md)", file=sys.stderr)
+
+    need(data, SERVING_TOP_KEYS, "$")
+    if not data.get("scaleout"):
+        failures += 1
+        print(f"FAIL {SERVING_JSON}: 'scaleout' is empty", file=sys.stderr)
+    for i, row in enumerate(data.get("scaleout", [])):
+        need(row, SERVING_SCALE_KEYS, f"scaleout[{i}]")
+    need(data.get("reorder", {}), SERVING_REORDER_KEYS, "reorder")
+    if not failures:
+        print(f"ok   {SERVING_JSON} keys")
+    return failures
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     if "--bench" in argv:
-        bad = check_bench_keys(required=True)
+        bad = check_bench_keys(required=True) + check_serving_keys()
     else:
-        bad = run_snippets() + check_links() + check_bench_keys()
+        bad = (run_snippets() + check_links() + check_bench_keys()
+               + check_serving_keys())
     if bad:
         print(f"{bad} doc check(s) failed", file=sys.stderr)
         return 1

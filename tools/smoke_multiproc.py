@@ -1,7 +1,8 @@
 """Multi-process CI smoke: the cross-process CARLS topology end to end.
 
-Boots the real deployment shape with zero test scaffolding:
+Boots the real deployment shapes with zero test scaffolding:
 
+``--phase single`` (ISSUE 5 — one bank, one worker):
 1. ``repro.launch.serve --kb --listen 127.0.0.1:0`` in one process
    (ephemeral port parsed from its "listening on" line),
 2. ``repro.launch.maker_worker --connect`` in a second process running a
@@ -10,10 +11,23 @@ Boots the real deployment shape with zero test scaffolding:
 4. SIGTERMs the server and asserts it printed its serving summary with a
    non-zero wire-request count, and exited 0.
 
-Usage:  python tools/smoke_multiproc.py     (exit 0 = pass)
+``--phase router`` (ISSUE 6 — the partitioned fleet):
+1. TWO ``serve --kb --kb-join i/2 --listen 127.0.0.1:0`` processes, each
+   hosting its consistent-hash slice of one 256-row bank,
+2. a ``connect_kb("host:p0,host:p1")`` client process that updates rows it
+   KNOWS live on different partitions, reads them back, and runs an
+   nn_search whose result set must span both partitions,
+3. ``maker_worker --connect host:p0,host:p1`` — the unchanged worker
+   routed transparently through a ``KBRouter`` — with rows_written > 0,
+4. SIGTERMs both members and asserts EACH served wire requests > 0 (both
+   partitions took traffic, none sat idle behind the router).
+
+Usage:  python tools/smoke_multiproc.py [--phase single|router|all]
+(exit 0 = pass)
 """
 from __future__ import annotations
 
+import argparse
 import os
 import re
 import select
@@ -25,6 +39,30 @@ import time
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 STARTUP_TIMEOUT_S = 300         # cold jax import + jit warmup on CI
 
+# runs inside a client subprocess (needs the repro jax stack, which the
+# driver itself never imports): prove the router splits writes/reads
+# across both fleet members and merges nn results across them
+_ROUTER_CLIENT = r"""
+import sys
+import numpy as np
+from repro.core import connect_kb
+from repro.core.kb_router import PartitionMap
+
+kb = connect_kb(sys.argv[1], client_name="smoke-router")
+pmap = PartitionMap(kb.num_entries, 2)
+ids = np.array([int(pmap.global_ids(0)[0]), int(pmap.global_ids(1)[0])])
+vals = np.eye(2, kb.dim, dtype=np.float32) * 100.0
+kb.update(ids, vals)                      # one row on EACH partition
+back = kb.lookup(ids)
+assert np.allclose(back, vals), "cross-partition lookup mismatch"
+scores, nn = kb.nn_search(vals, k=1)      # each planted row dominates its
+owners = set(int(o) for o in pmap.owner_of(nn[:, 0]))   # own query
+assert nn[0, 0] == ids[0] and nn[1, 0] == ids[1], (nn, ids)
+assert owners == {0, 1}, f"nn results stayed on partitions {owners}"
+kb.close()
+print("router-client OK")
+"""
+
 
 def _env():
     env = dict(os.environ)
@@ -34,65 +72,112 @@ def _env():
     return env
 
 
-def main() -> int:
-    serve = subprocess.Popen(
+def _boot_server(extra_args):
+    """Start a serve.py bank process and return (proc, port) once its
+    "listening on" line appears — select-with-deadline, NOT a bare
+    readline: a server that wedges before printing anything must fail at
+    the startup budget, not at the CI job timeout with zero diagnostics."""
+    proc = subprocess.Popen(
         [sys.executable, "-m", "repro.launch.serve", "--kb",
          "--kb-entries", "256", "--kb-dim", "32",
-         "--listen", "127.0.0.1:0", "--serve-seconds", "600"],
+         "--listen", "127.0.0.1:0", "--serve-seconds", "600", *extra_args],
         env=_env(), cwd=ROOT, stdout=subprocess.PIPE,
         stderr=subprocess.STDOUT, text=True)
-    port = None
-    serve_lines = []
-    try:
-        deadline = time.time() + STARTUP_TIMEOUT_S
-        # select-with-deadline, NOT a bare readline: a server that wedges
-        # before printing anything must fail here at the startup budget,
-        # not at the CI job timeout with zero diagnostics
-        while port is None:
-            if time.time() > deadline:
-                raise RuntimeError("server never reported listening "
-                                   f"within {STARTUP_TIMEOUT_S}s:\n"
-                                   + "".join(serve_lines))
-            ready, _, _ = select.select([serve.stdout], [], [], 5.0)
-            if not ready:
-                if serve.poll() is not None:
-                    raise RuntimeError(
-                        f"server exited early:\n{''.join(serve_lines)}")
-                continue
-            line = serve.stdout.readline()
-            if not line:
+    lines = []
+    deadline = time.time() + STARTUP_TIMEOUT_S
+    while True:
+        if time.time() > deadline:
+            raise RuntimeError("server never reported listening within "
+                               f"{STARTUP_TIMEOUT_S}s:\n" + "".join(lines))
+        ready, _, _ = select.select([proc.stdout], [], [], 5.0)
+        if not ready:
+            if proc.poll() is not None:
                 raise RuntimeError(
-                    f"server exited early:\n{''.join(serve_lines)}")
-            serve_lines.append(line)
-            print("[serve]", line, end="", flush=True)
-            m = re.search(r"listening on [\d.]+:(\d+)", line)
-            if m:
-                port = int(m.group(1))
+                    f"server exited early:\n{''.join(lines)}")
+            continue
+        line = proc.stdout.readline()
+        if not line:
+            raise RuntimeError(f"server exited early:\n{''.join(lines)}")
+        lines.append(line)
+        print("[serve]", line, end="", flush=True)
+        m = re.search(r"listening on [\d.]+:(\d+)", line)
+        if m:
+            return proc, int(m.group(1))
 
-        worker = subprocess.run(
-            [sys.executable, "-m", "repro.launch.maker_worker",
-             "--connect", f"127.0.0.1:{port}",
-             "--makers", "graph_builder", "--steps", "5", "--batch", "16"],
-            env=_env(), cwd=ROOT, capture_output=True, text=True,
-            timeout=STARTUP_TIMEOUT_S)
-        print("[worker]", worker.stdout, worker.stderr, flush=True)
-        if worker.returncode != 0:
-            raise RuntimeError(f"worker exited {worker.returncode}")
-        m = re.search(r"rows_written=(\d+)", worker.stdout)
-        if not m or int(m.group(1)) <= 0:
-            raise RuntimeError("worker reported no rows_written")
 
-        serve.send_signal(signal.SIGTERM)
-        out, _ = serve.communicate(timeout=120)
-        print("[serve]", out, flush=True)
-        if serve.returncode != 0:
-            raise RuntimeError(f"server exited {serve.returncode}")
-        m = re.search(r"(\d+) wire requests", out)
-        if not m or int(m.group(1)) <= 0:
-            raise RuntimeError("server served no wire requests")
+def _stop_server(proc, name):
+    """SIGTERM, collect the summary, assert a clean exit that actually
+    served wire traffic."""
+    proc.send_signal(signal.SIGTERM)
+    out, _ = proc.communicate(timeout=120)
+    print(f"[{name}]", out, flush=True)
+    if proc.returncode != 0:
+        raise RuntimeError(f"{name} exited {proc.returncode}")
+    m = re.search(r"(\d+) wire requests", out)
+    if not m or int(m.group(1)) <= 0:
+        raise RuntimeError(f"{name} served no wire requests")
+
+
+def _run_worker(connect_spec):
+    worker = subprocess.run(
+        [sys.executable, "-m", "repro.launch.maker_worker",
+         "--connect", connect_spec,
+         "--makers", "graph_builder", "--steps", "5", "--batch", "16"],
+        env=_env(), cwd=ROOT, capture_output=True, text=True,
+        timeout=STARTUP_TIMEOUT_S)
+    print("[worker]", worker.stdout, worker.stderr, flush=True)
+    if worker.returncode != 0:
+        raise RuntimeError(f"worker exited {worker.returncode}")
+    m = re.search(r"rows_written=(\d+)", worker.stdout)
+    if not m or int(m.group(1)) <= 0:
+        raise RuntimeError("worker reported no rows_written")
+
+
+def phase_single() -> None:
+    serve, port = _boot_server([])
+    try:
+        _run_worker(f"127.0.0.1:{port}")
+        _stop_server(serve, "serve")
     finally:
         if serve.poll() is None:
             serve.kill()
+    print("single-server smoke: OK", flush=True)
+
+
+def phase_router() -> None:
+    members = []
+    try:
+        for i in range(2):
+            members.append(_boot_server(["--kb-join", f"{i}/2"]))
+        spec = ",".join(f"127.0.0.1:{port}" for _, port in members)
+
+        client = subprocess.run(
+            [sys.executable, "-c", _ROUTER_CLIENT, spec],
+            env=_env(), cwd=ROOT, capture_output=True, text=True,
+            timeout=STARTUP_TIMEOUT_S)
+        print("[client]", client.stdout, client.stderr, flush=True)
+        if client.returncode != 0 or "router-client OK" not in client.stdout:
+            raise RuntimeError(f"router client failed ({client.returncode})")
+
+        _run_worker(spec)
+        for i, (proc, _) in enumerate(members):
+            _stop_server(proc, f"serve-p{i}")
+    finally:
+        for proc, _ in members:
+            if proc.poll() is None:
+                proc.kill()
+    print("router smoke: OK", flush=True)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--phase", choices=["single", "router", "all"],
+                    default="all")
+    args = ap.parse_args()
+    if args.phase in ("single", "all"):
+        phase_single()
+    if args.phase in ("router", "all"):
+        phase_router()
     print("multi-process smoke: OK")
     return 0
 
