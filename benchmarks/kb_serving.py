@@ -40,6 +40,13 @@ same. Acceptance: >= 1.6x aggregate lookup QPS at 2 partitions vs 1, and
 reorder-on >= 1.2x over FIFO on interleaved lookup/update streams with
 bit-identical results + final table. Everything lands in
 ``BENCH_kb_serving.json`` (validated by ``tools/check_docs.py``).
+
+Storage rows (ISSUE 7): int8 rows vs fp32 (memory per row, lookup
+throughput, quantized-IVF recall@10) and a cold-tier run where the bank
+is 4x its resident device tier and must fault rows in on demand.
+Acceptance: >= 3.5x bytes_per_row reduction, int8 lookups within 1.3x of
+fp32, recall@10 >= 0.95, and the oversubscribed bank serves bit-exact
+rows.
 """
 from __future__ import annotations
 
@@ -52,9 +59,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (InProcessTransport, KBRouter, KBTransportServer,
-                        KnowledgeBankServer, PartitionMap,
-                        RemoteKnowledgeBank, knowledge_bank as kbm)
+from repro.core import (InProcessTransport, KBEngine, KBRouter,
+                        KBTransportServer, KnowledgeBankServer,
+                        PartitionMap, RemoteKnowledgeBank,
+                        knowledge_bank as kbm)
+from repro.core.ann_index import clustered_bank
 
 N, D = 4096, 64
 CLIENTS = 8
@@ -253,6 +262,108 @@ def _run_reorder(quick: bool, rows: List[Dict], raw: Dict) -> None:
                      "derived": f"requests_per_s={m / dt:.0f}{extra}"})
 
 
+def _run_storage(quick: bool, rows: List[Dict], raw: Dict) -> None:
+    """int8 rows vs fp32 (ISSUE 7): memory per row, saturated lookup
+    throughput, and quantized-IVF shortlist recall.
+
+    Acceptance: >= 3.5x bytes_per_row reduction at int8 (D=64: 256 B vs
+    64 + 8 B scale/offset), int8 lookup throughput within 1.3x of fp32,
+    and recall@10 >= 0.95 for quantized IVF against exact fp32 search."""
+    calls = 20 if quick else 80
+    table = np.random.default_rng(0).normal(size=(N, D)).astype(np.float32)
+    stor: Dict[str, Dict] = {}
+    for mode in ("fp32", "int8"):
+        server = KnowledgeBankServer(N, D, storage=mode)
+        server.update(np.arange(N), table)
+        server.warmup(BATCH * CLIENTS)
+        qps = _drive(server, calls)
+        st = server.stats()["storage"]
+        server.close()
+        stor[mode] = {"bytes_per_row": int(st["bytes_per_row"]),
+                      "bytes_resident": int(st["bytes_resident"]),
+                      "lookups_per_s": qps}
+    ratio = stor["fp32"]["bytes_per_row"] / stor["int8"]["bytes_per_row"]
+    slowdown = (stor["fp32"]["lookups_per_s"]
+                / stor["int8"]["lookups_per_s"])
+
+    # recall: quantized IVF (shortlist scored via the int8 decomposition,
+    # winners re-ranked against the fp32 masters) vs exact fp32 search
+    n = 2048
+    bank = np.asarray(clustered_bank(n, D, 32, seed=3))
+    rng = np.random.default_rng(10)
+    q = (bank[rng.integers(0, n, 32)]
+         + 0.05 * rng.normal(size=(32, D))).astype(np.float32)
+    e32 = KBEngine(n, D, backend="dense")
+    e32.update(np.arange(n), bank)
+    _, ref = e32.nn_search(q, 10, mode="exact")
+    e8 = KBEngine(n, D, backend="dense", storage="int8", master_rows=n,
+                  search_mode="ivf", ann_nlist=32, ann_nprobe=8)
+    e8.update(np.arange(n), bank)
+    e8.rebuild_ann_index()
+    _, ids = e8.nn_search(q, 10, mode="ivf")
+    hits = sum(len(set(ids[b].tolist()) & set(ref[b].tolist()))
+               for b in range(len(ref)))
+    recall = hits / (len(ref) * 10)
+
+    raw["storage"] = {**stor, "bytes_per_row_ratio": ratio,
+                      "lookup_slowdown_int8": slowdown,
+                      "ivf_recall_at_10": recall}
+    for mode in ("fp32", "int8"):
+        extra = ""
+        if mode == "int8":
+            extra = (f" bytes_per_row_ratio={ratio:.2f}x"
+                     f" lookup_slowdown={slowdown:.2f}x"
+                     f" ivf_recall_at_10={recall:.3f}")
+        rows.append({
+            "name": f"kb_serving/storage/{mode}",
+            "us_per_call": 1e6 / stor[mode]["lookups_per_s"],
+            "derived": f"bytes_per_row={stor[mode]['bytes_per_row']}"
+                       f" lookups_per_s="
+                       f"{stor[mode]['lookups_per_s']:.0f}{extra}"})
+
+
+def _run_cold_tier(quick: bool, rows: List[Dict], raw: Dict) -> None:
+    """Tiered residency (ISSUE 7): a bank 4x larger than its resident
+    device tier serves lookups correctly, faulting cold rows in on
+    demand. Acceptance: every served row matches the fill table."""
+    n_total, resident = 8192, 2048
+    verify_batches = 8 if quick else 32
+    table = np.random.default_rng(5).normal(
+        size=(n_total, D)).astype(np.float32)
+    server = KnowledgeBankServer(n_total, D, resident_rows=resident,
+                                 cold_after_rows=resident // 2,
+                                 coalesce=False)
+    for lo in range(0, n_total, resident // 2):
+        hi = min(lo + resident // 2, n_total)
+        server.update(np.arange(lo, hi), table[lo:hi])
+    rng = np.random.default_rng(6)
+    correct = True
+    t0 = time.perf_counter()
+    for _ in range(verify_batches):
+        ids = rng.integers(0, n_total, (BATCH,))
+        got = server.lookup(ids)
+        correct = correct and np.array_equal(got, table[ids])
+    dt = time.perf_counter() - t0
+    st = server.stats()["storage"]
+    server.close()
+    raw["cold_tier"] = {
+        "total_rows": n_total, "resident_rows": resident,
+        "oversubscription": n_total / resident,
+        "bytes_resident": int(st["bytes_resident"]),
+        "cold_rows": int(st["cold_rows"]),
+        "tier_faults": int(st["tier_faults"]),
+        "tier_spills": int(st["tier_spills"]),
+        "lookups_correct": bool(correct)}
+    rows.append({
+        "name": f"kb_serving/cold-tier/{n_total // resident}x",
+        "us_per_call": 1e6 * dt / verify_batches,
+        "derived": f"resident={resident}/{n_total}"
+                   f" cold_rows={st['cold_rows']}"
+                   f" tier_faults={st['tier_faults']}"
+                   f" tier_spills={st['tier_spills']}"
+                   f" lookups_correct={correct}"})
+
+
 def run(quick: bool = False) -> List[Dict]:
     calls = 30 if quick else 120
     table = np.random.default_rng(0).normal(size=(N, D)).astype(np.float32)
@@ -303,6 +414,8 @@ def run(quick: bool = False) -> List[Dict]:
                       "scale_N": SCALE_N, "scale_D": SCALE_D,
                       "scale_batch": SCALE_B, "max_coalesce": SCALE_CAP,
                       "quick": bool(quick)}}
+    _run_storage(quick, rows, raw)
+    _run_cold_tier(quick, rows, raw)
     _run_scaleout(quick, rows, raw)
     _run_reorder(quick, rows, raw)
     with open("BENCH_kb_serving.json", "w") as f:

@@ -32,10 +32,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ann_index import (build_ivf_index, build_sharded_ivf_index,
-                                  clustered_bank)
+from repro.core.ann_index import (QuantizedIVFIndex, build_ivf_index,
+                                  build_sharded_ivf_index, clustered_bank)
+from repro.core.knowledge_bank import quantize_rows
 from repro.kernels import ops, ref
-from repro.kernels.nn_search_ivf import ivf_search_jnp, ivf_search_sharded_jnp
+from repro.kernels.nn_search_ivf import (ivf_search_jnp,
+                                         ivf_search_quantized_jnp,
+                                         ivf_search_sharded_jnp)
 
 
 def _t(fn, *args, reps=5):
@@ -149,6 +152,21 @@ def run(quick: bool = False) -> List[Dict]:
                      "us_per_call": t_ivf_pal * 1e6,
                      "derived": f"interpret_vs_pallas_exact_"
                                 f"x{t_ivf_pal/t_pal:.2f}"})
+        # -- int8 quantized IVF (ISSUE 7): codes + per-row scale/offset,
+        # fused dequant-by-decomposition inside the scoring loop
+        qidx = QuantizedIVFIndex(idx)
+        codes, qscl, qoff = quantize_rows(bank)
+        q8_args = (codes, qscl, qoff, qidx.centroids, qidx.packed_codes,
+                   qidx.packed_scale, qidx.packed_offset, qidx.packed_ids)
+        q8_fn = jax.jit(functools.partial(ivf_search_quantized_jnp,
+                                          k=10, nprobe=nprobe))
+        t_q8 = _t(q8_fn, *q8_args, q)
+        _, i_q810 = q8_fn(*q8_args, q)
+        rec_q8 = _recall(np.asarray(i_q810), np.asarray(i_ex10))
+        rows.append({"name": f"nn_search/ivf_int8/N={N}",
+                     "us_per_call": t_q8 * 1e6,
+                     "derived": f"recall@10={rec_q8:.3f},"
+                                f"vs_fp32_ivf_x{t_q8/t_ivf:.2f}"})
         raw["sizes"][str(N)] = {
             "nlist": idx.nlist, "nprobe": nprobe,
             "bucket_cap": idx.bucket_cap,
@@ -156,6 +174,7 @@ def run(quick: bool = False) -> List[Dict]:
             "us_ivf_ref": t_ivf * 1e6, "us_ivf_pallas": t_ivf_pal * 1e6,
             "us_build": t_build * 1e6,
             "recall_at_10": rec, "ivf_speedup_vs_exact": speedup,
+            "us_ivf_int8": t_q8 * 1e6, "recall_at_10_int8": rec_q8,
         }
 
     # the sharded-IVF block below measures the loop's LAST bank/queries/

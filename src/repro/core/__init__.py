@@ -3,8 +3,11 @@ asynchronous host runtime."""
 from repro.core.knowledge_bank import (FeatureStore, KBState,
                                        feature_store_create, fs_lookup_neighbors,
                                        fs_update_labels, fs_update_neighbors,
-                                       kb_create, kb_flush, kb_lazy_grad,
-                                       kb_lookup, kb_nn_search, kb_update)
+                                       dequantize_rows, kb_create, kb_flush,
+                                       kb_flush_q, kb_lazy_grad, kb_lookup,
+                                       kb_lookup_q, kb_nn_search,
+                                       kb_nn_search_q, kb_update, kb_update_q,
+                                       quantize_rows, quantized_scores)
 from repro.core.sharded_kb import (kb_axes, kb_pspecs, sharded_kb_flush,
                                    sharded_kb_lazy_grad, sharded_kb_lookup,
                                    sharded_kb_nn_search,
@@ -13,9 +16,13 @@ from repro.core.sharded_kb import (kb_axes, kb_pspecs, sharded_kb_flush,
 from repro.core.kb_engine import (DenseBackend, KBBackend, KBEngine, KBOps,
                                   PallasBackend, ShardedBackend,
                                   make_backend, make_kb_ops)
-from repro.core.ann_index import (IVFIndex, IVFRefresher, ShardedIVFIndex,
+from repro.core.ann_index import (IVFIndex, IVFRefresher,
+                                  QuantizedIVFIndex,
+                                  QuantizedShardedIVFIndex, ShardedIVFIndex,
                                   build_ivf_index, build_sharded_ivf_index,
                                   kmeans)
+from repro.core.kb_storage import (DiskColdStore, MemoryColdStore,
+                                   make_cold_store)
 from repro.core.trainer import (make_async_train_fns, make_carls_train_step,
                                 make_inline_baseline_step, model_loss)
 from repro.core.knowledge_maker import (graph_agreement_labels,
@@ -40,12 +47,16 @@ __all__ = [
     "FeatureStore", "KBState", "feature_store_create", "fs_lookup_neighbors",
     "fs_update_labels", "fs_update_neighbors", "kb_create", "kb_flush",
     "kb_lazy_grad", "kb_lookup", "kb_nn_search", "kb_update",
+    "dequantize_rows", "kb_flush_q", "kb_lookup_q", "kb_nn_search_q",
+    "kb_update_q", "quantize_rows", "quantized_scores",
+    "DiskColdStore", "MemoryColdStore", "make_cold_store",
     "kb_axes", "kb_pspecs", "sharded_kb_flush", "sharded_kb_lazy_grad",
     "sharded_kb_lookup", "sharded_kb_nn_search", "sharded_kb_nn_search_ivf",
     "sharded_kb_update",
     "DenseBackend", "KBBackend", "KBEngine", "KBOps", "PallasBackend",
     "ShardedBackend", "make_backend", "make_kb_ops",
-    "IVFIndex", "IVFRefresher", "ShardedIVFIndex", "build_ivf_index",
+    "IVFIndex", "IVFRefresher", "QuantizedIVFIndex",
+    "QuantizedShardedIVFIndex", "ShardedIVFIndex", "build_ivf_index",
     "build_sharded_ivf_index", "kmeans",
     "make_async_train_fns", "make_carls_train_step",
     "make_inline_baseline_step", "model_loss",

@@ -342,6 +342,83 @@ def build_sharded_ivf_index(table, n_shards: int, *, nlist: int = 64,
                            bucket_cap=cap, n_rows=N)
 
 
+# ---------------------------------------------------------------------------
+# quantized index wrappers (int8 packed rows + per-slot scale/offset)
+# ---------------------------------------------------------------------------
+
+def _quantize_packed(packed_vecs):
+    """Per-row affine int8 quantization of a packed-bucket array (numpy,
+    build path — same (offset, scale) rule as
+    ``repro.core.knowledge_bank.quantize_rows``). Padding slots are
+    all-zero rows and quantize to (codes 0, scale 1, offset 0) — dequant 0,
+    and the -1 packed id already masks them out of every shortlist."""
+    vecs = np.asarray(packed_vecs, np.float32)
+    hi = vecs.max(axis=-1)
+    lo = vecs.min(axis=-1)
+    offset = 0.5 * (hi + lo)
+    scale = (hi - lo) / 254.0
+    scale = np.where(scale > 0, scale, 1.0).astype(np.float32)
+    codes = np.clip(np.round((vecs - offset[:, None]) / scale[:, None]),
+                    -127, 127).astype(np.int8)
+    return codes, scale, offset.astype(np.float32)
+
+
+class QuantizedIVFIndex:
+    """An ``IVFIndex`` whose packed rows are stored int8 + per-slot
+    (scale, offset) — 4x less stage-2 snapshot memory and int8 MACs on
+    the shortlist. Scoring uses the exact decomposition
+    ``s (q.c) + o sum(q)`` (see ``repro.kernels.nn_search_ivf``), so the
+    quantization error relative to the fp32 snapshot affects shortlist
+    recall only; winners are still re-ranked live. Keeps a reference to
+    the fp32 ``base`` so partial sharded rebuilds stay possible."""
+
+    __slots__ = ("centroids", "packed_codes", "packed_scale",
+                 "packed_offset", "packed_ids", "nlist", "bucket_cap",
+                 "n_rows", "base")
+
+    def __init__(self, base: IVFIndex):
+        codes, scale, offset = _quantize_packed(base.packed_vecs)
+        self.centroids = base.centroids          # (C, D) f32 — tiny
+        self.packed_codes = jnp.asarray(codes)
+        self.packed_scale = jnp.asarray(scale)
+        self.packed_offset = jnp.asarray(offset)
+        self.packed_ids = base.packed_ids
+        self.nlist = base.nlist
+        self.bucket_cap = base.bucket_cap
+        self.n_rows = base.n_rows
+        self.base = base
+
+    def bucket_stats(self) -> dict:
+        return _bucket_occupancy_stats(self.packed_ids, self.nlist,
+                                       self.bucket_cap)
+
+
+class QuantizedShardedIVFIndex:
+    """Per-shard sub-indexes with int8 packed rows — the sharded analogue
+    of ``QuantizedIVFIndex`` (same layout rules as ``ShardedIVFIndex``;
+    the live re-rank still runs against the fp32 sharded table)."""
+
+    __slots__ = ("centroids", "packed_codes", "packed_scale",
+                 "packed_offset", "packed_ids", "n_shards", "nlist",
+                 "bucket_cap", "n_rows", "base")
+
+    def __init__(self, base: ShardedIVFIndex):
+        codes, scale, offset = _quantize_packed(base.packed_vecs)
+        self.centroids = base.centroids
+        self.packed_codes = jnp.asarray(codes)
+        self.packed_scale = jnp.asarray(scale)
+        self.packed_offset = jnp.asarray(offset)
+        self.packed_ids = base.packed_ids
+        self.n_shards = base.n_shards
+        self.nlist = base.nlist
+        self.bucket_cap = base.bucket_cap
+        self.n_rows = base.n_rows
+        self.base = base
+
+    def shard_stats(self) -> list:
+        return self.base.shard_stats()
+
+
 class IVFRefresher(threading.Thread):
     """Background index maker: the knowledge-maker pattern applied to the
     ANN index. Polls the engine's write counters and rebuilds the index

@@ -60,7 +60,7 @@ from __future__ import annotations
 
 import threading
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -170,14 +170,21 @@ class KnowledgeBankServer:
                  reorder: bool = False, reorder_window: int = 8,
                  search_mode: str = "exact", ann_nlist: int = 64,
                  ann_nprobe: int = 8,
-                 ann_stale_rows: Optional[int] = None):
+                 ann_stale_rows: Optional[int] = None,
+                 storage: str = "fp32", cache_rows: int = 0,
+                 resident_rows: Optional[int] = None,
+                 cold_after_rows: Optional[int] = None,
+                 cold_dir: Optional[str] = None):
         if engine is None:
             engine = KBEngine(num_entries, dim, backend=backend, dist=dist,
                               lazy_lr=lazy_lr, zmax=zmax,
                               lazy_update=lazy_update,
                               search_mode=search_mode, ann_nlist=ann_nlist,
                               ann_nprobe=ann_nprobe,
-                              ann_stale_rows=ann_stale_rows)
+                              ann_stale_rows=ann_stale_rows,
+                              storage=storage, resident_rows=resident_rows,
+                              cold_after_rows=cold_after_rows,
+                              cold_dir=cold_dir)
         self.engine = engine
         self._ann_refresher = None
         self._maker_runtime = None
@@ -193,11 +200,18 @@ class KnowledgeBankServer:
         self.reorder_window = reorder_window
         # row -> trainer step of the checkpoint that produced the row
         self._row_src_step = np.full((engine.num_entries,), -1, np.int64)
+        # hot-id LRU in front of the engine (cache_rows = 0 disables).
+        # Legal because the engine's lookup is idempotent between writes —
+        # a populating lookup already applied (and cleared) the row's
+        # pending delta, so replaying it is a pure gather — and every
+        # write invalidates the ids it touches (flush clears everything).
+        self.cache_rows = cache_rows
+        self._row_cache: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self.metrics = {"lookups": 0, "updates": 0, "lazy_grads": 0,
                         "rows_served": 0, "stale_rows_served": 0,
                         "staleness_sum": 0.0,
                         "requests": 0, "dispatches": 0, "max_run": 0,
-                        "reorders": 0}
+                        "reorders": 0, "cache_hits": 0, "cache_misses": 0}
         self._mlock = threading.Lock()      # metrics + row_src_step
         self._elock = threading.Lock()      # engine state (direct path)
         self._queue: deque = deque()
@@ -287,6 +301,12 @@ class KnowledgeBankServer:
         and any attached maker fleet's per-maker counters."""
         with self._mlock:
             m = dict(self.metrics)
+        storage = self.engine.storage_stats()
+        # tier counters are engine-side cumulative totals; mirroring them
+        # into metrics lets the router's generic numeric summing aggregate
+        # them across partitions like any other counter
+        m["tier_faults"] = storage["tier_faults"]
+        m["tier_spills"] = storage["tier_spills"]
         return {
             "metrics": m,
             "mean_staleness": float(self.mean_staleness),
@@ -295,6 +315,7 @@ class KnowledgeBankServer:
             "backend": self.engine.backend.name,
             "num_entries": int(self.engine.num_entries),
             "dim": int(self.engine.dim),
+            "storage": storage,
             "maker_stats": self.maker_stats,
         }
 
@@ -499,7 +520,8 @@ class KnowledgeBankServer:
             before = self.engine.dispatches
             if op == "lookup":
                 ids = np.concatenate([r.ids for r in run])
-                vals = self.engine.lookup(ids)
+                vals = (self._cached_lookup(ids) if self.cache_rows > 0
+                        else self.engine.lookup(ids))
                 off = 0
                 for r in run:
                     n = r.ids.size
@@ -519,21 +541,24 @@ class KnowledgeBankServer:
                         self.metrics["staleness_sum"] += float(
                             np.maximum(r.meta - src[known], 0).sum())
             elif op == "update":
-                self.engine.update(
-                    np.concatenate([r.ids for r in run]),
-                    np.concatenate([r.payload for r in run]))
+                w_ids = np.concatenate([r.ids for r in run])
+                self.engine.update(w_ids,
+                                   np.concatenate([r.payload for r in run]))
+                self._invalidate_cache(w_ids)
                 with self._mlock:
                     for r in run:
                         self._row_src_step[r.ids] = r.meta
                         self.metrics["updates"] += 1
             elif op == "lazy_grad":
+                w_ids = np.concatenate([r.ids for r in run])
                 self.engine.lazy_grad(
-                    np.concatenate([r.ids for r in run]),
-                    np.concatenate([r.payload for r in run]))
+                    w_ids, np.concatenate([r.payload for r in run]))
+                self._invalidate_cache(w_ids)
                 with self._mlock:
                     self.metrics["lazy_grads"] += len(run)
             elif op == "flush":
                 self.engine.flush()
+                self._row_cache.clear()
             elif op == "nn":
                 sizes = [r.payload.shape[0] for r in run]
                 excl = (None if run[0].excl is None
@@ -557,6 +582,46 @@ class KnowledgeBankServer:
         finally:
             for r in run:
                 r.event.set()
+
+    def _cached_lookup(self, ids: np.ndarray) -> np.ndarray:
+        """Hot-id LRU read path (see __init__): serve repeats from host
+        RAM, engine-lookup only the distinct missing ids, refresh the
+        cache with what came back. Runs under ``_elock`` like every other
+        engine touch. A cache hit on a tiered engine also skips a
+        redundant fault-in — the cached value IS what the fault would
+        reconstruct (spill/restore is bit-identical)."""
+        flat = ids.reshape(-1)
+        out = np.empty((flat.size, self.engine.dim), np.float32)
+        cache = self._row_cache
+        miss_pos = []
+        hits = 0
+        for i in range(flat.size):
+            row = cache.get(int(flat[i]))
+            if row is None:
+                miss_pos.append(i)
+            else:
+                cache.move_to_end(int(flat[i]))
+                out[i] = row
+                hits += 1
+        if miss_pos:
+            uniq, inv = np.unique(flat[miss_pos], return_inverse=True)
+            vals = self.engine.lookup(uniq)
+            out[miss_pos] = vals[inv]
+            for j in range(uniq.size):
+                cache[int(uniq[j])] = vals[j]
+            while len(cache) > self.cache_rows:
+                cache.popitem(last=False)
+        with self._mlock:
+            self.metrics["cache_hits"] += hits
+            self.metrics["cache_misses"] += len(miss_pos)
+        return out
+
+    def _invalidate_cache(self, ids: np.ndarray) -> None:
+        """Drop written rows from the hot-id cache (the legality half of
+        the caching contract)."""
+        if self._row_cache:
+            for g in np.unique(ids):
+                self._row_cache.pop(int(g), None)
 
 
 class SharedFeatureStore:

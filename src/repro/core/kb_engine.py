@@ -62,6 +62,7 @@ index.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Callable, NamedTuple, Optional, Protocol, Tuple
 
 import jax
@@ -69,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import knowledge_bank as kbm
+from repro.core.kb_storage import make_cold_store
 from repro.core.knowledge_bank import KBState
 from repro.sharding.partition import DistContext
 
@@ -164,6 +166,17 @@ class ShardedBackend:
         return self._skb.sharded_kb_nn_search_ivf(
             table, centroids, packed_vecs, packed_ids, queries, k, nprobe,
             self.dist)
+
+    def nn_search_ivf_q(self, table, centroids, packed_codes, packed_scale,
+                        packed_offset, packed_ids, queries, k, nprobe):
+        """Quantized-snapshot variant: int8 packed sub-index rows scored via
+        the affine decomposition ``s (q.c) + o sum(q)``; the live re-rank
+        still runs against the fp32 sharded table, so returned scores stay
+        exact (quantization costs shortlist recall only)."""
+        return self._skb.sharded_kb_nn_search_ivf(
+            table, centroids, packed_codes, packed_ids, queries, k, nprobe,
+            self.dist, packed_scale=packed_scale,
+            packed_offset=packed_offset)
 
     @property
     def n_shards(self) -> int:
@@ -329,12 +342,48 @@ class KBEngine:
                  lazy_update: bool = True, interpret: bool = True,
                  search_mode: str = "exact", ann_nlist: int = 64,
                  ann_nprobe: int = 8, ann_stale_rows: Optional[int] = None,
-                 dtype=jnp.float32, key: Optional[jax.Array] = None):
+                 dtype=jnp.float32, key: Optional[jax.Array] = None,
+                 storage: str = "fp32", master_rows: int = 1024,
+                 resident_rows: Optional[int] = None,
+                 cold_after_rows: Optional[int] = None,
+                 cold_dir: Optional[str] = None):
         self.backend: KBBackend = (backend if not isinstance(backend, str)
                                    else make_backend(backend, dist=dist,
                                                      interpret=interpret))
         self.num_entries, self.dim = num_entries, dim
         self.lazy_lr, self.zmax, self.lazy_update = lazy_lr, zmax, lazy_update
+        # -- storage mode (tentpole: int8 rows + two-tier residency) ------
+        if storage not in ("fp32", "int8"):
+            raise ValueError(f"unknown storage {storage!r} "
+                             "(want fp32 | int8)")
+        self.storage = storage
+        sharded = isinstance(self.backend, ShardedBackend)
+        # int8 quantizes the LIVE table on the single-device backends; the
+        # sharded backend keeps its fp32 table (mesh specs untouched) and
+        # quantizes the IVF snapshot instead — see rebuild_ann_index.
+        self._quantized = storage == "int8" and not sharded
+        if storage == "int8" and not lazy_update:
+            raise ValueError(
+                "storage='int8' requires lazy_update=True: the immediate-"
+                "mode ablation scatter-adds into the table, which is not "
+                "defined over int8 codes")
+        tiered = resident_rows is not None
+        if cold_after_rows is not None and not tiered:
+            raise ValueError("cold_after_rows needs resident_rows set")
+        if tiered and sharded:
+            raise ValueError("tiered residency is single-device only "
+                             "(dense | pallas backends)")
+        if tiered and key is not None:
+            raise ValueError(
+                "tiered residency requires key=None: non-resident rows "
+                "materialize as zeros on first touch, so a random init "
+                "would make residency observable")
+        if tiered and not 0 < resident_rows <= num_entries:
+            raise ValueError(f"resident_rows={resident_rows} out of range "
+                             f"(1..{num_entries})")
+        self.tiered = tiered
+        self.master_rows = master_rows
+        self.cold_after_rows = cold_after_rows
         if search_mode not in ("exact", "ivf"):
             raise ValueError(f"unknown search_mode {search_mode!r} "
                              "(want exact | ivf)")
@@ -362,18 +411,87 @@ class KBEngine:
         # entry-side (per-contribution EMA) clip; defaults to the apply-side
         # zmax, matching the per-call server's single knob
         entry_zmax = zmax if entry_zmax is None else entry_zmax
-        self.state = kbm.kb_create(num_entries, dim, dtype=dtype, key=key)
+        # tiered engines size the device state to the resident slots only;
+        # everything else lives in the cold store until first touch
+        rows = resident_rows if tiered else num_entries
+        self.resident_rows = rows
+        if self._quantized:
+            if key is not None:
+                st = kbm.kb_create(rows, dim, key=key)
+                codes, s, o = kbm.quantize_rows(st.table)
+                self.state = st._replace(table=codes)
+                self._qscale, self._qoffset = s, o
+            else:
+                # zero rows quantize to (codes 0, scale 1, offset 0):
+                # dequant is exactly 0.0, matching the fp32 zero init
+                self.state = kbm.kb_create(rows, dim, dtype=jnp.int8)
+                self._qscale = jnp.ones((rows,), jnp.float32)
+                self._qoffset = jnp.zeros((rows,), jnp.float32)
+        else:
+            self.state = kbm.kb_create(rows, dim, dtype=dtype, key=key)
+            self._qscale = self._qoffset = None
+        # -- two-tier residency bookkeeping (host-side, O(N) ints) --------
+        if tiered:
+            self.cold_store = make_cold_store(cold_dir)
+            self._slot_of = np.full((num_entries,), -1, np.int64)
+            self._slot_id = np.full((rows,), -1, np.int64)
+            self._free_slots = list(range(rows - 1, -1, -1))
+            self._touch = np.zeros((num_entries,), np.int64)
+            self._gen = 0           # write clock: += distinct rows written
+        else:
+            self.cold_store = None
+        self.tier_faults = 0        # rows restored from the cold store
+        self.tier_spills = 0        # rows pushed down to the cold store
+        # fp32 master set: exact rows (as pushed by update) for final-score
+        # re-ranking in int8 mode; invalidated per-id by lazy_grad
+        self._masters: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self.dispatches = 0         # device calls issued (bench metric)
 
         bk = self.backend
-        self._lookup_fn = jax.jit(lambda st, ids: bk.lookup(
-            st, ids, lazy_lr=lazy_lr, zmax=zmax,
-            apply_pending=lazy_update))
-        self._update_fn = jax.jit(lambda st, ids, v: bk.update(st, ids, v))
+        if self._quantized:
+            if isinstance(bk, PallasBackend):
+                from repro.kernels.kb_fused_lookup import (
+                    kb_fused_lookup_q_pallas)
+                n_block, interp = bk.n_block, bk.interpret
+
+                def _lookup_q(st, qs, qo, ids):
+                    vals, tbl, s, o, gsum, gcnt, gsq = (
+                        kb_fused_lookup_q_pallas(
+                            st.table, qs, qo, st.grad_sum, st.grad_cnt,
+                            st.grad_sqnorm, ids, lazy_lr=lazy_lr, zmax=zmax,
+                            n_block=n_block, interpret=interp))
+                    touched = jnp.zeros(st.version.shape, bool).at[ids].set(
+                        True, mode="drop")
+                    version = st.version + (
+                        touched & (st.grad_cnt > 0)).astype(jnp.int32)
+                    st = st._replace(table=tbl, version=version,
+                                     grad_sum=gsum, grad_cnt=gcnt,
+                                     grad_sqnorm=gsq)
+                    return vals, st, s, o
+            else:
+                def _lookup_q(st, qs, qo, ids):
+                    return kbm.kb_lookup_q(st, qs, qo, ids,
+                                           lazy_lr=lazy_lr, zmax=zmax)
+            self._lookup_fn = jax.jit(_lookup_q)
+            self._update_fn = jax.jit(
+                lambda st, qs, qo, ids, v: kbm.kb_update_q(st, qs, qo,
+                                                           ids, v))
+            self._flush_fn = jax.jit(
+                lambda st, qs, qo: kbm.kb_flush_q(st, qs, qo,
+                                                  lazy_lr=lazy_lr,
+                                                  zmax=zmax))
+        else:
+            self._lookup_fn = jax.jit(lambda st, ids: bk.lookup(
+                st, ids, lazy_lr=lazy_lr, zmax=zmax,
+                apply_pending=lazy_update))
+            self._update_fn = jax.jit(
+                lambda st, ids, v: bk.update(st, ids, v))
+            self._flush_fn = jax.jit(lambda st: bk.flush(
+                st, lazy_lr=lazy_lr, zmax=zmax))
+        # lazy_grad only touches the fp32 gradient caches — never the table
+        # — so the fp32 op serves both storage modes unchanged
         self._lazy_fn = jax.jit(lambda st, ids, g, m: bk.lazy_grad(
             st, ids, g, zmax=entry_zmax, mask=m))
-        self._flush_fn = jax.jit(lambda st: bk.flush(
-            st, lazy_lr=lazy_lr, zmax=zmax))
         # ablation baseline: immediate SGD scatter, no cache (lazy_update
         # off). mask keeps padded entries inert (g * 0).
         self._immediate_fn = jax.jit(lambda st, ids, g, m: st._replace(
@@ -393,9 +511,15 @@ class KBEngine:
         flat = ids.reshape(-1).astype(np.int32)
         if flat.size == 0:
             return np.zeros((*ids.shape, self.dim), np.float32)
-        pad = _bucket(flat.size) - flat.size
-        padded = np.concatenate([flat, np.full(pad, flat[-1], np.int32)])
-        vals, self.state = self._lookup_fn(self.state, jnp.asarray(padded))
+        dev = self._admit(flat)
+        pad = _bucket(dev.size) - dev.size
+        padded = np.concatenate([dev, np.full(pad, dev[-1], np.int32)])
+        if self._quantized:
+            vals, self.state, self._qscale, self._qoffset = self._lookup_fn(
+                self.state, self._qscale, self._qoffset, jnp.asarray(padded))
+        else:
+            vals, self.state = self._lookup_fn(self.state,
+                                               jnp.asarray(padded))
         self.dispatches += 1
         return np.asarray(vals[:flat.size]).reshape(*ids.shape, -1)
 
@@ -412,13 +536,31 @@ class KBEngine:
         keep = ids.size - 1 - keep          # last occurrence of each id
         ids, values = ids[keep], values[keep]
         n = ids.size                        # distinct rows, pre-padding
+        if self._quantized and self.master_rows > 0:
+            # masters hold the PRE-quantization rows: update() is the one
+            # op with exact fp32 values in hand
+            for i in range(n):
+                g = int(ids[i])
+                self._masters[g] = values[i].astype(np.float32).copy()
+                self._masters.move_to_end(g)
+                if len(self._masters) > self.master_rows:
+                    self._masters.popitem(last=False)
+        dev = self._admit(ids)
         pad = _bucket(n) - n
-        ids = np.concatenate([ids, np.full(pad, ids[-1], np.int32)])
-        values = np.concatenate([values, np.repeat(values[-1:], pad, 0)])
-        self.state = self._update_fn(self.state, jnp.asarray(ids),
-                                     jnp.asarray(values))
+        dev_p = np.concatenate([dev, np.full(pad, dev[-1], np.int32)])
+        values_p = np.concatenate([values, np.repeat(values[-1:], pad, 0)])
+        if self._quantized:
+            self.state, self._qscale, self._qoffset = self._update_fn(
+                self.state, self._qscale, self._qoffset,
+                jnp.asarray(dev_p), jnp.asarray(values_p))
+        else:
+            self.state = self._update_fn(self.state, jnp.asarray(dev_p),
+                                         jnp.asarray(values_p))
         self.dispatches += 1
-        self._count_writes(ids[:n])
+        self._count_writes(ids)
+        if self.tiered:
+            self._gen += n
+            self._spill_cold()
 
     def lazy_grad(self, ids, grads) -> None:
         """Cache gradients (or apply immediately when lazy_update=False).
@@ -430,9 +572,15 @@ class KBEngine:
         if ids.size == 0:
             return
         grads = np.asarray(grads, np.float32).reshape(ids.size, -1)
+        if self._quantized and self._masters:
+            # these rows' live values diverge from their masters the moment
+            # the cached gradient applies — drop the stale exact copies
+            for g in np.unique(ids):
+                self._masters.pop(int(g), None)
+        dev = self._admit(ids)
         n = ids.size
         pad = _bucket(n) - n
-        ids_p = np.concatenate([ids, np.full(pad, ids[-1], np.int32)])
+        ids_p = np.concatenate([dev, np.full(pad, dev[-1], np.int32)])
         grads_p = np.concatenate([grads, np.zeros((pad, grads.shape[1]),
                                                   np.float32)])
         mask = np.concatenate([np.ones(n, np.float32),
@@ -447,6 +595,125 @@ class KBEngine:
         # Counting here (not at lookup) keeps pure reads free: a read-only
         # workload never triggers rebuilds or the stale fallback.
         self._count_writes(ids)
+        if self.tiered:
+            self._gen += int(np.unique(ids).size)
+            self._spill_cold()
+
+    # -- two-tier residency (resident device slots + host/disk cold store) -
+
+    def _admit(self, flat: np.ndarray) -> np.ndarray:
+        """Tiered engines: fault this batch's rows device-resident and
+        translate global ids -> device slots (identity otherwise). Eviction
+        is oldest-touch-first among resident rows NOT in the current batch;
+        a batch with more distinct rows than there are slots cannot be
+        served and raises."""
+        if not self.tiered:
+            return flat
+        # out-of-range ids clamp to the edge row — the same net behavior a
+        # jitted device gather gives the non-tiered engines
+        flat = np.clip(flat, 0, self.num_entries - 1).astype(np.int32)
+        uniq = np.unique(flat)
+        miss = uniq[self._slot_of[uniq] < 0]
+        if miss.size:
+            short = miss.size - len(self._free_slots)
+            if short > 0:
+                res = np.flatnonzero(self._slot_id >= 0)
+                cand = res[~np.isin(self._slot_id[res], uniq)]
+                if cand.size < short:
+                    raise ValueError(
+                        f"batch touches {uniq.size} distinct rows but only "
+                        f"{self.resident_rows} device slots exist")
+                order = np.argsort(self._touch[self._slot_id[cand]],
+                                   kind="stable")
+                self._spill_slots(cand[order[:short]])
+            self._fault_in(miss)
+        self._touch[uniq] = self._gen
+        return self._slot_of[flat].astype(np.int32)
+
+    def _fault_in(self, gids: np.ndarray) -> None:
+        """Restore rows from the cold store (or materialize zero rows on
+        first-ever touch) into free slots — the FULL per-row state, so the
+        round trip is bit-identical. Slot contents changing under a built
+        IVF index is row churn, so faults charge the staleness clock."""
+        n = gids.size
+        slots = np.array([self._free_slots.pop() for _ in range(n)],
+                         np.int64)
+        st = self.state
+        rows = np.zeros((n, self.dim), st.table.dtype)
+        ver = np.zeros((n,), np.int32)
+        gsum = np.zeros((n, self.dim), np.float32)
+        gcnt = np.zeros((n,), np.float32)
+        gsq = np.zeros((n,), np.float32)
+        ema = np.zeros((n,), np.float32)
+        scl = np.ones((n,), np.float32)
+        off = np.zeros((n,), np.float32)
+        for i in range(n):
+            rec = self.cold_store.get(int(gids[i]))
+            if rec is None:
+                continue                        # first touch: zero row
+            self.tier_faults += 1
+            rows[i], ver[i] = rec["table"], rec["version"]
+            gsum[i], gcnt[i] = rec["grad_sum"], rec["grad_cnt"]
+            gsq[i], ema[i] = rec["grad_sqnorm"], rec["norm_ema"]
+            if self._quantized:
+                scl[i], off[i] = rec["scale"], rec["offset"]
+        idx = jnp.asarray(slots)
+        self.state = st._replace(
+            table=st.table.at[idx].set(jnp.asarray(rows)),
+            version=st.version.at[idx].set(jnp.asarray(ver)),
+            grad_sum=st.grad_sum.at[idx].set(jnp.asarray(gsum)),
+            grad_cnt=st.grad_cnt.at[idx].set(jnp.asarray(gcnt)),
+            grad_sqnorm=st.grad_sqnorm.at[idx].set(jnp.asarray(gsq)),
+            norm_ema=st.norm_ema.at[idx].set(jnp.asarray(ema)))
+        if self._quantized:
+            self._qscale = self._qscale.at[idx].set(jnp.asarray(scl))
+            self._qoffset = self._qoffset.at[idx].set(jnp.asarray(off))
+        self._slot_of[gids] = slots
+        self._slot_id[slots] = gids
+        self._count_writes(gids.astype(np.int32))
+
+    def _spill_slots(self, slots: np.ndarray) -> None:
+        """Push resident slots down to the cold store (full per-row state)
+        and free them. The freed slots keep their stale device contents —
+        harmless, because ``_slot_id`` = -1 masks them out of nn_search and
+        the next fault-in overwrites every leaf."""
+        if slots.size == 0:
+            return
+        idx = jnp.asarray(slots)
+        st = self.state
+        rows = np.asarray(st.table[idx])
+        ver = np.asarray(st.version[idx])
+        gsum = np.asarray(st.grad_sum[idx])
+        gcnt = np.asarray(st.grad_cnt[idx])
+        gsq = np.asarray(st.grad_sqnorm[idx])
+        ema = np.asarray(st.norm_ema[idx])
+        if self._quantized:
+            scl = np.asarray(self._qscale[idx])
+            off = np.asarray(self._qoffset[idx])
+        for i, s in enumerate(slots):
+            rec = {"table": rows[i], "version": ver[i], "grad_sum": gsum[i],
+                   "grad_cnt": gcnt[i], "grad_sqnorm": gsq[i],
+                   "norm_ema": ema[i]}
+            if self._quantized:
+                rec["scale"], rec["offset"] = scl[i], off[i]
+            g = int(self._slot_id[s])
+            self.cold_store.put(g, rec)
+            self._slot_of[g] = -1
+            self._slot_id[s] = -1
+            self._free_slots.append(int(s))
+        self.tier_spills += int(slots.size)
+
+    def _spill_cold(self) -> None:
+        """Proactive spill after a write op: rows untouched for at least
+        ``cold_after_rows`` write-generations leave the device. O(resident)
+        scan — never walks the full id space."""
+        if self.cold_after_rows is None:
+            return
+        res = np.flatnonzero(self._slot_id >= 0)
+        if res.size == 0:
+            return
+        age = self._gen - self._touch[self._slot_id[res]]
+        self._spill_slots(res[age >= self.cold_after_rows])
 
     def _count_writes(self, ids: np.ndarray) -> None:
         """Charge written rows to the global AND per-shard staleness
@@ -468,8 +735,14 @@ class KBEngine:
     def flush(self) -> None:
         """Expiration path: apply every pending cached gradient now.
         (Flushed rows were already counted toward ``total_write_rows`` when
-        their gradients were cached.)"""
-        self.state = self._flush_fn(self.state)
+        their gradients were cached.) Tiered engines flush the RESIDENT
+        tier; a cold row's pending gradients travel with its spilled state
+        and apply on fault-in — same lazy semantics, later clock."""
+        if self._quantized:
+            self.state, self._qscale, self._qoffset = self._flush_fn(
+                self.state, self._qscale, self._qoffset)
+        else:
+            self.state = self._flush_fn(self.state)
         self.dispatches += 1
 
     def nn_search(self, queries, k: int, *, mode: Optional[str] = None,
@@ -513,17 +786,75 @@ class KBEngine:
                    and getattr(idx, "n_shards", 1) == self.ann_shards
                    and self.ann_staleness_rows <= self.ann_stale_rows)
         if use_ivf:
-            scores, ids = self._ivf_search(q, k, idx)
+            kq = k
+            if self._quantized:
+                # over-retrieve 4x so the fp32 master re-rank can recover
+                # near-ties the int8 shortlist mis-ordered (the sharded
+                # path does the same inside its hierarchical merge)
+                pool = int(idx.bucket_cap) * min(self.ann_nprobe,
+                                                 int(idx.nlist))
+                kq = max(k, min(4 * k, pool))
+            scores, ids = self._ivf_search(q, kq, idx)
             self.search_stats["ivf"] += 1
         else:
             if k not in self._nn_fns:
                 bk = self.backend
-                self._nn_fns[k] = jax.jit(
-                    lambda st, q: bk.nn_search(st, q, k))
-            scores, ids = self._nn_fns[k](self.state, jnp.asarray(q))
+                if self._quantized:
+                    # exact MIPS over int8 codes via the affine
+                    # decomposition — no dequantized (N, D) materialized
+                    # (the blocked fp32 Pallas kernel has no int8 twin;
+                    # int8 serving is expected to run IVF anyway)
+                    self._nn_fns[k] = jax.jit(
+                        lambda st, qs, qo, q: kbm.kb_nn_search_q(
+                            st, qs, qo, q, k))
+                else:
+                    self._nn_fns[k] = jax.jit(
+                        lambda st, q: bk.nn_search(st, q, k))
+            if self._quantized:
+                scores, ids = self._nn_fns[k](self.state, self._qscale,
+                                              self._qoffset, jnp.asarray(q))
+            else:
+                scores, ids = self._nn_fns[k](self.state, jnp.asarray(q))
             self.search_stats["exact"] += 1
         self.dispatches += 1
-        return np.asarray(scores[:B]), np.asarray(ids[:B])
+        scores, out_ids = np.asarray(scores[:B]), np.asarray(ids[:B])
+        if self.tiered:
+            scores, out_ids = self._tier_translate(scores, out_ids)
+        if self._quantized and self._masters:
+            scores, out_ids = self._master_rerank(queries, scores, out_ids)
+        return scores[:, :k], out_ids[:, :k]
+
+    def _tier_translate(self, scores: np.ndarray, ids: np.ndarray):
+        """Search ran over device SLOTS; map winners back to global ids.
+        Slots that are empty (never occupied, or spilled — their device
+        rows are stale) mask to (-inf, -1) and re-sort to the tail."""
+        scores, ids = scores.copy(), ids.copy()
+        valid = ids >= 0
+        gids = np.full_like(ids, -1)
+        gids[valid] = self._slot_id[ids[valid]]
+        scores[gids < 0] = -np.inf
+        order = np.argsort(-scores, axis=1, kind="stable")
+        return (np.take_along_axis(scores, order, 1),
+                np.take_along_axis(gids, order, 1))
+
+    def _master_rerank(self, queries: np.ndarray, scores: np.ndarray,
+                       ids: np.ndarray):
+        """int8 final-score repair: winners that still have an fp32 master
+        copy (pushed by update, not since touched by lazy_grad) re-score
+        against it — exact where exactness exists — then rows re-sort."""
+        scores, ids = scores.copy(), ids.copy()
+        for b in range(scores.shape[0]):
+            hit = False
+            for j in range(scores.shape[1]):
+                m = self._masters.get(int(ids[b, j]))
+                if m is not None:
+                    scores[b, j] = float(queries[b] @ m)
+                    hit = True
+            if hit:
+                order = np.argsort(-scores[b], kind="stable")
+                scores[b] = scores[b][order]
+                ids[b] = ids[b][order]
+        return scores, ids
 
     def _ivf_search(self, q: np.ndarray, k: int, idx):
         """Two-stage search against the clustered snapshot; one jitted
@@ -537,8 +868,29 @@ class KBEngine:
         if fn is None:
             if isinstance(self.backend, ShardedBackend):
                 bk = self.backend
-                impl = (lambda tbl, c, pv, pi, q: bk.nn_search_ivf(
-                    tbl, c, pv, pi, q, k, nprobe))
+                if self.storage == "int8":
+                    impl = (lambda tbl, c, pc, ps, po, pi, q:
+                            bk.nn_search_ivf_q(tbl, c, pc, ps, po, pi, q,
+                                               k, nprobe))
+                else:
+                    impl = (lambda tbl, c, pv, pi, q: bk.nn_search_ivf(
+                        tbl, c, pv, pi, q, k, nprobe))
+            elif self._quantized:
+                if isinstance(self.backend, PallasBackend):
+                    from repro.kernels.nn_search_ivf import (
+                        ivf_search_quantized_pallas)
+                    interpret = self.backend.interpret
+                    impl = (lambda tbl, qs, qo, c, pc, ps, po, pi, q:
+                            ivf_search_quantized_pallas(
+                                tbl, qs, qo, c, pc, ps, po, pi, q, k,
+                                nprobe, interpret=interpret))
+                else:
+                    from repro.kernels.nn_search_ivf import (
+                        ivf_search_quantized_jnp)
+                    impl = (lambda tbl, qs, qo, c, pc, ps, po, pi, q:
+                            ivf_search_quantized_jnp(
+                                tbl, qs, qo, c, pc, ps, po, pi, q, k,
+                                nprobe))
             elif isinstance(self.backend, PallasBackend):
                 from repro.kernels.nn_search_ivf import ivf_search_pallas
                 interpret = self.backend.interpret
@@ -549,6 +901,14 @@ class KBEngine:
                 impl = (lambda tbl, c, pv, pi, q: ivf_search_jnp(
                     tbl, c, pv, pi, q, k, nprobe))
             fn = self._ivf_fns[(k, nprobe)] = jax.jit(impl)
+        if self._quantized:
+            return fn(self.state.table, self._qscale, self._qoffset,
+                      idx.centroids, idx.packed_codes, idx.packed_scale,
+                      idx.packed_offset, idx.packed_ids, jnp.asarray(q))
+        if self.storage == "int8":      # sharded: fp32 live table,
+            return fn(self.state.table,  # quantized sub-index snapshot
+                      idx.centroids, idx.packed_codes, idx.packed_scale,
+                      idx.packed_offset, idx.packed_ids, jnp.asarray(q))
         return fn(self.state.table, idx.centroids, idx.packed_vecs,
                   idx.packed_ids, jnp.asarray(q))
 
@@ -614,17 +974,31 @@ class KBEngine:
         on the single-index backends ``shards`` is ignored and the whole
         index rebuilds. Returns the number of sub-indexes actually
         re-clustered (the refresher's ``shard_rebuilds`` accounting)."""
-        from repro.core.ann_index import (ShardedIVFIndex, build_ivf_index,
+        from repro.core.ann_index import (QuantizedIVFIndex,
+                                          QuantizedShardedIVFIndex,
+                                          ShardedIVFIndex, build_ivf_index,
                                           build_sharded_ivf_index)
         built_at = self.shard_write_rows.copy()  # writes during the build
-        table = np.asarray(self.state.table, np.float32)  # count as stale
+        if self._quantized:                      # count as stale
+            # cluster on the dequantized snapshot; the packed buckets then
+            # re-quantize per-slot (QuantizedIVFIndex), so stage 2 scores
+            # int8 rows and never holds an fp32 copy of the bank
+            table = np.asarray(kbm.dequantize_rows(
+                self.state.table, self._qscale, self._qoffset), np.float32)
+        else:
+            table = np.asarray(self.state.table, np.float32)
+        wrap = ((lambda ix: ix) if self.storage != "int8" else
+                (lambda ix: (QuantizedShardedIVFIndex(ix)
+                             if isinstance(ix, ShardedIVFIndex)
+                             else QuantizedIVFIndex(ix))))
         if self.ann_shards == 1:
             index = build_ivf_index(table, nlist=self.ann_nlist,
                                     iters=iters)
-            self.set_ann_index(index, built_at_shard_writes=built_at)
+            self.set_ann_index(wrap(index), built_at_shard_writes=built_at)
             return 1
-        base = (self.ann_index
-                if isinstance(self.ann_index, ShardedIVFIndex) else None)
+        prev = self.ann_index
+        base = (prev.base if isinstance(prev, QuantizedShardedIVFIndex)
+                else prev if isinstance(prev, ShardedIVFIndex) else None)
         index = build_sharded_ivf_index(table, self.ann_shards,
                                         nlist=self.ann_nlist, iters=iters,
                                         base=base, shards=shards)
@@ -638,9 +1012,9 @@ class KBEngine:
             for s in rebuilt:
                 new_built[s] = built_at[s]
             built_at = new_built
-            self.set_ann_index(index, built_at_shard_writes=built_at)
+            self.set_ann_index(wrap(index), built_at_shard_writes=built_at)
             return len(rebuilt)
-        self.set_ann_index(index, built_at_shard_writes=built_at)
+        self.set_ann_index(wrap(index), built_at_shard_writes=built_at)
         return self.ann_shards                  # full (re)build
 
     def warmup(self, max_batch: int = 256) -> None:
@@ -653,7 +1027,11 @@ class KBEngine:
             ids = jnp.zeros((b,), jnp.int32)
             zeros = jnp.zeros((b, self.dim), jnp.float32)
             mask = jnp.zeros((b,), jnp.float32)
-            self._lookup_fn(self.state, ids)
+            if self._quantized:
+                self._lookup_fn(self.state, self._qscale, self._qoffset,
+                                ids)
+            else:
+                self._lookup_fn(self.state, ids)
             (self._lazy_fn if self.lazy_update
              else self._immediate_fn)(self.state, ids, zeros, mask)
             b *= 2
@@ -661,13 +1039,67 @@ class KBEngine:
     # -- introspection -----------------------------------------------------
 
     def table_snapshot(self) -> np.ndarray:
-        """Host copy of the live table. NOT flushed first: rows with
-        pending lazy gradients read as last-applied values (the server's
-        ``table_snapshot`` barriers behind queued writes; flushing is
-        still the caller's choice)."""
-        return np.asarray(self.state.table)
+        """Host copy of the live table, always (num_entries, D) fp32-view:
+        int8 engines dequantize; tiered engines materialize the full id
+        space (resident slots + cold-store rows; never-touched rows read
+        as zeros). NOT flushed first: rows with pending lazy gradients
+        read as last-applied values (the server's ``table_snapshot``
+        barriers behind queued writes; flushing is still the caller's
+        choice)."""
+        if self._quantized:
+            tbl = np.asarray(kbm.dequantize_rows(
+                self.state.table, self._qscale, self._qoffset), np.float32)
+        else:
+            tbl = np.asarray(self.state.table)
+        if not self.tiered:
+            return tbl
+        out = np.zeros((self.num_entries, self.dim), tbl.dtype)
+        res = np.flatnonzero(self._slot_id >= 0)
+        out[self._slot_id[res]] = tbl[res]
+        for g in self.cold_store.ids():
+            if self._slot_of[g] < 0:
+                rec = self.cold_store.get(g)
+                if self._quantized:
+                    out[g] = (rec["table"].astype(np.float32)
+                              * float(rec["scale"]) + float(rec["offset"]))
+                else:
+                    out[g] = rec["table"]
+        return out
 
     def version_snapshot(self) -> np.ndarray:
         """Host copy of per-row version counters (bumped once per touched
-        row per applying call — the coalescing-visibility invariant)."""
-        return np.asarray(self.state.version)
+        row per applying call — the coalescing-visibility invariant).
+        Tiered engines splice cold-store versions into the full id space."""
+        if not self.tiered:
+            return np.asarray(self.state.version)
+        out = np.zeros((self.num_entries,), np.int32)
+        ver = np.asarray(self.state.version)
+        res = np.flatnonzero(self._slot_id >= 0)
+        out[self._slot_id[res]] = ver[res]
+        for g in self.cold_store.ids():
+            if self._slot_of[g] < 0:
+                out[g] = int(self.cold_store.get(g)["version"])
+        return out
+
+    def storage_stats(self) -> dict:
+        """Memory-residency accounting for the serving tier: what one row
+        costs device-side (``bytes_per_row``: D codes + 8 B of scale/offset
+        side-car in int8 mode, D * itemsize in fp32) and what the bank
+        holds resident right now (table slots + fp32 masters). The router
+        sums ``bytes_resident``/row counts across partitions and recomputes
+        a weighted ``bytes_per_row``."""
+        itemsize = np.dtype(self.state.table.dtype).itemsize
+        bpr = self.dim * itemsize + (8 if self._quantized else 0)
+        resident = int(self.state.table.shape[0])
+        master_bytes = sum(m.nbytes for m in self._masters.values())
+        return {
+            "mode": self.storage,
+            "bytes_per_row": int(bpr),
+            "resident_rows": resident,
+            "total_rows": int(self.num_entries),
+            "cold_rows": len(self.cold_store) if self.tiered else 0,
+            "bytes_resident": int(bpr * resident + master_bytes),
+            "master_rows": len(self._masters),
+            "tier_faults": int(self.tier_faults),
+            "tier_spills": int(self.tier_spills),
+        }

@@ -343,6 +343,23 @@ class KBRouter:
         for p, s in enumerate(per):
             for name, ms in s.get("maker_stats", {}).items():
                 maker_stats[f"p{p}/{name}" if len(per) > 1 else name] = ms
+        # storage: extensive quantities sum across the fleet; bytes_per_row
+        # is intensive, so recompute it resident-row-weighted (a mixed
+        # fp32/int8 fleet reports the true blended cost)
+        storage: Dict[str, object] = {}
+        per_storage = [s["storage"] for s in per if "storage" in s]
+        if per_storage:
+            for key in ("bytes_resident", "resident_rows", "total_rows",
+                        "cold_rows", "master_rows", "tier_faults",
+                        "tier_spills"):
+                storage[key] = sum(int(d.get(key, 0)) for d in per_storage)
+            rows = max(int(storage["resident_rows"]), 1)
+            table_bytes = sum(int(d.get("bytes_per_row", 0))
+                              * int(d.get("resident_rows", 0))
+                              for d in per_storage)
+            storage["bytes_per_row"] = table_bytes // rows
+            modes = {str(d.get("mode", "fp32")) for d in per_storage}
+            storage["mode"] = (modes.pop() if len(modes) == 1 else "mixed")
         with self._mlock:
             router = dict(self.router_metrics)
         router["partitions"] = len(per)
@@ -352,6 +369,7 @@ class KBRouter:
             "coalescing_factor": metrics.get("requests", 0) / dispatches,
             "num_entries": int(self.num_entries),
             "dim": int(self.dim),
+            "storage": storage,
             "maker_stats": maker_stats,
             "partitions": per,
             "router": router,

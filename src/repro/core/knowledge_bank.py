@@ -247,6 +247,150 @@ def kb_nn_search(kb: KBState, queries: jnp.ndarray, k: int,
 
 
 # ---------------------------------------------------------------------------
+# quantized storage: int8 codes + per-row affine (scale, offset)
+# ---------------------------------------------------------------------------
+#
+# A row x is stored as int8 codes c with fp32 (scale s, offset o) such that
+# dequant(c) = c * s + o. Quantization maps the row's [min, max] onto the
+# symmetric code range [-127, 127]:
+#
+#     o = (max + min) / 2        s = (max - min) / 254
+#
+# so the max element always lands exactly on code +127 and the min on -127.
+# That symmetry is what makes re-quantizing a dequantized row reproduce the
+# SAME codes (hi' = o + 127 s, lo' = o - 127 s => o' = o, s' = s): untouched
+# rows never drift, and a repeat lookup returns bit-identical values — the
+# invariant the server's hot-id cache relies on.
+#
+# MIPS against quantized rows never materializes the dequantized matrix:
+#
+#     q . (c s + o) = s (q . c) + o sum(q)
+#
+# (``quantized_scores``) — exact w.r.t. the quantized values, so scoring
+# the shortlist quantized costs recall only; the engine re-ranks winners
+# against fp32 masters so final scores stay exact where masters exist.
+
+def quantize_rows(vals: jnp.ndarray):
+    """Per-row affine int8 quantization. vals: (..., D) -> (codes int8,
+    scale (...,) f32, offset (...,) f32). Constant rows (max == min) get
+    scale 1 / codes 0, so dequant returns the constant exactly."""
+    vals = vals.astype(jnp.float32)
+    hi = jnp.max(vals, axis=-1)
+    lo = jnp.min(vals, axis=-1)
+    offset = 0.5 * (hi + lo)
+    scale = (hi - lo) / 254.0
+    scale = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(
+        jnp.round((vals - offset[..., None]) / scale[..., None]),
+        -127, 127).astype(jnp.int8)
+    return codes, scale, offset
+
+
+def dequantize_rows(codes: jnp.ndarray, scale: jnp.ndarray,
+                    offset: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of ``quantize_rows``: (..., D) int8 -> (..., D) f32."""
+    return (codes.astype(jnp.float32) * scale[..., None]
+            + offset[..., None])
+
+
+def quantized_scores(queries: jnp.ndarray, codes: jnp.ndarray,
+                     scale: jnp.ndarray, offset: jnp.ndarray) -> jnp.ndarray:
+    """MIPS scores against quantized rows without dequantizing the bank:
+    ``s * (q . c) + o * sum(q)``. queries: (B, D); codes: (N, D) ->
+    (B, N) f32, exact w.r.t. the quantized values."""
+    qf = queries.astype(jnp.float32)
+    raw = qf @ codes.T.astype(jnp.float32)                   # (B, N)
+    return raw * scale[None, :] + jnp.sum(qf, -1, keepdims=True) * offset
+
+
+def kb_lookup_q(kb: KBState, qscale: jnp.ndarray, qoffset: jnp.ndarray,
+                ids: jnp.ndarray, *, lazy_lr: float = 0.1, zmax: float = 3.0,
+                apply_pending: bool = True):
+    """``kb_lookup`` for an int8-coded table with side-car (scale, offset).
+
+    Returns (vals f32, kb', qscale', qoffset'). Rows WITH pending cached
+    gradients dequantize, apply the clipped average, and re-quantize; rows
+    without keep their exact codes (no re-quantization drift). The returned
+    values are the dequantization of what the bank now stores, so a repeat
+    lookup without intervening writes is bit-identical."""
+    flat = ids.reshape(-1)
+    rows = dequantize_rows(kb.table[flat], qscale[flat], qoffset[flat])
+    if not apply_pending:
+        return rows.reshape(*ids.shape, -1), kb, qscale, qoffset
+    delta = pending_delta(kb.grad_sum[flat], kb.grad_cnt[flat],
+                          kb.grad_sqnorm[flat], lazy_lr=lazy_lr, zmax=zmax)
+    codes_n, s_n, o_n = quantize_rows(rows + delta)
+    upd = kb.grad_cnt[flat] > 0
+    codes_w = jnp.where(upd[:, None], codes_n, kb.table[flat])
+    s_w = jnp.where(upd, s_n, qscale[flat])
+    o_w = jnp.where(upd, o_n, qoffset[flat])
+    kb = kb._replace(
+        table=kb.table.at[flat].set(codes_w),
+        grad_sum=kb.grad_sum.at[flat].set(0.0),
+        grad_cnt=kb.grad_cnt.at[flat].set(0.0),
+        grad_sqnorm=kb.grad_sqnorm.at[flat].set(0.0),
+        version=kb.version.at[flat].set(
+            kb.version[flat] + upd.astype(jnp.int32)),
+    )
+    vals = dequantize_rows(codes_w, s_w, o_w)
+    return (vals.reshape(*ids.shape, -1), kb,
+            qscale.at[flat].set(s_w), qoffset.at[flat].set(o_w))
+
+
+def kb_update_q(kb: KBState, qscale, qoffset, ids, values):
+    """``kb_update`` for the quantized table: quantize the incoming rows and
+    scatter codes + scale + offset. Returns (kb', qscale', qoffset')."""
+    flat = ids.reshape(-1)
+    vals = values.reshape(flat.shape[0], -1)
+    codes, s, o = quantize_rows(vals)
+    kb = kb._replace(
+        table=kb.table.at[flat].set(codes),
+        version=kb.version.at[flat].set(kb.version[flat] + 1),
+        grad_sum=kb.grad_sum.at[flat].set(0.0),
+        grad_cnt=kb.grad_cnt.at[flat].set(0.0),
+        grad_sqnorm=kb.grad_sqnorm.at[flat].set(0.0),
+        step=kb.step + 1,
+    )
+    return kb, qscale.at[flat].set(s), qoffset.at[flat].set(o)
+
+
+def kb_flush_q(kb: KBState, qscale, qoffset, *, lazy_lr: float = 0.1,
+               zmax: float = 3.0):
+    """``kb_flush`` for the quantized table. Rows with an empty gradient
+    cache keep their exact codes. Returns (kb', qscale', qoffset')."""
+    rows = dequantize_rows(kb.table, qscale, qoffset)
+    delta = pending_delta(kb.grad_sum, kb.grad_cnt, kb.grad_sqnorm,
+                          lazy_lr=lazy_lr, zmax=zmax)
+    codes_n, s_n, o_n = quantize_rows(rows + delta)
+    upd = kb.grad_cnt > 0
+    kb = kb._replace(
+        table=jnp.where(upd[:, None], codes_n, kb.table),
+        version=kb.version + upd.astype(jnp.int32),
+        grad_sum=jnp.zeros_like(kb.grad_sum),
+        grad_cnt=jnp.zeros_like(kb.grad_cnt),
+        grad_sqnorm=jnp.zeros_like(kb.grad_sqnorm),
+        step=kb.step + 1,
+    )
+    return (kb, jnp.where(upd, s_n, qscale), jnp.where(upd, o_n, qoffset))
+
+
+def kb_nn_search_q(kb: KBState, qscale, qoffset, queries, k: int,
+                   *, exclude_ids: Optional[jnp.ndarray] = None):
+    """Exact-mode MIPS over the quantized bank (``quantized_scores``
+    decomposition — no dequantized (N, D) matrix is ever materialized).
+    Exact w.r.t. the quantized values; the engine's fp32 master re-rank
+    restores exact final scores for rows with a master copy."""
+    scores = quantized_scores(queries, kb.table, qscale, qoffset)
+    if exclude_ids is not None:
+        B = queries.shape[0]
+        excl = jnp.zeros(scores.shape, bool).at[
+            jnp.arange(B)[:, None], exclude_ids].set(
+            exclude_ids >= 0, mode="drop")
+        scores = jnp.where(excl, -jnp.inf, scores)
+    return jax.lax.top_k(scores, k)
+
+
+# ---------------------------------------------------------------------------
 # feature-store ops
 # ---------------------------------------------------------------------------
 

@@ -284,7 +284,8 @@ def sharded_kb_nn_search(kb: KBState, queries, k: int, dist: DistContext,
 
 def sharded_kb_nn_search_ivf(table, centroids, packed_vecs, packed_ids,
                              queries, k: int, nprobe: int, dist: DistContext,
-                             *, exclude_ids=None):
+                             *, exclude_ids=None, packed_scale=None,
+                             packed_offset=None):
     """Sharded two-stage IVF search with hierarchical top-k merge.
 
     ``table``: the live (N, D) bank; ``centroids``/``packed_vecs``/
@@ -304,13 +305,20 @@ def sharded_kb_nn_search_ivf(table, centroids, packed_vecs, packed_ids,
     searches into one call returns exactly what each search returns solo.
     ``exclude_ids`` (B, E) int32, -1 = no-op: over-fetches k+E candidates
     and masks post-merge, matching the dense pre-mask semantics whenever
-    the shortlist holds k survivors."""
+    the shortlist holds k survivors.
+
+    ``packed_scale``/``packed_offset`` (both or neither): the snapshot is
+    a ``QuantizedShardedIVFIndex`` — ``packed_vecs`` holds int8 codes and
+    the stage-2 shortlist scores via the exact ``s (q.c) + o sum(q)``
+    decomposition. The live re-rank still gathers the fp32 table, so
+    index quantization costs shortlist recall, never final scores."""
     from repro.kernels.nn_search import NEG, overfetch_exclude_topk
     if exclude_ids is not None:
         return overfetch_exclude_topk(
             lambda kk: sharded_kb_nn_search_ivf(
                 table, centroids, packed_vecs, packed_ids, queries, kk,
-                nprobe, dist),
+                nprobe, dist, packed_scale=packed_scale,
+                packed_offset=packed_offset),
             table.shape[0], k, exclude_ids)
 
     axes = kb_axes(dist)
@@ -319,8 +327,9 @@ def sharded_kb_nn_search_ivf(table, centroids, packed_vecs, packed_ids,
     C_local = centroids.shape[0] // n_shards
     nprobe = min(nprobe, C_local)
     B, D = queries.shape
+    quantized = packed_scale is not None
 
-    def body(table, cent, pvec, pid, q):
+    def body(table, cent, pvec, pid, q, *qargs):
         C = cent.shape[0]
         cap = pvec.shape[0] // C
         qf = q.astype(jnp.float32)
@@ -331,13 +340,22 @@ def sharded_kb_nn_search_ivf(table, centroids, packed_vecs, packed_ids,
         cv = pvec.reshape(C, cap, D)[probes].reshape(B, nprobe * cap, D)
         ci = pid.reshape(C, cap)[probes].reshape(B, nprobe * cap)
         s = jnp.einsum("bd,bld->bl", qf, cv.astype(jnp.float32))
+        if qargs:       # int8 codes: exact dequantized-score decomposition
+            pscl, poff = qargs
+            cs = pscl.reshape(C, cap)[probes].reshape(B, nprobe * cap)
+            co = poff.reshape(C, cap)[probes].reshape(B, nprobe * cap)
+            s = s * cs + jnp.sum(qf, -1, keepdims=True) * co
         s = jnp.where(ci >= 0, s, NEG)
-        kk = min(k, nprobe * cap)
+        # quantized shortlists over-retrieve 4x so the exact fp32 live
+        # re-rank can recover near-ties the int8 scores mis-ordered;
+        # fp32 keeps kq == k, leaving that path bit-identical
+        kq = 4 * k if qargs else k
+        kk = min(kq, nprobe * cap)
         ls, sel = jax.lax.top_k(s, kk)
         li = jnp.take_along_axis(ci, sel, axis=1)
-        if kk < k:          # degenerate tiny sub-index: pad to k candidates
-            ls = jnp.pad(ls, ((0, 0), (0, k - kk)), constant_values=NEG)
-            li = jnp.pad(li, ((0, 0), (0, k - kk)), constant_values=-1)
+        if kk < kq:         # degenerate tiny sub-index: pad the shortlist
+            ls = jnp.pad(ls, ((0, 0), (0, kq - kk)), constant_values=NEG)
+            li = jnp.pad(li, ((0, 0), (0, kq - kk)), constant_values=-1)
         # hierarchical merge: gather every shard's shortlist, re-top-k.
         # REVERSED axis order so the concatenation is shard-id-major
         # (OwnerShard numbers shards first-axis-major; gathering the last
@@ -347,25 +365,30 @@ def sharded_kb_nn_search_ivf(table, centroids, packed_vecs, packed_ids,
         for a in reversed(axes):
             ls = jax.lax.all_gather(ls, a, axis=1, tiled=True)
             li = jax.lax.all_gather(li, a, axis=1, tiled=True)
-        _, gsel = jax.lax.top_k(ls, k)
+        _, gsel = jax.lax.top_k(ls, kq)
         ids = jnp.take_along_axis(li, gsel, axis=1)
-        # live re-rank: owner-masked gather + psum (payload O(B*k*D))
+        # live re-rank: owner-masked gather + psum (payload O(B*kq*D))
         valid = ids >= 0
         own = OwnerShard(table.shape[0], axes,
                          jnp.where(valid, ids, 0).reshape(-1))
         rows = jax.lax.psum(
             own.mask(own.gather(table).astype(jnp.float32)), axes)
-        s_live = jnp.einsum("bd,bkd->bk", qf, rows.reshape(B, k, D))
+        s_live = jnp.einsum("bd,bkd->bk", qf, rows.reshape(B, kq, D))
         s_live = jnp.where(valid, s_live, -jnp.inf)
-        order = jnp.argsort(-s_live, axis=-1)
+        order = jnp.argsort(-s_live, axis=-1)[:, :k]
         return (jnp.take_along_axis(s_live, order, axis=1),
                 jnp.take_along_axis(jnp.where(valid, ids, -1), order,
                                     axis=1))
 
     idx_spec = P(axes, None)
+    in_specs = (specs.table, idx_spec, idx_spec, P(axes), P(None, None))
+    args = (table, centroids, packed_vecs, packed_ids, queries)
+    if quantized:
+        in_specs = in_specs + (P(axes), P(axes))
+        args = args + (packed_scale, packed_offset)
     return shard_map(
         body, mesh=dist.mesh,
-        in_specs=(specs.table, idx_spec, idx_spec, P(axes), P(None, None)),
+        in_specs=in_specs,
         out_specs=(P(None, None), P(None, None)),
         check_vma=False,
-    )(table, centroids, packed_vecs, packed_ids, queries)
+    )(*args)

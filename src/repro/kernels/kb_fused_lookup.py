@@ -123,3 +123,123 @@ def kb_fused_lookup_pallas(table, grad_sum, grad_cnt, grad_sqnorm, ids, *,
     )(idp, pad(table), pad(grad_sum), pad(cnt2), pad(sq2))
     new_tbl, gsum, gcnt, gsq, vals = out
     return (vals[:B], new_tbl[:N], gsum[:N], gcnt[:N, 0], gsq[:N, 0])
+
+
+# ---------------------------------------------------------------------------
+# quantized variant: int8 codes + per-row (scale, offset), dequant fused
+# ---------------------------------------------------------------------------
+
+def _fused_kernel_q(ids_ref, tbl_ref, scl_ref, off_ref, gsum_ref, gcnt_ref,
+                    gsq_ref, o_tbl_ref, o_scl_ref, o_off_ref, o_gsum_ref,
+                    o_gcnt_ref, o_gsq_ref, o_vals_ref, acc_ref, *,
+                    n_block: int, lazy_lr: float, zmax: float):
+    """The fused lookup over an int8-coded bank: dequantize the tile in
+    VMEM, apply the clipped cached-gradient average, RE-quantize the rows
+    that changed, and accumulate the dequantization of what was written —
+    ``kb_lookup_q`` semantics (repro.core.knowledge_bank), one HBM pass.
+    Rows without pending gradients keep their exact codes/scale/offset, so
+    a read-only lookup is bit-stable (no re-quantization drift)."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ids = ids_ref[...]                                      # (B,)
+    base = j * n_block
+    rows = base + jax.lax.broadcasted_iota(
+        jnp.int32, (ids.shape[0], n_block), 1)
+    onehot = (ids[:, None] == rows).astype(jnp.float32)     # (B, NB)
+    touched = (jnp.sum(onehot, axis=0) > 0)[:, None]        # (NB, 1)
+
+    codes = tbl_ref[...].astype(jnp.float32)                # (NB, D)
+    scl = scl_ref[...]                                      # (NB, 1)
+    off = off_ref[...]
+    tbl = codes * scl + off                                 # fused dequant
+    gsum = gsum_ref[...]
+    gcnt = gcnt_ref[...]                                    # (NB, 1)
+    gsq = gsq_ref[...]
+
+    # pending_delta, verbatim semantics of the dense reference
+    cnt = jnp.maximum(gcnt, 1.0)
+    avg = gsum / cnt
+    avg_norm = jnp.sqrt(jnp.sum(avg * avg, -1, keepdims=True))
+    rms = jnp.sqrt(gsq / cnt)
+    cap = zmax * jnp.maximum(rms, 1e-12)
+    scale = jnp.minimum(1.0, cap / jnp.maximum(avg_norm, 1e-12))
+    apply = touched & (gcnt > 0)
+    new_tbl = tbl - lazy_lr * avg * scale
+
+    # re-quantize ONLY the applied rows (quantize_rows semantics)
+    hi = jnp.max(new_tbl, -1, keepdims=True)
+    lo = jnp.min(new_tbl, -1, keepdims=True)
+    off_n = 0.5 * (hi + lo)
+    scl_n = (hi - lo) / 254.0
+    scl_n = jnp.where(scl_n > 0, scl_n, 1.0)
+    codes_n = jnp.clip(jnp.round((new_tbl - off_n) / scl_n), -127, 127)
+
+    codes_w = jnp.where(apply, codes_n, codes)
+    scl_w = jnp.where(apply, scl_n, scl)
+    off_w = jnp.where(apply, off_n, off)
+    o_tbl_ref[...] = codes_w.astype(o_tbl_ref.dtype)
+    o_scl_ref[...] = scl_w
+    o_off_ref[...] = off_w
+    o_gsum_ref[...] = jnp.where(touched, 0.0, gsum)
+    o_gcnt_ref[...] = jnp.where(touched, 0.0, gcnt)
+    o_gsq_ref[...] = jnp.where(touched, 0.0, gsq)
+    acc_ref[...] += jax.lax.dot_general(
+        onehot, codes_w * scl_w + off_w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(0) - 1)
+    def _():
+        o_vals_ref[...] = acc_ref[...]
+
+
+def kb_fused_lookup_q_pallas(table, qscale, qoffset, grad_sum, grad_cnt,
+                             grad_sqnorm, ids, *, lazy_lr: float = 0.1,
+                             zmax: float = 3.0, n_block: int = 512,
+                             interpret: bool = True):
+    """Quantized fused lookup. table: (N, D) int8 codes; qscale/qoffset:
+    (N,) f32 per-row affine; caches as in ``kb_fused_lookup_pallas``.
+
+    Returns (vals (B, D) f32, new_table int8, new_qscale, new_qoffset,
+    new_grad_sum, new_grad_cnt, new_grad_sqnorm) — ``kb_lookup_q``
+    semantics except the version counter (bumped by the caller)."""
+    N, D = table.shape
+    B = ids.shape[0]
+    nb = min(n_block, N)
+    Bp = -(-B // 8) * 8
+    Np = -(-N // nb) * nb
+    idp = jnp.pad(ids.astype(jnp.int32), (0, Bp - B), constant_values=-1)
+    pad = lambda a: jnp.pad(a, ((0, Np - N),) + ((0, 0),) * (a.ndim - 1))
+    # padded rows must keep scale 1 (scale 0 would poison the requant guard)
+    sclp = jnp.pad(qscale[:, None], ((0, Np - N), (0, 0)),
+                   constant_values=1.0)
+    kern = functools.partial(_fused_kernel_q, n_block=nb, lazy_lr=lazy_lr,
+                             zmax=zmax)
+    row2 = pl.BlockSpec((nb, D), lambda j: (j, 0))
+    col2 = pl.BlockSpec((nb, 1), lambda j: (j, 0))
+    out = pl.pallas_call(
+        kern,
+        grid=(Np // nb,),
+        in_specs=[pl.BlockSpec((Bp,), lambda j: (0,)),
+                  row2, col2, col2, row2, col2, col2],
+        out_specs=[row2, col2, col2, row2, col2, col2,
+                   pl.BlockSpec((Bp, D), lambda j: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((Np, D), table.dtype),
+                   jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((Np, D), jnp.float32),
+                   jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, D), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((Bp, D), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(idp, pad(table), sclp, pad(qoffset[:, None]), pad(grad_sum),
+      pad(grad_cnt[:, None]), pad(grad_sqnorm[:, None]))
+    new_tbl, scl, off, gsum, gcnt, gsq, vals = out
+    return (vals[:B], new_tbl[:N], scl[:N, 0], off[:N, 0], gsum[:N],
+            gcnt[:N, 0], gsq[:N, 0])

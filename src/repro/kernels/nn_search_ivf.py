@@ -74,6 +74,22 @@ def _rerank_live(table, queries, ids):
             jnp.take_along_axis(jnp.where(valid, ids, -1), order, axis=1))
 
 
+def _rerank_live_q(codes, qscale, qoffset, queries, ids):
+    """``_rerank_live`` when the LIVE bank itself is int8-coded: gather
+    winner codes + per-row affine, dequantize the (B, k, D) shortlist, and
+    re-score — exact w.r.t. the quantized live values."""
+    n = codes.shape[0]
+    valid = (ids >= 0) & (ids < n)
+    safe = jnp.where(valid, ids, 0)
+    rows = (codes[safe].astype(jnp.float32) * qscale[safe][..., None]
+            + qoffset[safe][..., None])                          # (B, k, D)
+    s = jnp.einsum("bd,bkd->bk", queries.astype(jnp.float32), rows)
+    s = jnp.where(valid, s, -jnp.inf)
+    order = jnp.argsort(-s, axis=-1)
+    return (jnp.take_along_axis(s, order, axis=1),
+            jnp.take_along_axis(jnp.where(valid, ids, -1), order, axis=1))
+
+
 # ---------------------------------------------------------------------------
 # stage 2, Pallas: scalar-prefetched bucket tiles + running top-k
 # ---------------------------------------------------------------------------
@@ -167,12 +183,112 @@ def ivf_search_pallas(table, centroids, packed_vecs, packed_ids, queries,
 
 
 # ---------------------------------------------------------------------------
+# stage 2, Pallas, quantized: int8 bucket tiles with fused dequant scoring
+# ---------------------------------------------------------------------------
+
+def _ivf_kernel_q(sel_ref, q_ref, vec_ref, scl_ref, off_ref, id_ref,
+                  os_ref, oi_ref, bs_ref, bi_ref, *, k: int):
+    """The stage-2 merge over int8 bucket tiles. Never dequantizes the
+    (LB, D) tile: scores via ``s * (q . c) + o * sum(q)`` — the exact
+    decomposition of q against the dequantized rows, fused into the MXU
+    dot + one VPU fixup."""
+    del sel_ref
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        bs_ref[...] = jnp.full_like(bs_ref, NEG)
+        bi_ref[...] = jnp.full_like(bi_ref, _IMAX)
+
+    q = q_ref[...].astype(jnp.float32)                       # (1, D)
+    c = vec_ref[...].astype(jnp.float32)                     # (LB, D) codes
+    scl = scl_ref[...].reshape(1, -1)                        # (1, LB)
+    off = off_ref[...].reshape(1, -1)
+    ids = id_ref[...].reshape(1, -1)                         # (1, LB)
+    raw = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    scores = raw * scl + jnp.sum(q) * off
+    scores = jnp.where(ids >= 0, scores, NEG)
+    ids = jnp.where(ids >= 0, ids, _IMAX)
+    bs, bi = _merge_topk(scores, ids, bs_ref[...], bi_ref[...], k)
+    bs_ref[...] = bs
+    bi_ref[...] = bi
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        os_ref[...] = bs_ref[...]
+        oi_ref[...] = bi_ref[...]
+
+
+def ivf_stage2_quantized_pallas(packed_codes, packed_scale, packed_offset,
+                                packed_ids, queries, probes, k: int, *,
+                                bucket_cap: int, block: int = 256,
+                                interpret: bool = True):
+    """``ivf_stage2_pallas`` over a quantized index: packed_codes
+    (C*cap, D) int8, packed_scale/packed_offset (C*cap,) f32. Snapshot
+    scores are exact w.r.t. the quantized rows."""
+    B, D = queries.shape
+    nprobe = probes.shape[1]
+    if bucket_cap < 128:
+        lb = bucket_cap
+    else:
+        m = bucket_cap // 128
+        lb = 128 * max((d for d in range(1, m + 1)
+                        if m % d == 0 and 128 * d <= block), default=1)
+    assert bucket_cap % lb == 0, (bucket_cap, lb)
+    cpb = bucket_cap // lb
+    n_chunks = nprobe * cpb
+    sel = (probes[:, :, None] * cpb +
+           jnp.arange(cpb, dtype=jnp.int32)[None, None, :]
+           ).reshape(B, n_chunks).astype(jnp.int32)
+    flat = pl.BlockSpec((lb,), lambda i, j, sel: (sel[i, j],))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i, j, sel: (i, 0)),
+            pl.BlockSpec((lb, D), lambda i, j, sel: (sel[i, j], 0)),
+            flat, flat, flat,
+        ],
+        out_specs=[pl.BlockSpec((1, k), lambda i, j, sel: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i, j, sel: (i, 0))],
+        scratch_shapes=[pltpu.VMEM((1, k), jnp.float32),
+                        pltpu.VMEM((1, k), jnp.int32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_ivf_kernel_q, k=k),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, k), jnp.float32),
+                   jax.ShapeDtypeStruct((B, k), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(sel, queries, packed_codes, packed_scale, packed_offset, packed_ids)
+
+
+def ivf_search_quantized_pallas(table_codes, qscale, qoffset, centroids,
+                                packed_codes, packed_scale, packed_offset,
+                                packed_ids, queries, k: int, nprobe: int, *,
+                                block: int = 256, interpret: bool = True):
+    """Two-stage IVF search where BOTH the snapshot and the live bank are
+    int8: quantized stage-2 shortlist, live re-rank against the dequantized
+    winner rows (``_rerank_live_q``)."""
+    bucket_cap = packed_codes.shape[0] // centroids.shape[0]
+    probes = ivf_probes(queries, centroids, nprobe)
+    _, ids = ivf_stage2_quantized_pallas(
+        packed_codes, packed_scale, packed_offset, packed_ids, queries,
+        probes, k, bucket_cap=bucket_cap, block=block, interpret=interpret)
+    return _rerank_live_q(table_codes, qscale, qoffset, queries, ids)
+
+
+# ---------------------------------------------------------------------------
 # sharded search, host reference (oracle for the shard_map op + benchmark)
 # ---------------------------------------------------------------------------
 
 def ivf_search_sharded_jnp(table, centroids, packed_vecs, packed_ids,
                            queries, k: int, nprobe: int, *, n_shards: int,
-                           exclude_ids=None):
+                           exclude_ids=None, packed_scale=None,
+                           packed_offset=None):
     """Meshless reference of the sharded hierarchical IVF search.
 
     Takes a ``repro.core.ann_index.ShardedIVFIndex``'s flat shard-major
@@ -185,6 +301,12 @@ def ivf_search_sharded_jnp(table, centroids, packed_vecs, packed_ids,
     shard count matches (tests/test_sharded_ivf.py), and to the dense
     ``ivf_search_jnp`` when ``n_shards == 1``.
 
+    ``packed_scale``/``packed_offset`` (both or neither): ``packed_vecs``
+    holds int8 codes from a ``QuantizedShardedIVFIndex`` and the stage-2
+    shortlist scores via the ``s (q.c) + o sum(q)`` decomposition; the
+    live re-rank still runs against the fp32 ``table``, so quantization
+    costs shortlist recall only.
+
     ``exclude_ids``: (B, E) int32, -1 entries inert — the shared
     ``overfetch_exclude_topk`` semantics, same as every other backend."""
     if exclude_ids is not None:
@@ -192,7 +314,8 @@ def ivf_search_sharded_jnp(table, centroids, packed_vecs, packed_ids,
         return overfetch_exclude_topk(
             lambda kk: ivf_search_sharded_jnp(
                 table, centroids, packed_vecs, packed_ids, queries, kk,
-                nprobe, n_shards=n_shards),
+                nprobe, n_shards=n_shards, packed_scale=packed_scale,
+                packed_offset=packed_offset),
             table.shape[0], k, exclude_ids)
 
     S = n_shards
@@ -210,6 +333,10 @@ def ivf_search_sharded_jnp(table, centroids, packed_vecs, packed_ids,
     ci = packed_ids.reshape(S, C, cap)[sidx, probes].reshape(B, S, -1)
     s = jnp.einsum("bd,bsld->bsl", qf,
                    cv.reshape(B, S, nprobe * cap, D).astype(jnp.float32))
+    if packed_scale is not None:
+        cs = packed_scale.reshape(S, C, cap)[sidx, probes].reshape(B, S, -1)
+        co = packed_offset.reshape(S, C, cap)[sidx, probes].reshape(B, S, -1)
+        s = s * cs + jnp.sum(qf, -1)[:, None, None] * co
     s = jnp.where(ci >= 0, s, NEG)
     kk = min(k, nprobe * cap)
     ls, sel = jax.lax.top_k(s, kk)                          # (B, S, kk)
@@ -248,3 +375,33 @@ def ivf_search_jnp(table, centroids, packed_vecs, packed_ids, queries,
     _, sel = jax.lax.top_k(s, k)
     ids = jnp.take_along_axis(cand_i, sel, axis=1)
     return _rerank_live(table, queries, ids)
+
+
+def ivf_search_quantized_jnp(table_codes, qscale, qoffset, centroids,
+                             packed_codes, packed_scale, packed_offset,
+                             packed_ids, queries, k: int, nprobe: int):
+    """Dense-gather reference of the fully-quantized two-stage search:
+    int8 live bank (codes + per-row affine) and int8 snapshot. Stage-2
+    scores via the decomposition, live re-rank via ``_rerank_live_q`` —
+    the allclose oracle for ``ivf_search_quantized_pallas`` and the
+    DenseBackend int8 IVF path."""
+    C = centroids.shape[0]
+    cap = packed_codes.shape[0] // C
+    B, D = queries.shape
+    qf = queries.astype(jnp.float32)
+    probes = ivf_probes(queries, centroids, nprobe)
+    cand_v = packed_codes.reshape(C, cap, D)[probes].reshape(B, -1, D)
+    cand_i = packed_ids.reshape(C, cap)[probes].reshape(B, -1)
+    cand_s = packed_scale.reshape(C, cap)[probes].reshape(B, -1)
+    cand_o = packed_offset.reshape(C, cap)[probes].reshape(B, -1)
+    s = jnp.einsum("bd,bld->bl", qf, cand_v.astype(jnp.float32))
+    s = s * cand_s + jnp.sum(qf, -1, keepdims=True) * cand_o
+    s = jnp.where(cand_i >= 0, s, NEG)
+    L = cand_i.shape[1]
+    if L < k:                                   # degenerate tiny index
+        pad = k - L
+        s = jnp.pad(s, ((0, 0), (0, pad)), constant_values=NEG)
+        cand_i = jnp.pad(cand_i, ((0, 0), (0, pad)), constant_values=-1)
+    _, sel = jax.lax.top_k(s, k)
+    ids = jnp.take_along_axis(cand_i, sel, axis=1)
+    return _rerank_live_q(table_codes, qscale, qoffset, queries, ids)

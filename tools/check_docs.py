@@ -35,7 +35,8 @@ BENCH_JSON = "BENCH_nn_search.json"
 # benchmarks/nn_search_bench.py silently orphans the README numbers.
 BENCH_TOP_KEYS = ("rows", "config", "sizes", "sharded")
 BENCH_SIZE_KEYS = ("nlist", "nprobe", "us_exact_ref", "us_ivf_ref",
-                   "us_build", "recall_at_10", "ivf_speedup_vs_exact")
+                   "us_build", "recall_at_10", "ivf_speedup_vs_exact",
+                   "us_ivf_int8", "recall_at_10_int8")
 BENCH_SHARDED_KEYS = ("n_shards", "us_sharded_exact", "us_sharded_ivf",
                       "recall_at_10", "ivf_speedup_vs_sharded_exact")
 
@@ -43,11 +44,17 @@ BENCH_SHARDED_KEYS = ("n_shards", "us_sharded_exact", "us_sharded_ivf",
 # written by a local `benchmarks.run --only kb_serving` (CI's quick bench
 # doesn't run the suite), so this guard fires only when it is present
 SERVING_JSON = "BENCH_kb_serving.json"
-SERVING_TOP_KEYS = ("rows", "config", "scaleout", "reorder")
+SERVING_TOP_KEYS = ("rows", "config", "storage", "cold_tier", "scaleout",
+                    "reorder")
 SERVING_SCALE_KEYS = ("partitions", "lookups_per_s", "nn_p50_us",
                       "speedup_vs_1p")
 SERVING_REORDER_KEYS = ("fifo_s", "reorder_s", "speedup", "reorders",
                         "bit_identical")
+SERVING_STORAGE_KEYS = ("fp32", "int8", "bytes_per_row_ratio",
+                        "lookup_slowdown_int8", "ivf_recall_at_10")
+SERVING_COLD_KEYS = ("total_rows", "resident_rows", "oversubscription",
+                     "bytes_resident", "cold_rows", "tier_faults",
+                     "tier_spills", "lookups_correct")
 
 SNIPPET_FILES = ["README.md"]
 LINK_FILES = ["README.md", "ROADMAP.md"]
@@ -165,6 +172,12 @@ def check_serving_keys() -> int:
     for i, row in enumerate(data.get("scaleout", [])):
         need(row, SERVING_SCALE_KEYS, f"scaleout[{i}]")
     need(data.get("reorder", {}), SERVING_REORDER_KEYS, "reorder")
+    need(data.get("storage", {}), SERVING_STORAGE_KEYS, "storage")
+    for mode in ("fp32", "int8"):
+        need(data.get("storage", {}).get(mode, {}),
+             ("bytes_per_row", "bytes_resident", "lookups_per_s"),
+             f"storage.{mode}")
+    need(data.get("cold_tier", {}), SERVING_COLD_KEYS, "cold_tier")
     if not failures:
         print(f"ok   {SERVING_JSON} keys")
     return failures
