@@ -34,10 +34,12 @@ from repro.core.async_runtime import (AsyncRunResult, KBServerClosedError,
                                       KnowledgeBankServer, MakerJob,
                                       MakerRuntime, SharedFeatureStore,
                                       format_maker_stats, run_async_training)
-from repro.core.kb_protocol import (PROTOCOL_VERSION, InProcessTransport,
-                                    KBClient, ProtocolError, RemoteKBError,
-                                    Transport)
-from repro.core.kb_transport import (KBTransportServer, RemoteKnowledgeBank,
+from repro.core.kb_protocol import (PROTOCOL_VERSION, ExportRowsRequest,
+                                    ImportRowsRequest, InProcessTransport,
+                                    KBClient, PromoteRequest, ProtocolError,
+                                    RemoteKBError, Transport)
+from repro.core.kb_transport import (FaultPlan, FaultyTransport,
+                                     KBTransportServer, RemoteKnowledgeBank,
                                      SocketTransport, TransportError,
                                      parse_hostport)
 from repro.core.kb_router import (KBPartitionDownError, KBRouter,
@@ -65,9 +67,11 @@ __all__ = [
     "AsyncRunResult", "KBServerClosedError", "KnowledgeBankServer",
     "MakerJob", "MakerRuntime", "SharedFeatureStore", "format_maker_stats",
     "run_async_training",
-    "PROTOCOL_VERSION", "InProcessTransport", "KBClient", "ProtocolError",
+    "PROTOCOL_VERSION", "ExportRowsRequest", "ImportRowsRequest",
+    "InProcessTransport", "KBClient", "PromoteRequest", "ProtocolError",
     "RemoteKBError", "Transport",
-    "KBTransportServer", "RemoteKnowledgeBank", "SocketTransport",
-    "TransportError", "parse_hostport",
+    "FaultPlan", "FaultyTransport", "KBTransportServer",
+    "RemoteKnowledgeBank", "SocketTransport", "TransportError",
+    "parse_hostport",
     "KBPartitionDownError", "KBRouter", "PartitionMap", "connect_kb",
 ]

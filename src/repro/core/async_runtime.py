@@ -293,6 +293,28 @@ class KnowledgeBankServer:
         with self._elock:
             return self.engine.table_snapshot()
 
+    def export_rows(self, ids) -> dict:
+        """Full per-row engine state for ``ids`` (every leaf, raw dtypes —
+        see ``KBEngine.export_rows``). Barriers behind queued writes first,
+        like ``table_snapshot``, so the exported rows reflect everything
+        acknowledged before this call — the replica warm-fill / resharding
+        read primitive."""
+        if not (self._closed and self._dispatcher is None):
+            self._submit(_Request("barrier"))
+        with self._elock:
+            return self.engine.export_rows(ids)
+
+    def import_rows(self, ids, leaves: dict) -> None:
+        """Scatter previously-exported rows into the engine (standby fill,
+        reshard landing) — bit-identical round trip. Runs behind a barrier
+        and under the engine lock like any write; touched ids leave the
+        hot-id cache (imported values supersede cached ones)."""
+        if not (self._closed and self._dispatcher is None):
+            self._submit(_Request("barrier"))
+        with self._elock:
+            self.engine.import_rows(ids, leaves)
+            self._invalidate_cache(np.asarray(ids).reshape(-1))
+
     def stats(self) -> dict:
         """Everything a remote operator can ask in one call — the payload
         of the wire protocol's ``StatsRequest`` (flat numbers / strings /

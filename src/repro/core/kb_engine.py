@@ -1066,6 +1066,80 @@ class KBEngine:
                     out[g] = rec["table"]
         return out
 
+    # every per-row leaf a row owns, in one canonical order — the contract
+    # behind replica warm-fill and resharding row streams (kb_router):
+    # export -> wire -> import must round-trip bit-identically, including
+    # gradients still waiting in the lazy cache and the clip EMA
+    ROW_LEAVES = ("table", "version", "grad_sum", "grad_cnt",
+                  "grad_sqnorm", "norm_ema")
+
+    def export_rows(self, ids) -> dict:
+        """Full per-row state for ``ids`` as ``{leaf: np.ndarray}`` —
+        ``ROW_LEAVES`` plus ``scale``/``offset`` side-cars on int8
+        engines. Values are raw (int8 codes stay int8 codes), so
+        ``import_rows`` on a same-config engine reproduces the rows
+        BIT-identically — pending lazy gradients and the norm EMA travel
+        too, unlike ``table_snapshot`` which only sees applied values.
+        Tiered and sharded engines refuse: their row state is not a flat
+        per-id device slice (cold records / owner-masked shards)."""
+        if self.tiered:
+            raise ValueError("export_rows: tiered engines hold row state "
+                             "across device slots + the cold store; "
+                             "row-range export is not supported")
+        if isinstance(self.backend, ShardedBackend):
+            raise ValueError("export_rows: sharded backends are not "
+                             "supported (owner-masked row state)")
+        ids = np.asarray(ids).reshape(-1).astype(np.int64)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.num_entries):
+            raise ValueError(f"export_rows: ids out of range "
+                             f"(0..{self.num_entries - 1})")
+        idx = jnp.asarray(ids)
+        st = self.state
+        out = {leaf: np.asarray(getattr(st, leaf)[idx])
+               for leaf in self.ROW_LEAVES}
+        if self._quantized:
+            out["scale"] = np.asarray(self._qscale[idx])
+            out["offset"] = np.asarray(self._qoffset[idx])
+        return out
+
+    def import_rows(self, ids, leaves: dict) -> None:
+        """Scatter ``export_rows`` output into this engine's rows —
+        the receiving half of replica warm-fill and reshard streaming.
+        Geometry/storage must match the exporter (leaf set is checked).
+        Imported rows count as writes (ANN staleness, spill clocks) and
+        drop any fp32 master copies for the touched ids — the master was
+        exact for the OLD row value."""
+        if self.tiered:
+            raise ValueError("import_rows: tiered engines not supported")
+        if isinstance(self.backend, ShardedBackend):
+            raise ValueError("import_rows: sharded backends not supported")
+        ids = np.asarray(ids).reshape(-1).astype(np.int64)
+        want = set(self.ROW_LEAVES) | (
+            {"scale", "offset"} if self._quantized else set())
+        if set(leaves) != want:
+            raise ValueError(f"import_rows: leaf set {sorted(leaves)} != "
+                             f"expected {sorted(want)} (storage mismatch?)")
+        if ids.size == 0:
+            return
+        if ids.min() < 0 or ids.max() >= self.num_entries:
+            raise ValueError(f"import_rows: ids out of range "
+                             f"(0..{self.num_entries - 1})")
+        idx = jnp.asarray(ids)
+        st = self.state
+        self.state = st._replace(**{
+            leaf: getattr(st, leaf).at[idx].set(
+                jnp.asarray(leaves[leaf], getattr(st, leaf).dtype))
+            for leaf in self.ROW_LEAVES})
+        if self._quantized:
+            self._qscale = self._qscale.at[idx].set(
+                jnp.asarray(leaves["scale"], jnp.float32))
+            self._qoffset = self._qoffset.at[idx].set(
+                jnp.asarray(leaves["offset"], jnp.float32))
+            if self._masters:
+                for g in np.unique(ids):
+                    self._masters.pop(int(g), None)
+        self._count_writes(ids.astype(np.int32))
+
     def version_snapshot(self) -> np.ndarray:
         """Host copy of per-row version counters (bumped once per touched
         row per applying call — the coalescing-visibility invariant).

@@ -33,7 +33,11 @@ to the handshake (``Hello.expect_partition`` / ``Welcome.partition``) for
 the scale-out router (``repro.core.kb_router``): a partitioned fleet
 member advertises which ring slot it serves, and a client that expects a
 specific slot is refused (kind ``"partition_mismatch"``) instead of
-silently reading another partition's rows.
+silently reading another partition's rows. v3 added the fleet-operations
+control records: ``ExportRowsRequest`` / ``ImportRowsRequest`` stream full
+per-row engine state (every leaf, bit-identical — the replica warm-fill and
+resharding primitive) and ``PromoteRequest`` re-labels a standby's serving
+ring slot when the router promotes it.
 """
 from __future__ import annotations
 
@@ -42,7 +46,7 @@ from typing import Dict, NamedTuple, Optional, Protocol, Tuple
 
 import numpy as np
 
-PROTOCOL_VERSION = 2
+PROTOCOL_VERSION = 3
 
 # refuse absurd frames before allocating: a corrupt length prefix must fail
 # fast, not OOM the server. 1 GiB comfortably fits any real snapshot.
@@ -118,8 +122,35 @@ class SnapshotRequest(NamedTuple):
     pass
 
 
+class ExportRowsRequest(NamedTuple):
+    """Read the FULL per-row state (every engine leaf, raw dtypes) for
+    ``ids`` — the replica warm-fill / resharding read primitive. The reply
+    is a ``RowsResponse`` whose leaves round-trip bit-identically through
+    ``ImportRowsRequest`` on a same-config engine."""
+    ids: np.ndarray                 # flat global ids
+
+
+class ImportRowsRequest(NamedTuple):
+    """Scatter previously-exported rows into the serving engine (standby
+    fill, reshard landing). ``leaves`` is the ``RowsResponse.leaves`` dict
+    verbatim."""
+    ids: np.ndarray
+    leaves: dict                    # {leaf name: np.ndarray}
+
+
+class PromoteRequest(NamedTuple):
+    """Control record: the router promoted this (standby) server — adopt
+    ``partition`` as the serving ring slot so future handshakes that pin
+    the slot succeed against it."""
+    partition: str                  # "p/N" ring slot label
+
+
 class OkResponse(NamedTuple):
     pass
+
+
+class RowsResponse(NamedTuple):
+    leaves: dict                    # {leaf name: np.ndarray}, raw dtypes
 
 
 class ValuesResponse(NamedTuple):
@@ -146,9 +177,10 @@ _WIRE_SPECS: Dict[int, type] = {
     1: Hello, 2: Welcome,
     10: LookupRequest, 11: UpdateRequest, 12: LazyGradRequest,
     13: FlushRequest, 14: NNSearchRequest, 15: StatsRequest,
-    16: SnapshotRequest,
+    16: SnapshotRequest, 17: ExportRowsRequest, 18: ImportRowsRequest,
+    19: PromoteRequest,
     20: OkResponse, 21: ValuesResponse, 22: NNSearchResponse,
-    23: StatsResponse, 24: ErrorResponse,
+    23: StatsResponse, 24: ErrorResponse, 25: RowsResponse,
 }
 _WIRE_CODES = {cls: code for code, cls in _WIRE_SPECS.items()}
 
@@ -384,6 +416,14 @@ class InProcessTransport:
             return StatsResponse(srv.stats())
         if isinstance(msg, SnapshotRequest):
             return ValuesResponse(srv.table_snapshot())
+        if isinstance(msg, ExportRowsRequest):
+            return RowsResponse(srv.export_rows(msg.ids))
+        if isinstance(msg, ImportRowsRequest):
+            srv.import_rows(msg.ids, msg.leaves)
+            return OkResponse()
+        if isinstance(msg, PromoteRequest):
+            self.partition = msg.partition
+            return OkResponse()
         if isinstance(msg, Hello):
             if msg.expect_partition and msg.expect_partition != self.partition:
                 raise ProtocolError(

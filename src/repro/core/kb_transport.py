@@ -40,10 +40,12 @@ from typing import NamedTuple, Optional, Tuple
 import numpy as np
 
 from repro.core.kb_protocol import (PROTOCOL_VERSION, ErrorResponse,
-                                    FlushRequest, Hello, LazyGradRequest,
+                                    ExportRowsRequest, FlushRequest, Hello,
+                                    ImportRowsRequest, LazyGradRequest,
                                     LookupRequest, NNSearchRequest,
                                     NNSearchResponse, OkResponse,
-                                    ProtocolError, RemoteKBError,
+                                    PromoteRequest, ProtocolError,
+                                    RemoteKBError, RowsResponse,
                                     SnapshotRequest, StatsRequest,
                                     StatsResponse, Transport, UpdateRequest,
                                     ValuesResponse, Welcome, decode_message,
@@ -221,6 +223,20 @@ class _Conn:
                 return lambda: resp
             if isinstance(msg, SnapshotRequest):
                 return lambda: ValuesResponse(srv.table_snapshot())
+            if isinstance(msg, ExportRowsRequest):
+                ids = np.asarray(msg.ids).reshape(-1)
+                return lambda: RowsResponse(srv.export_rows(ids))
+            if isinstance(msg, ImportRowsRequest):
+                ids = np.asarray(msg.ids).reshape(-1)
+                leaves = msg.leaves
+                return lambda: (srv.import_rows(ids, leaves),
+                                OkResponse())[1]
+            if isinstance(msg, PromoteRequest):
+                # control-plane: adopt the ring slot the router assigned —
+                # applied NOW (reader thread), so the very next handshake
+                # that pins this slot already succeeds
+                self.tsrv.partition = msg.partition
+                return lambda: OkResponse()
             raise ProtocolError(f"{type(msg).__name__} is not a request "
                                 "record")
         except Exception as e:          # enqueue refused (server closing,
@@ -566,6 +582,88 @@ class SocketTransport:
                 live.receiver.join(timeout=5.0)
 
 
+class FaultPlan:
+    """Deterministic fault schedule for ``FaultyTransport`` — the
+    injectable seam that lets tests and ``tools/smoke_multiproc.py`` drive
+    the router's fail-over paths without sleeps or real process kills.
+
+    Requests through the wrapped transport(s) are numbered 0, 1, 2, ... by
+    THIS plan (share one plan across transports for a global schedule):
+
+    - ``kill_after_requests=k``: request ``k`` and every later one raise
+      ``TransportError`` without touching the wire — the transport is
+      permanently dead, the SIGKILLed-server model.
+    - ``drop_requests={i, ...}``: request ``i`` is lost on the way IN — it
+      never executes, then the failure surfaces as ``TransportError``.
+    - ``drop_responses={i, ...}``: request ``i`` EXECUTES on the inner
+      transport, then its response is dropped — the lost-ack case, which
+      is exactly the at-least-once hazard the retry contract covers.
+    - ``delay_s`` + ``delay_requests``: sleep before forwarding those
+      request indexes (widening race windows deterministically).
+
+    ``faults`` counts injected failures; ``requests`` counts everything
+    scheduled."""
+
+    def __init__(self, *, kill_after_requests: Optional[int] = None,
+                 drop_requests=(), drop_responses=(),
+                 delay_s: float = 0.0, delay_requests=()):
+        self.kill_after_requests = kill_after_requests
+        self.drop_requests = frozenset(drop_requests)
+        self.drop_responses = frozenset(drop_responses)
+        self.delay_s = delay_s
+        self.delay_requests = frozenset(delay_requests)
+        self.requests = 0
+        self.faults = 0
+        self._lock = threading.Lock()
+
+    def next_index(self) -> int:
+        with self._lock:
+            i = self.requests
+            self.requests += 1
+            return i
+
+    def count_fault(self) -> None:
+        with self._lock:
+            self.faults += 1
+
+
+class FaultyTransport:
+    """Wrap any ``Transport`` with a ``FaultPlan``. Works identically over
+    ``InProcessTransport`` and ``SocketTransport`` — the router can't tell
+    an injected ``TransportError`` from a real dead connection, which is
+    the point: CI exercises promotion deterministically."""
+
+    def __init__(self, inner, plan: FaultPlan):
+        self.inner = inner
+        self.plan = plan
+
+    def request(self, msg) -> NamedTuple:
+        plan = self.plan
+        i = plan.next_index()
+        killed = (plan.kill_after_requests is not None
+                  and i >= plan.kill_after_requests)
+        if killed or i in plan.drop_requests:
+            plan.count_fault()
+            raise TransportError(
+                f"injected fault: request {i} "
+                f"{'killed' if killed else 'dropped'} by FaultPlan")
+        if plan.delay_s and i in plan.delay_requests:
+            time.sleep(plan.delay_s)
+        resp = self.inner.request(msg)
+        if i in plan.drop_responses:
+            plan.count_fault()
+            raise TransportError(
+                f"injected fault: response {i} dropped by FaultPlan "
+                "(request already executed)")
+        return resp
+
+    def close(self) -> None:
+        self.inner.close()
+
+    def __getattr__(self, name):        # num_entries / dim / partition ...
+        return getattr(self.inner, name)
+
+
 class RemoteKnowledgeBank:
     """Client stub with the concrete server's duck-type
     (``repro.core.kb_protocol.KBClient``): numpy in / numpy out, blocking
@@ -621,6 +719,16 @@ class RemoteKnowledgeBank:
 
     def table_snapshot(self) -> np.ndarray:
         return self._t.request(SnapshotRequest()).values
+
+    def export_rows(self, ids) -> dict:
+        """Full per-row engine state (every leaf, raw dtypes) — the
+        replica warm-fill / resharding read primitive over the wire."""
+        return self._t.request(
+            ExportRowsRequest(np.asarray(ids).reshape(-1))).leaves
+
+    def import_rows(self, ids, leaves: dict) -> None:
+        self._t.request(ImportRowsRequest(np.asarray(ids).reshape(-1),
+                                          dict(leaves)))
 
     def stats(self) -> dict:
         """The server's full stats dict (metrics, staleness, search stats,

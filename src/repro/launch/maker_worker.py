@@ -32,6 +32,7 @@ import threading
 import time
 
 import jax
+import numpy as np
 
 from repro.checkpoint import DiskCheckpointStore
 from repro.configs import ARCH_IDS, get_config
@@ -67,6 +68,15 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--period", type=float, default=0.0,
                     help="per-maker pacing floor in seconds")
+    ap.add_argument("--node-slice", default="", metavar="I/N",
+                    help="be worker I of an N-worker pack: makers in this "
+                         "process touch only slice I of the node space. "
+                         "Against a partitioned fleet whose member count "
+                         "divides N evenly, slices follow the ring "
+                         "(KBRouter.partition_slices), so every maker "
+                         "batch stays on one partition — the router's "
+                         "no-copy fast path; otherwise a round-robin "
+                         "1-in-N slice")
     ap.add_argument("--steps", type=int, default=0,
                     help="stop after this many total maker steps "
                          "(0 = run until SIGINT/SIGTERM)")
@@ -127,11 +137,35 @@ def main(argv=None) -> int:
             num_clusters=args.clusters, labeled_frac=args.labeled_frac,
             label_noise=args.label_noise, seed=args.seed)
 
+    node_slice = None
+    if args.node_slice:
+        try:
+            w_idx, w_total = (int(x) for x in args.node_slice.split("/"))
+        except ValueError:
+            ap.error(f"--node-slice wants I/N, got {args.node_slice!r}")
+        if not (0 <= w_idx < w_total):
+            ap.error(f"--node-slice {args.node_slice}: index out of range")
+        slices = getattr(client, "partition_slices", None)
+        parts = slices() if slices is not None else []
+        if parts and w_total % len(parts) == 0:
+            # ring-aligned pack: worker I mirrors partition I%P, taking
+            # its 1-in-(N/P) round-robin share of that partition's ids —
+            # every batch lands on one member (router fast path)
+            mine = parts[w_idx % len(parts)]
+            node_slice = mine[w_idx // len(parts)::w_total // len(parts)]
+        else:
+            node_slice = np.arange(n)[w_idx::w_total]
+        node_slice = node_slice[node_slice < n]
+        print(f"maker-worker node-slice {args.node_slice}: "
+              f"{node_slice.size} of {n} nodes"
+              f"{' (ring-aligned)' if parts else ''}", flush=True)
+
     rt = MakerRuntime(client, corpus,
                       num_entries=None if corpus is not None else n,
                       ckpts=ckpts, embed_fn=embed)
     for kind in kinds:
-        rt.register(kind, batch_size=args.batch, min_period_s=args.period)
+        rt.register(kind, batch_size=args.batch, min_period_s=args.period,
+                    node_slice=node_slice)
 
     stop = threading.Event()
     for sig in (signal.SIGINT, signal.SIGTERM):

@@ -93,7 +93,20 @@ def serve_kb_partitioned(args) -> None:
     for lo in range(0, args.kb_entries, chunk):
         router.update(np.arange(lo, min(lo + chunk, args.kb_entries)),
                       fill_vals[lo:lo + chunk])
-    for s in servers:
+    standbys = []
+    if args.kb_replicas:
+        # one warm standby per partition, filled through the router's
+        # export/import stream and kept in sync by the write tee — the
+        # in-process rehearsal of `serve.py --replica-of`
+        for p in range(P):
+            s = KnowledgeBankServer(int(pmap.counts[p]), args.kb_dim,
+                                    backend=args.kb_backend,
+                                    coalesce=not args.no_coalesce,
+                                    reorder=args.kb_reorder,
+                                    storage=args.kb_storage)
+            standbys.append(s)
+            router.attach_standby(p, InProcessTransport(s), fill=True)
+    for s in servers + standbys:
         s.warmup(args.batch * args.clients)
     router.nn_search(np.zeros((args.batch, args.kb_dim), np.float32), k=8)
 
@@ -116,10 +129,11 @@ def serve_kb_partitioned(args) -> None:
     calls = args.clients * args.gen * 3
     stats = router.stats()
     router.close()
-    for s in servers:
+    for s in servers + standbys:
         s.close()
     m = stats["metrics"]
     print(f"kb-serve partitions={P} backend={args.kb_backend} "
+          f"replicas={int(bool(args.kb_replicas))} "
           f"reorder={args.kb_reorder} clients={args.clients}: "
           f"{calls / dt:.0f} req/s ({dt / calls * 1e6:.0f} us/req), "
           f"coalescing x{stats['coalescing_factor']:.1f}, "
@@ -189,16 +203,38 @@ def serve_kb(args) -> None:
                                  resident_rows=args.kb_resident_rows,
                                  cold_after_rows=args.kb_cold_after,
                                  cold_dir=args.kb_cold_dir or None)
-    all_vals = rng.normal(size=(args.kb_entries, args.kb_dim)) \
-        .astype(np.float32)
-    # tiered banks bound the distinct rows one write may touch — chunk the
-    # initial fill to fit the resident tier
-    fill_vals = all_vals[fill_ids]
-    chunk = (min(args.kb_resident_rows, num_rows)
-             if args.kb_resident_rows else num_rows)
-    for lo in range(0, num_rows, chunk):
-        server.update(np.arange(lo, min(lo + chunk, num_rows)),
-                      fill_vals[lo:lo + chunk])
+    if args.replica_of:
+        # standby boot: instead of the synthetic fill, copy the primary's
+        # full per-row state (every leaf, bit-identically) so this member
+        # can be promoted in its place. The router re-fills on attach to
+        # close the gap between this boot copy and the first teed write.
+        if not args.kb_join:
+            raise SystemExit("--replica-of requires --kb-join I/N (a "
+                             "standby mirrors one ring slot)")
+        from repro.core import SocketTransport, parse_hostport
+        from repro.core.kb_protocol import (ExportRowsRequest,
+                                            ImportRowsRequest)
+        ph, pp = parse_hostport(args.replica_of)
+        src = SocketTransport(ph, pp, expect_partition=partition_label)
+        copy_chunk = 1024
+        for lo in range(0, num_rows, copy_chunk):
+            lids = np.arange(lo, min(lo + copy_chunk, num_rows))
+            leaves = src.request(ExportRowsRequest(lids)).leaves
+            server.import_rows(lids, leaves)
+        src.close()
+        print(f"replica boot: copied {num_rows} rows from "
+              f"{args.replica_of} (slot {partition_label})", flush=True)
+    else:
+        all_vals = rng.normal(size=(args.kb_entries, args.kb_dim)) \
+            .astype(np.float32)
+        # tiered banks bound the distinct rows one write may touch —
+        # chunk the initial fill to fit the resident tier
+        fill_vals = all_vals[fill_ids]
+        chunk = (min(args.kb_resident_rows, num_rows)
+                 if args.kb_resident_rows else num_rows)
+        for lo in range(0, num_rows, chunk):
+            server.update(np.arange(lo, min(lo + chunk, num_rows)),
+                          fill_vals[lo:lo + chunk])
     server.warmup(args.batch * args.clients)
     refresher = None
     if args.kb_search == "ivf":
@@ -381,6 +417,20 @@ def main(argv=None):
                          "bank and label the handshake I/N (requires "
                          "--listen); routers connect all members with "
                          "--kb-connect host:p0,host:p1,... in ring order")
+    ap.add_argument("--kb-replicas", type=int, default=0, choices=[0, 1],
+                    help="--kb-partitions: give every in-process partition "
+                         "a warm standby attached to the router (filled by "
+                         "row export/import, kept in sync by the write "
+                         "tee); the wire-fleet equivalent is one "
+                         "--replica-of process per member")
+    ap.add_argument("--replica-of", default="", metavar="HOST:PORT",
+                    help="boot as the standby of the fleet member at "
+                         "HOST:PORT: size to the same --kb-join ring slot, "
+                         "copy its full row state (every leaf, bit-"
+                         "identically), then serve — a router attaches it "
+                         "with attach_standby / the host:pN|host:sbN "
+                         "--kb-connect syntax and promotes it if the "
+                         "primary dies")
     ap.add_argument("--kb-reorder", action="store_true",
                     help="cross-op reordering in the coalescing "
                          "dispatcher: commuting requests (disjoint-id "
@@ -404,6 +454,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.kb:
+        if args.kb_replicas and args.kb_partitions <= 1:
+            ap.error("--kb-replicas pairs with --kb-partitions N (wire "
+                     "fleets boot standbys with --replica-of instead)")
         if args.kb_partitions > 1:
             if args.listen:
                 ap.error("--kb-partitions drives an in-process router; "

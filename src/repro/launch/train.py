@@ -80,7 +80,9 @@ def main(argv=None):
                          "instead of hosting one in-process; a comma list "
                          "names a PARTITIONED fleet in ring order (one "
                          "serve.py --kb-join process per endpoint) routed "
-                         "through a KBRouter transparently; --nodes must "
+                         "through a KBRouter transparently; host:p0|host:s0 "
+                         "attaches s0 as partition 0's standby (promoted "
+                         "on failure, see launch/fleet.py); --nodes must "
                          "not exceed the bank's total entries")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)

@@ -3,7 +3,7 @@ the real package is absent (this container has no network; see
 requirements-dev.txt for the pinned real dependency).
 
 Implements exactly the surface this suite uses: ``given``, ``settings`` and
-the ``integers`` / ``floats`` / ``lists`` strategies. Examples are drawn
+the ``integers`` / ``floats`` / ``lists`` / ``booleans`` strategies. Examples are drawn
 from a fixed-seed RNG, so runs are deterministic — you lose hypothesis'
 shrinking and example database, not coverage. Installed into ``sys.modules``
 by conftest.py only when ``import hypothesis`` fails.
@@ -32,6 +32,10 @@ def integers(min_value, max_value):
 
 def floats(min_value, max_value):
     return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
 
 
 def lists(elements, min_size=0, max_size=10):
@@ -74,7 +78,7 @@ def install():
     """Register the shim as ``hypothesis`` in sys.modules."""
     mod = types.ModuleType("hypothesis")
     strategies = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "lists"):
+    for name in ("integers", "floats", "lists", "booleans"):
         setattr(strategies, name, globals()[name])
     mod.given = given
     mod.settings = settings

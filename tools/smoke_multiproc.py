@@ -22,7 +22,18 @@ Boots the real deployment shapes with zero test scaffolding:
 4. SIGTERMs both members and asserts EACH served wire requests > 0 (both
    partitions took traffic, none sat idle behind the router).
 
-Usage:  python tools/smoke_multiproc.py [--phase single|router|all]
+``--phase failover`` (ISSUE 8 — the self-healing fleet):
+1. TWO partition members plus ONE standby (``serve --kb-join 0/2
+   --replica-of host:p0``) that boot-copies its primary's rows,
+2. a ``maker_worker --connect host:p0|host:s0,host:p1`` fleet; the moment
+   it reports connected, member p0 is SIGKILLed — so essentially every
+   maker step runs against the killed fleet,
+3. asserts the worker still finished ALL its steps with zero errors and
+   rows_written > 0: its router promoted the standby mid-run,
+4. SIGTERMs the survivor and the promoted standby and asserts each served
+   wire traffic.
+
+Usage:  python tools/smoke_multiproc.py [--phase single|router|failover|all]
 (exit 0 = pass)
 """
 from __future__ import annotations
@@ -169,15 +180,84 @@ def phase_router() -> None:
     print("router smoke: OK", flush=True)
 
 
+def phase_failover() -> None:
+    procs = []
+    worker = None
+    try:
+        p0 = _boot_server(["--kb-join", "0/2"])
+        procs.append(p0)
+        p1 = _boot_server(["--kb-join", "1/2"])
+        procs.append(p1)
+        s0 = _boot_server(["--kb-join", "0/2",
+                           "--replica-of", f"127.0.0.1:{p0[1]}"])
+        procs.append(s0)
+        spec = (f"127.0.0.1:{p0[1]}|127.0.0.1:{s0[1]},"
+                f"127.0.0.1:{p1[1]}")
+        worker = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.maker_worker",
+             "--connect", spec, "--makers", "graph_builder",
+             "--steps", "20", "--batch", "16",
+             "--seconds", str(STARTUP_TIMEOUT_S),
+             "--max-retries", "1", "--reconnect-backoff", "0.01"],
+            env=_env(), cwd=ROOT, stdout=subprocess.PIPE,
+            stderr=subprocess.STDOUT, text=True)
+        # kill the primary the moment the worker is connected (before its
+        # makers start): every step must then ride the promoted standby
+        lines = []
+        deadline = time.time() + STARTUP_TIMEOUT_S
+        while True:
+            if time.time() > deadline:
+                raise RuntimeError("worker never connected:\n"
+                                   + "".join(lines))
+            line = worker.stdout.readline()
+            if not line:
+                raise RuntimeError("worker exited before connecting:\n"
+                                   + "".join(lines))
+            lines.append(line)
+            print("[worker]", line, end="", flush=True)
+            if "maker-worker connected" in line:
+                break
+        p0[0].send_signal(signal.SIGKILL)
+        p0[0].wait(timeout=60)
+        print("[driver] SIGKILLed member p0; worker must promote s0",
+              flush=True)
+        out, _ = worker.communicate(timeout=STARTUP_TIMEOUT_S)
+        print("[worker]", out, flush=True)
+        if worker.returncode != 0:
+            raise RuntimeError(f"worker exited {worker.returncode} after "
+                               "the primary was killed")
+        m = re.search(r"done: steps=(\d+) rows_written=(\d+) errors=(\d+)",
+                      out)
+        if not m:
+            raise RuntimeError("worker printed no final report")
+        steps, rows, errors = (int(g) for g in m.groups())
+        if steps < 20 or rows <= 0 or errors > 0:
+            raise RuntimeError(
+                f"maker did not keep advancing through fail-over: "
+                f"steps={steps} rows_written={rows} errors={errors}")
+        _stop_server(p1[0], "serve-p1")
+        _stop_server(s0[0], "serve-s0")     # the PROMOTED member
+    finally:
+        if worker is not None and worker.poll() is None:
+            worker.kill()
+        for proc, _ in procs:
+            if proc.poll() is None:
+                proc.kill()
+    print("failover smoke: OK", flush=True)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--phase", choices=["single", "router", "all"],
+    ap.add_argument("--phase",
+                    choices=["single", "router", "failover", "all"],
                     default="all")
     args = ap.parse_args()
     if args.phase in ("single", "all"):
         phase_single()
     if args.phase in ("router", "all"):
         phase_router()
+    if args.phase in ("failover", "all"):
+        phase_failover()
     print("multi-process smoke: OK")
     return 0
 
