@@ -1,0 +1,167 @@
+"""ANN configuration autotuner: sweep (nlist, nprobe) x storage against a
+recall floor and emit the cheapest config that clears it.
+
+The IVF knobs trade recall for stage-2 work (`shortlist_rows` = nprobe *
+bucket_cap rows scored per query), and the right operating point moves with
+the bank's cluster structure — a config tuned on one corpus over- or
+under-probes another. This module measures instead of guessing: build an
+index per ``nlist``, run the search per ``nprobe`` for both the fp32 and
+int8 snapshot, score recall@k against the exact fp32 top-k, and pick the
+lowest-latency config meeting ``recall_floor`` (falling back to the
+highest-recall config when nothing clears the floor, flagged
+``meets_floor: false``).
+
+``bucket_cap`` is NOT swept independently: it is determined by (bank,
+nlist) via the build's capacity rounding, so sweeping ``nlist`` sweeps the
+(cap, chunk-count) layout with it — every result row records the cap it
+got.
+
+Consumers:
+- ``tools/autotune_ann.py`` — the CLI; writes the JSON artifact.
+- ``serve.py --kb-autotuned PATH`` — loads the artifact and serves the
+  winning config for its ``--kb-storage`` mode.
+- ``benchmarks/nn_search_bench.py`` — embeds the winner as the
+  ``autotuned`` BENCH row.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+AUTOTUNE_VERSION = 1
+DEFAULT_RECALL_FLOOR = 0.95
+
+
+def _recall_at_k(ids, true_ids) -> float:
+    """Mean fraction of the exact top-k recovered per query."""
+    hits = (ids[:, :, None] == true_ids[:, None, :]).any(-1)
+    return float(hits.mean())
+
+
+def _time_search(fn, *args, repeats: int = 3) -> float:
+    """Median wall-clock seconds of a jitted search (post-warmup)."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def sweep_ann(bank, queries, *, k: int = 10,
+              nlists: Sequence[int] = (32, 64, 128),
+              nprobes: Sequence[int] = (4, 8, 16),
+              storages: Sequence[str] = ("fp32", "int8"),
+              recall_floor: float = DEFAULT_RECALL_FLOOR,
+              iters: int = 8, repeats: int = 3) -> dict:
+    """Run the sweep and return the full result record (JSON-ready).
+
+    One index build per ``nlist``; per (nlist, nprobe, storage) cell the
+    two-stage search runs jitted, recall@k is scored against the exact
+    fp32 top-k over the live bank, and median latency is recorded. The
+    ``best`` block maps each storage mode to its winner."""
+    from repro.core.ann_index import QuantizedIVFIndex, build_ivf_index
+    from repro.core.knowledge_bank import quantize_rows
+    from repro.kernels.nn_search_ivf import (ivf_search_jnp,
+                                             ivf_search_quantized_jnp)
+    bank = jnp.asarray(bank, jnp.float32)
+    queries = jnp.asarray(queries, jnp.float32)
+    N, D = bank.shape
+    _, true_ids = jax.lax.top_k(queries @ bank.T, k)
+    true_ids = np.asarray(true_ids)
+    codes = scale = offset = None
+    if "int8" in storages:
+        codes, scale, offset = quantize_rows(bank)
+    results = []
+    for nlist in nlists:
+        t0 = time.perf_counter()
+        idx = build_ivf_index(bank, nlist=nlist, iters=iters)
+        build_s = time.perf_counter() - t0
+        qidx = QuantizedIVFIndex(idx) if "int8" in storages else None
+        for nprobe in nprobes:
+            if nprobe > idx.nlist:
+                continue
+            for storage in storages:
+                if storage == "fp32":
+                    fn = jax.jit(lambda tbl, c, pv, pi, q, _k=k,
+                                 _np=nprobe: ivf_search_jnp(
+                                     tbl, c, pv, pi, q, _k, _np))
+                    args = (bank, idx.centroids, idx.packed_vecs,
+                            idx.packed_ids, queries)
+                else:
+                    fn = jax.jit(lambda tbl, qs, qo, c, pc, ps, po, pi, q,
+                                 _k=k, _np=nprobe:
+                                 ivf_search_quantized_jnp(
+                                     tbl, qs, qo, c, pc, ps, po, pi, q,
+                                     _k, _np))
+                    args = (codes, scale, offset, qidx.centroids,
+                            qidx.packed_codes, qidx.packed_scale,
+                            qidx.packed_offset, qidx.packed_ids, queries)
+                latency = _time_search(fn, *args, repeats=repeats)
+                _, ids = fn(*args)
+                results.append({
+                    "storage": storage,
+                    "nlist": int(idx.nlist),
+                    "nprobe": int(nprobe),
+                    "bucket_cap": int(idx.bucket_cap),
+                    "shortlist_rows": int(nprobe * idx.bucket_cap),
+                    "recall": _recall_at_k(np.asarray(ids), true_ids),
+                    "search_s": latency,
+                    "build_s": float(build_s),
+                })
+    best = {}
+    for storage in storages:
+        rows = [r for r in results if r["storage"] == storage]
+        if not rows:
+            continue
+        ok = [r for r in rows if r["recall"] >= recall_floor]
+        if ok:
+            win = dict(min(ok, key=lambda r: r["search_s"]))
+            win["meets_floor"] = True
+        else:                       # nothing clears the floor: best recall
+            win = dict(max(rows, key=lambda r: r["recall"]))
+            win["meets_floor"] = False
+        best[storage] = win
+    return {
+        "version": AUTOTUNE_VERSION,
+        "k": int(k),
+        "recall_floor": float(recall_floor),
+        "bank": {"n": int(N), "dim": int(D)},
+        "results": results,
+        "best": best,
+    }
+
+
+def save_autotune(result: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_autotune(path: str, *, storage: Optional[str] = None) -> dict:
+    """Load a sweep artifact; with ``storage`` given, return that mode's
+    winning config (the record ``serve.py --kb-autotuned`` applies)."""
+    with open(path) as f:
+        result = json.load(f)
+    if result.get("version") != AUTOTUNE_VERSION:
+        raise ValueError(f"{path}: autotune version "
+                         f"{result.get('version')!r} != {AUTOTUNE_VERSION}")
+    if storage is None:
+        return result
+    best = result.get("best", {})
+    if storage not in best:
+        raise ValueError(f"{path}: no tuned config for storage "
+                         f"{storage!r} (have {sorted(best)})")
+    win = best[storage]
+    for key in ("nlist", "nprobe", "recall"):
+        if key not in win:
+            raise ValueError(f"{path}: tuned config missing {key!r}")
+    return win

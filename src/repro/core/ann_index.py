@@ -19,6 +19,11 @@ Index layout (what makes the stage-2 kernel gather-free):
   bucket is a block-aligned slice the kernel can DMA directly.
 - ``packed_ids``  : (C*cap,) int32 — the bank row id of each packed slot,
   -1 in padding slots.
+- ``bucket_occ``  : (C,) int32 — occupied rows per bucket. ``_pack_buckets``
+  fills each bucket from its start, so the occupied slots of bucket b are
+  exactly the first ``bucket_occ[b]`` — the stage-2 kernels use this to
+  iterate only a bucket's occupied chunks instead of the common capacity
+  (the skew-proofing described in ``repro.kernels.nn_search_ivf``).
 
 Staleness model: rows never appear or vanish (the bank is a fixed (N, D)
 table), so writes after a build only leave *stale vectors* in the snapshot.
@@ -91,16 +96,21 @@ class IVFIndex:
     engine passes the arrays to its jitted search fn individually)."""
 
     __slots__ = ("centroids", "packed_vecs", "packed_ids", "nlist",
-                 "bucket_cap", "n_rows")
+                 "bucket_cap", "n_rows", "bucket_occ")
 
     def __init__(self, centroids, packed_vecs, packed_ids, *, nlist: int,
-                 bucket_cap: int, n_rows: int):
+                 bucket_cap: int, n_rows: int, bucket_occ=None):
         self.centroids = centroids
         self.packed_vecs = packed_vecs
         self.packed_ids = packed_ids
         self.nlist = nlist
         self.bucket_cap = bucket_cap
         self.n_rows = n_rows
+        if bucket_occ is None:          # derive from the packed layout
+            bucket_occ = jnp.asarray(
+                (np.asarray(packed_ids).reshape(nlist, bucket_cap) >= 0)
+                .sum(axis=1).astype(np.int32))
+        self.bucket_occ = bucket_occ
 
     def bucket_stats(self) -> dict:
         """Bucket-occupancy skew of this snapshot (see
@@ -153,15 +163,33 @@ def _maxmin_init(table, nlist: int):
     return cents
 
 
-def kmeans(table, nlist: int, *, iters: int = 8):
+@jax.jit
+def _centroid_shift(new, old):
+    """Largest squared per-centroid movement, relative to the mean squared
+    centroid norm — scale-free, so one tolerance works across banks."""
+    num = jnp.max(jnp.sum((new - old) ** 2, axis=1))
+    den = jnp.mean(jnp.sum(old * old, axis=1)) + 1e-12
+    return num / den
+
+
+def kmeans(table, nlist: int, *, iters: int = 8, tol: float = 1e-4):
     """Lloyd's algorithm, farthest-point init.
-    table: (N, D) -> (centroids (C, D) f32, assign (N,) int32)."""
+    table: (N, D) -> (centroids (C, D) f32, assign (N,) int32).
+
+    ``iters`` is a CEILING: iteration stops early once the largest relative
+    centroid movement per step drops below ``tol`` (Lloyd on clustered
+    banks typically converges in 3-4 steps; the fixed-count loop was paying
+    for 8). ``tol=0`` restores the fixed-iteration behavior. Determinism is
+    unchanged — the stop rule depends only on the snapshot."""
     table = jnp.asarray(table, jnp.float32)
     N = table.shape[0]
     C = max(1, min(nlist, N))
     centroids = _maxmin_init(table, C)
     for _ in range(max(1, iters)):
-        centroids, _ = _lloyd_step(table, centroids)
+        prev = centroids
+        centroids, _ = _lloyd_step(table, prev)
+        if tol and float(_centroid_shift(centroids, prev)) <= tol * tol:
+            break
     # final assignment against the RETURNED centroids (the loop's assign is
     # one half-step behind — a centroid reseeded on the last step would own
     # zero rows, and stage 1 probes against these centroids)
@@ -197,21 +225,23 @@ def _pack_buckets(tbl, assign, C: int, cap: int, *, id_offset: int = 0):
     return packed_vecs, packed_ids
 
 
-def build_ivf_index(table, *, nlist: int = 64, iters: int = 8) -> IVFIndex:
+def build_ivf_index(table, *, nlist: int = 64, iters: int = 8,
+                    tol: float = 1e-4) -> IVFIndex:
     """Cluster a table snapshot and pack it into the block-aligned IVF
     layout. Runs on the caller's thread — the refresher's, in serving.
     Deterministic: the same snapshot always yields the same index
     (farthest-point init, no RNG), so rebuilds never introduce jitter."""
     tbl = np.asarray(table, np.float32)
     N, D = tbl.shape
-    centroids, assign = kmeans(tbl, nlist, iters=iters)
+    centroids, assign = kmeans(tbl, nlist, iters=iters, tol=tol)
     C = centroids.shape[0]
     assign = np.asarray(assign)
-    cap = _round_capacity(int(np.bincount(assign, minlength=C).max()))
+    occ = np.bincount(assign, minlength=C).astype(np.int32)
+    cap = _round_capacity(int(occ.max()))
     packed_vecs, packed_ids = _pack_buckets(tbl, assign, C, cap)
     return IVFIndex(jnp.asarray(centroids), jnp.asarray(packed_vecs),
                     jnp.asarray(packed_ids), nlist=C, bucket_cap=cap,
-                    n_rows=N)
+                    n_rows=N, bucket_occ=jnp.asarray(occ))
 
 
 class ShardedIVFIndex:
@@ -237,10 +267,10 @@ class ShardedIVFIndex:
     forces a full repack)."""
 
     __slots__ = ("centroids", "packed_vecs", "packed_ids", "n_shards",
-                 "nlist", "bucket_cap", "n_rows")
+                 "nlist", "bucket_cap", "n_rows", "bucket_occ")
 
     def __init__(self, centroids, packed_vecs, packed_ids, *, n_shards: int,
-                 nlist: int, bucket_cap: int, n_rows: int):
+                 nlist: int, bucket_cap: int, n_rows: int, bucket_occ=None):
         self.centroids = centroids
         self.packed_vecs = packed_vecs
         self.packed_ids = packed_ids
@@ -248,6 +278,12 @@ class ShardedIVFIndex:
         self.nlist = nlist              # per shard
         self.bucket_cap = bucket_cap
         self.n_rows = n_rows
+        if bucket_occ is None:          # (S*C,) — global bucket order
+            bucket_occ = jnp.asarray(
+                (np.asarray(packed_ids).reshape(n_shards * nlist,
+                                                bucket_cap) >= 0)
+                .sum(axis=1).astype(np.int32))
+        self.bucket_occ = bucket_occ
 
     def shard_stats(self) -> list:
         """Per-shard bucket-occupancy skew (capacity vs mean occupancy —
@@ -266,7 +302,7 @@ class ShardedIVFIndex:
 
 
 def build_sharded_ivf_index(table, n_shards: int, *, nlist: int = 64,
-                            iters: int = 8,
+                            iters: int = 8, tol: float = 1e-4,
                             base: Optional[ShardedIVFIndex] = None,
                             shards: Optional[Sequence[int]] = None
                             ) -> ShardedIVFIndex:
@@ -302,7 +338,7 @@ def build_sharded_ivf_index(table, n_shards: int, *, nlist: int = 64,
     built = {}                          # shard -> (centroids, assign)
     for s in rebuild:
         sl = tbl[s * n_local:(s + 1) * n_local]
-        centroids, assign = kmeans(sl, C, iters=iters)
+        centroids, assign = kmeans(sl, C, iters=iters, tol=tol)
         built[s] = (np.asarray(centroids), np.asarray(assign))
     biggest = max(int(np.bincount(a, minlength=C).max())
                   for _, a in built.values())
@@ -315,13 +351,14 @@ def build_sharded_ivf_index(table, n_shards: int, *, nlist: int = 64,
         for s in range(n_shards):
             if s not in built:
                 sl = tbl[s * n_local:(s + 1) * n_local]
-                centroids, assign = kmeans(sl, C, iters=iters)
+                centroids, assign = kmeans(sl, C, iters=iters, tol=tol)
                 built[s] = (np.asarray(centroids), np.asarray(assign))
         cap = _round_capacity(max(int(np.bincount(a, minlength=C).max())
                                   for _, a in built.values()))
     all_cent = np.zeros((n_shards * C, D), np.float32)
     all_vecs = np.zeros((n_shards * C * cap, D), np.float32)
     all_ids = np.full((n_shards * C * cap,), -1, np.int32)
+    all_occ = np.zeros((n_shards * C,), np.int32)
     for s in range(n_shards):
         lo, hi = s * C * cap, (s + 1) * C * cap
         if s in built:
@@ -332,14 +369,18 @@ def build_sharded_ivf_index(table, n_shards: int, *, nlist: int = 64,
             all_cent[s * C:(s + 1) * C] = centroids
             all_vecs[lo:hi] = pv
             all_ids[lo:hi] = pi
+            all_occ[s * C:(s + 1) * C] = np.bincount(assign, minlength=C)
         else:                           # keep base's sub-index verbatim
             all_cent[s * C:(s + 1) * C] = np.asarray(
                 base.centroids[s * C:(s + 1) * C])
             all_vecs[lo:hi] = np.asarray(base.packed_vecs[lo:hi])
             all_ids[lo:hi] = np.asarray(base.packed_ids[lo:hi])
+            all_occ[s * C:(s + 1) * C] = np.asarray(
+                base.bucket_occ[s * C:(s + 1) * C])
     return ShardedIVFIndex(jnp.asarray(all_cent), jnp.asarray(all_vecs),
                            jnp.asarray(all_ids), n_shards=n_shards, nlist=C,
-                           bucket_cap=cap, n_rows=N)
+                           bucket_cap=cap, n_rows=N,
+                           bucket_occ=jnp.asarray(all_occ))
 
 
 # ---------------------------------------------------------------------------
@@ -374,7 +415,7 @@ class QuantizedIVFIndex:
 
     __slots__ = ("centroids", "packed_codes", "packed_scale",
                  "packed_offset", "packed_ids", "nlist", "bucket_cap",
-                 "n_rows", "base")
+                 "n_rows", "bucket_occ", "base")
 
     def __init__(self, base: IVFIndex):
         codes, scale, offset = _quantize_packed(base.packed_vecs)
@@ -386,6 +427,7 @@ class QuantizedIVFIndex:
         self.nlist = base.nlist
         self.bucket_cap = base.bucket_cap
         self.n_rows = base.n_rows
+        self.bucket_occ = base.bucket_occ
         self.base = base
 
     def bucket_stats(self) -> dict:
@@ -400,7 +442,7 @@ class QuantizedShardedIVFIndex:
 
     __slots__ = ("centroids", "packed_codes", "packed_scale",
                  "packed_offset", "packed_ids", "n_shards", "nlist",
-                 "bucket_cap", "n_rows", "base")
+                 "bucket_cap", "n_rows", "bucket_occ", "base")
 
     def __init__(self, base: ShardedIVFIndex):
         codes, scale, offset = _quantize_packed(base.packed_vecs)
@@ -413,6 +455,7 @@ class QuantizedShardedIVFIndex:
         self.nlist = base.nlist
         self.bucket_cap = base.bucket_cap
         self.n_rows = base.n_rows
+        self.bucket_occ = base.bucket_occ
         self.base = base
 
     def shard_stats(self) -> list:

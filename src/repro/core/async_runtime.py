@@ -174,11 +174,13 @@ class KnowledgeBankServer:
                  storage: str = "fp32", cache_rows: int = 0,
                  resident_rows: Optional[int] = None,
                  cold_after_rows: Optional[int] = None,
-                 cold_dir: Optional[str] = None):
+                 cold_dir: Optional[str] = None,
+                 interpret: Optional[bool] = None):
         if engine is None:
             engine = KBEngine(num_entries, dim, backend=backend, dist=dist,
                               lazy_lr=lazy_lr, zmax=zmax,
                               lazy_update=lazy_update,
+                              interpret=interpret,
                               search_mode=search_mode, ann_nlist=ann_nlist,
                               ann_nprobe=ann_nprobe,
                               ann_stale_rows=ann_stale_rows,

@@ -189,13 +189,19 @@ class ShardedBackend:
 class PallasBackend:
     """TPU serving path: fused single-pass kernels for the read-side ops.
 
-    ``interpret=True`` (default) runs the kernel bodies with jax ops — the
-    CPU-container validation mode; pass False on real TPUs."""
+    ``interpret=None`` (default) resolves ONCE at construction from the
+    process ``KernelConfig`` (repro.env): interpret mode on CPU, compiled
+    on an accelerator backend. ``n_block=None`` defers tile sizing to the
+    per-call VMEM fit (``repro.env.fused_lookup_block``), so serving
+    batches past 4k ids pick a legal smaller tile instead of overflowing
+    VMEM."""
 
     name = "pallas"
 
-    def __init__(self, *, interpret: bool = True, n_block: int = 512):
-        self.interpret = interpret
+    def __init__(self, *, interpret: Optional[bool] = None,
+                 n_block: Optional[int] = None):
+        from repro.env import resolve_interpret
+        self.interpret = resolve_interpret(interpret)
         self.n_block = n_block
 
     def lookup(self, state, ids, *, lazy_lr, zmax, apply_pending=True):
@@ -246,7 +252,7 @@ class PallasBackend:
 
 
 def make_backend(name: str, *, dist: Optional[DistContext] = None,
-                 interpret: bool = True) -> KBBackend:
+                 interpret: Optional[bool] = None) -> KBBackend:
     """Backend factory: ``dense | sharded | pallas``. All three satisfy
     the same contract — bit-identical state evolution on the same op
     sequence (tests/test_kb_engine.py) — so callers may switch backends
@@ -295,7 +301,7 @@ class KBOps(NamedTuple):
 def make_kb_ops(dist: Optional[DistContext] = None, *,
                 backend=None, lazy_lr: float = 0.1, zmax: float = 3.0,
                 apply_pending: bool = True,
-                interpret: bool = True) -> KBOps:
+                interpret: Optional[bool] = None) -> KBOps:
     """Select a backend once and bind the lazy-update knobs into a
     ``KBOps`` bundle.
 
@@ -339,7 +345,8 @@ class KBEngine:
                  backend="dense", dist: Optional[DistContext] = None,
                  lazy_lr: float = 0.1, zmax: float = 3.0,
                  entry_zmax: Optional[float] = None,
-                 lazy_update: bool = True, interpret: bool = True,
+                 lazy_update: bool = True,
+                 interpret: Optional[bool] = None,
                  search_mode: str = "exact", ann_nlist: int = 64,
                  ann_nprobe: int = 8, ann_stale_rows: Optional[int] = None,
                  dtype=jnp.float32, key: Optional[jax.Array] = None,
@@ -862,55 +869,64 @@ class KBEngine:
         rebuild with the same shapes reuses the compiled program. The
         sharded backend routes through the hierarchical per-shard merge
         (``sharded_kb_nn_search_ivf``); dense/pallas through the
-        single-index two-stage search."""
+        single-index two-stage search. Every impl takes the index's
+        per-bucket occupancy (``occ``) as a traced arg — the Pallas paths
+        use it to walk only each bucket's occupied chunks (skew-proofing,
+        see ``repro.kernels.nn_search_ivf``); the jnp/sharded oracles
+        ignore it."""
         nprobe = min(self.ann_nprobe, idx.nlist)
         fn = self._ivf_fns.get((k, nprobe))
         if fn is None:
             if isinstance(self.backend, ShardedBackend):
                 bk = self.backend
                 if self.storage == "int8":
-                    impl = (lambda tbl, c, pc, ps, po, pi, q:
+                    impl = (lambda tbl, c, pc, ps, po, pi, occ, q:
                             bk.nn_search_ivf_q(tbl, c, pc, ps, po, pi, q,
                                                k, nprobe))
                 else:
-                    impl = (lambda tbl, c, pv, pi, q: bk.nn_search_ivf(
+                    impl = (lambda tbl, c, pv, pi, occ, q: bk.nn_search_ivf(
                         tbl, c, pv, pi, q, k, nprobe))
             elif self._quantized:
                 if isinstance(self.backend, PallasBackend):
                     from repro.kernels.nn_search_ivf import (
                         ivf_search_quantized_pallas)
                     interpret = self.backend.interpret
-                    impl = (lambda tbl, qs, qo, c, pc, ps, po, pi, q:
+                    impl = (lambda tbl, qs, qo, c, pc, ps, po, pi, occ, q:
                             ivf_search_quantized_pallas(
                                 tbl, qs, qo, c, pc, ps, po, pi, q, k,
-                                nprobe, interpret=interpret))
+                                nprobe, bucket_occ=occ,
+                                interpret=interpret))
                 else:
                     from repro.kernels.nn_search_ivf import (
                         ivf_search_quantized_jnp)
-                    impl = (lambda tbl, qs, qo, c, pc, ps, po, pi, q:
+                    impl = (lambda tbl, qs, qo, c, pc, ps, po, pi, occ, q:
                             ivf_search_quantized_jnp(
                                 tbl, qs, qo, c, pc, ps, po, pi, q, k,
                                 nprobe))
             elif isinstance(self.backend, PallasBackend):
                 from repro.kernels.nn_search_ivf import ivf_search_pallas
                 interpret = self.backend.interpret
-                impl = (lambda tbl, c, pv, pi, q: ivf_search_pallas(
-                    tbl, c, pv, pi, q, k, nprobe, interpret=interpret))
+                impl = (lambda tbl, c, pv, pi, occ, q: ivf_search_pallas(
+                    tbl, c, pv, pi, q, k, nprobe, bucket_occ=occ,
+                    interpret=interpret))
             else:
                 from repro.kernels.nn_search_ivf import ivf_search_jnp
-                impl = (lambda tbl, c, pv, pi, q: ivf_search_jnp(
+                impl = (lambda tbl, c, pv, pi, occ, q: ivf_search_jnp(
                     tbl, c, pv, pi, q, k, nprobe))
             fn = self._ivf_fns[(k, nprobe)] = jax.jit(impl)
+        occ = idx.bucket_occ
         if self._quantized:
             return fn(self.state.table, self._qscale, self._qoffset,
                       idx.centroids, idx.packed_codes, idx.packed_scale,
-                      idx.packed_offset, idx.packed_ids, jnp.asarray(q))
+                      idx.packed_offset, idx.packed_ids, occ,
+                      jnp.asarray(q))
         if self.storage == "int8":      # sharded: fp32 live table,
             return fn(self.state.table,  # quantized sub-index snapshot
                       idx.centroids, idx.packed_codes, idx.packed_scale,
-                      idx.packed_offset, idx.packed_ids, jnp.asarray(q))
+                      idx.packed_offset, idx.packed_ids, occ,
+                      jnp.asarray(q))
         return fn(self.state.table, idx.centroids, idx.packed_vecs,
-                  idx.packed_ids, jnp.asarray(q))
+                  idx.packed_ids, occ, jnp.asarray(q))
 
     # -- ANN index lifecycle (built off the serving path; see ann_index) ---
 

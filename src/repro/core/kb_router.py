@@ -39,7 +39,12 @@ Fleet operations (fail-over + live resharding) sit on two invariants:
    duplication contract ``SocketTransport`` reconnects already impose).
    Promotion (``_promote_locked``) drains the tail, swaps the standby in,
    stamps it with ``PromoteRequest`` so its handshake label matches its
-   new role, and re-issues the failed request once.
+   new role, and re-issues the failed request once. Partitions can also
+   hold a pool of COLD spares (``add_spare``): the moment a promotion
+   empties the standby slot, the next spare is filled from the new
+   primary (still under the slot lock) and attached as the fresh standby,
+   so the fleet heals back to primary+standby and survives a SECOND
+   failure without an operator in the loop.
 2. **Resharding never renumbers a live member's physical rows.** Growing
    P -> P+1 ( ``reshard`` ) moves only the ids the ring moves — all onto
    the new member — by streaming every per-row leaf (fp32 table, version,
@@ -249,8 +254,8 @@ class KBRouter:
             retired=tuple(empty for _ in range(P)))
         self.router_metrics = {"fanouts": 0, "single_partition_fastpath": 0,
                                "partition_requests": 0, "promotions": 0,
-                               "standbys_lost": 0, "reshards": 0,
-                               "reshard_rows_moved": 0,
+                               "standbys_lost": 0, "spares_attached": 0,
+                               "reshards": 0, "reshard_rows_moved": 0,
                                "reshard_dirty_rows": 0}
         self._mlock = threading.Lock()
         # one slot lock per member: serializes mutating ops against that
@@ -258,6 +263,8 @@ class KBRouter:
         # reshard cutover can exclude ALL writers by taking every lock
         self._slot_locks = [threading.Lock() for _ in range(P)]
         self._standbys: List[Optional[Transport]] = [None] * P
+        # cold spares per member, attached-and-filled on promotion
+        self._spares: List[deque] = [deque() for _ in range(P)]
         self._tails: List[deque] = [deque() for _ in range(P)]
         self._seqs = [0] * P
         self._reshard_lock = threading.Lock()
@@ -343,6 +350,30 @@ class KBRouter:
             old.close()
         except Exception:
             pass
+        self._reattach_spare_locked(p)
+
+    def _reattach_spare_locked(self, p: int) -> None:
+        """Slot lock held, the standby slot just emptied (promotion):
+        fill the next cold spare from the NEW primary and install it as
+        the fresh standby, so a second failure can promote again. A spare
+        that dies during its fill is dropped (``standbys_lost``) and the
+        next one is tried; a fill failing because the new primary is
+        ALREADY dead just drains spares onto a doomed member — the next
+        request discovers the corpse either way, and losing spares is
+        safe where losing acknowledged writes is not."""
+        while self._spares[p]:
+            spare = self._spares[p].popleft()
+            try:
+                self._attach_standby_locked(p, spare)
+            except (RemoteKBError, ConnectionError, OSError, RuntimeError):
+                self._bump("standbys_lost")
+                try:
+                    spare.close()
+                except Exception:
+                    pass
+                continue
+            self._bump("spares_attached")
+            return
 
     # -- fan-out plumbing --------------------------------------------------
 
@@ -577,6 +608,49 @@ class KBRouter:
 
     # -- fleet operations --------------------------------------------------
 
+    def _check_standby_geometry(self, p: int, transport: Transport,
+                                role: str) -> None:
+        """Shared admission checks for standbys and spares: partition
+        exists, row count matches the primary's physical layout, dim
+        matches, and any handshake label agrees with the slot."""
+        r = self._routing
+        P = len(r.members)
+        if not 0 <= p < P:
+            raise ValueError(f"no partition {p} in a {P}-member fleet")
+        rows = len(r.member_gids[p])
+        if int(transport.num_entries) != rows:
+            raise ValueError(
+                f"{role} for partition {p} serves {transport.num_entries} "
+                f"rows, primary holds {rows}")
+        if int(transport.dim) != self.dim:
+            raise ValueError(
+                f"{role} dim {transport.dim} != {self.dim}")
+        label = getattr(transport, "partition", "")
+        if label and label != f"{p}/{P}":
+            raise ValueError(
+                f"{role} identifies as partition {label!r}, "
+                f"expected '{p}/{P}' (or unlabeled)")
+
+    def _attach_standby_locked(self, p: int, transport: Transport, *,
+                               fill: bool = True,
+                               chunk_rows: int = 1024) -> None:
+        """Install ``transport`` as ``p``'s standby (slot lock HELD).
+        With ``fill`` the standby is first made bit-identical by
+        streaming every row's leaves from the current primary — the held
+        slot lock guarantees no write slips between the fill and the
+        first tee."""
+        rows = len(self._routing.member_gids[p])
+        if fill:
+            primary = self._routing.members[p]
+            for lo in range(0, rows, chunk_rows):
+                lids = np.arange(lo, min(lo + chunk_rows, rows),
+                                 dtype=np.int64)
+                leaves = primary.request(ExportRowsRequest(lids)).leaves
+                transport.request(ImportRowsRequest(lids, leaves))
+        self._tails[p] = deque()
+        self._seqs[p] = 0
+        self._standbys[p] = transport
+
     def attach_standby(self, p: int, transport: Transport, *,
                        fill: bool = True, chunk_rows: int = 1024) -> None:
         """Attach ``transport`` as partition ``p``'s standby. With
@@ -586,40 +660,31 @@ class KBRouter:
         can slip between the fill and the first tee. A ``--replica-of``
         standby arrives pre-filled from its own boot copy; the re-fill
         closes the gap between its boot and this attach."""
-        r = self._routing
-        P = len(r.members)
-        if not 0 <= p < P:
-            raise ValueError(f"no partition {p} in a {P}-member fleet")
-        rows = len(r.member_gids[p])
-        if int(transport.num_entries) != rows:
-            raise ValueError(
-                f"standby for partition {p} serves {transport.num_entries} "
-                f"rows, primary holds {rows}")
-        if int(transport.dim) != self.dim:
-            raise ValueError(
-                f"standby dim {transport.dim} != {self.dim}")
-        label = getattr(transport, "partition", "")
-        if label and label != f"{p}/{P}":
-            raise ValueError(
-                f"standby identifies as partition {label!r}, "
-                f"expected '{p}/{P}' (or unlabeled)")
+        self._check_standby_geometry(p, transport, "standby")
         with self._slot_locks[p]:
             if self._standbys[p] is not None:
                 raise ValueError(f"partition {p} already has a standby")
-            if fill:
-                primary = self._routing.members[p]
-                for lo in range(0, rows, chunk_rows):
-                    lids = np.arange(lo, min(lo + chunk_rows, rows),
-                                     dtype=np.int64)
-                    leaves = primary.request(ExportRowsRequest(lids)).leaves
-                    transport.request(ImportRowsRequest(lids, leaves))
-            self._tails[p] = deque()
-            self._seqs[p] = 0
-            self._standbys[p] = transport
+            self._attach_standby_locked(p, transport, fill=fill,
+                                        chunk_rows=chunk_rows)
+
+    def add_spare(self, p: int, transport: Transport) -> None:
+        """Queue ``transport`` in partition ``p``'s COLD spare pool.
+        Spares receive no fill and no tee while queued; the router fills
+        one (from the then-current primary, under the slot lock) the
+        moment a promotion empties the standby slot — see
+        ``_reattach_spare_locked``. Geometry is validated on admission so
+        a mis-sized spare fails here, not during an emergency."""
+        self._check_standby_geometry(p, transport, "spare")
+        with self._slot_locks[p]:
+            self._spares[p].append(transport)
 
     def standby_status(self) -> List[bool]:
         """Which members currently have a live standby attached."""
         return [sb is not None for sb in self._standbys]
+
+    def spare_status(self) -> List[int]:
+        """Cold (queued, unattached) spares per member."""
+        return [len(q) for q in self._spares]
 
     def reshard(self, new_transport: Transport, *,
                 chunk_rows: int = 1024) -> dict:
@@ -695,6 +760,7 @@ class KBRouter:
                         for p in range(P)) + (np.empty(0, np.int64),)
                     self._slot_locks.append(threading.Lock())
                     self._standbys.append(None)
+                    self._spares.append(deque())
                     self._tails.append(deque())
                     self._seqs.append(0)
                     if self._pool is None:
@@ -803,6 +869,7 @@ class KBRouter:
             router = dict(self.router_metrics)
         router["partitions"] = len(per)
         router["standbys"] = sum(sb is not None for sb in self._standbys)
+        router["spares"] = sum(len(q) for q in self._spares)
         return {
             "metrics": metrics,
             "mean_staleness": stale / served,
@@ -862,7 +929,8 @@ class KBRouter:
                                  "coalescing_factor": 0.0, "maker_stats": {},
                                  "partitions": [], "router": {}}
         for t in (list(self._routing.members)
-                  + [sb for sb in self._standbys if sb is not None]):
+                  + [sb for sb in self._standbys if sb is not None]
+                  + [sp for q in self._spares for sp in q]):
             try:
                 t.close()
             except Exception:

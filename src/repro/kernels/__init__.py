@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the perf-critical compute layers, each with a
-pure-jnp oracle in ref.py and a jitted wrapper in ops.py (interpret=True on
-CPU; pass interpret=False on real TPUs):
+pure-jnp oracle in ref.py and a jitted wrapper in ops.py. Interpret-vs-
+compiled mode, block sizes, and the VMEM budget come from the process-wide
+``KernelConfig`` (repro.env): on CPU kernels run in interpret mode; with an
+accelerator backend they compile, no per-call flag needed.
 
 - nn_search        : blocked top-k MIPS over a bank shard (ScaNN -> MXU)
 - flash_attention  : block-triangular causal/windowed flash attention

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +23,7 @@ import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.compat import CompilerParams
+from repro.env import resolve_interpret
 
 NEG = -1e30
 
@@ -82,9 +84,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
                            softcap: float = 0.0, q_block: int = 128,
-                           kv_block: int = 128, interpret: bool = True):
+                           kv_block: int = 128,
+                           interpret: Optional[bool] = None):
     """q/k/v: (BH, S, d) with heads flattened into the batch dim.
-    Returns (BH, S, d)."""
+    Returns (BH, S, d). ``interpret`` defaults to the process
+    `KernelConfig` (repro.env)."""
+    interpret = resolve_interpret(interpret)
     BH, S, d = q.shape
     qb = min(q_block, S)
     kb = min(kv_block, S)

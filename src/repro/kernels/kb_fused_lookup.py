@@ -26,6 +26,7 @@ every occurrence reads the same updated row.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +34,7 @@ import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.compat import CompilerParams
+from repro.env import fused_lookup_block, resolve_interpret
 
 
 def _fused_kernel(ids_ref, tbl_ref, gsum_ref, gcnt_ref, gsq_ref,
@@ -81,14 +83,22 @@ def _fused_kernel(ids_ref, tbl_ref, gsum_ref, gcnt_ref, gsq_ref,
 
 def kb_fused_lookup_pallas(table, grad_sum, grad_cnt, grad_sqnorm, ids, *,
                            lazy_lr: float = 0.1, zmax: float = 3.0,
-                           n_block: int = 512, interpret: bool = True):
+                           n_block: Optional[int] = None,
+                           interpret: Optional[bool] = None):
     """table/grad_sum: (N, D); grad_cnt/grad_sqnorm: (N,); ids: (B,) int32.
 
     Returns (vals (B, D) f32, new_table, new_grad_sum, new_grad_cnt,
     new_grad_sqnorm) — ``kb_lookup(..., apply_pending=True)`` semantics for
-    everything except the version counter (bumped by the caller)."""
+    everything except the version counter (bumped by the caller).
+    ``interpret``/``n_block`` default to the process `KernelConfig`
+    (repro.env); the bank tile shrinks with the batch so the (B, n_block)
+    one-hot + (B, D) accumulator stay inside the VMEM budget (legal tiles
+    for serving batches > 4k ids)."""
+    interpret = resolve_interpret(interpret)
     N, D = table.shape
     B = ids.shape[0]
+    if n_block is None:
+        n_block = fused_lookup_block(B, D)
     nb = min(n_block, N)
     Bp = -(-B // 8) * 8
     Np = -(-N // nb) * nb
@@ -198,16 +208,22 @@ def _fused_kernel_q(ids_ref, tbl_ref, scl_ref, off_ref, gsum_ref, gcnt_ref,
 
 def kb_fused_lookup_q_pallas(table, qscale, qoffset, grad_sum, grad_cnt,
                              grad_sqnorm, ids, *, lazy_lr: float = 0.1,
-                             zmax: float = 3.0, n_block: int = 512,
-                             interpret: bool = True):
+                             zmax: float = 3.0,
+                             n_block: Optional[int] = None,
+                             interpret: Optional[bool] = None):
     """Quantized fused lookup. table: (N, D) int8 codes; qscale/qoffset:
     (N,) f32 per-row affine; caches as in ``kb_fused_lookup_pallas``.
 
     Returns (vals (B, D) f32, new_table int8, new_qscale, new_qoffset,
     new_grad_sum, new_grad_cnt, new_grad_sqnorm) — ``kb_lookup_q``
-    semantics except the version counter (bumped by the caller)."""
+    semantics except the version counter (bumped by the caller).
+    ``interpret``/``n_block`` resolve from the process `KernelConfig`
+    exactly as in ``kb_fused_lookup_pallas``."""
+    interpret = resolve_interpret(interpret)
     N, D = table.shape
     B = ids.shape[0]
+    if n_block is None:
+        n_block = fused_lookup_block(B, D)
     nb = min(n_block, N)
     Bp = -(-B // 8) * 8
     Np = -(-N // nb) * nb

@@ -11,6 +11,7 @@ the stream. Grid: (id blocks, bank tiles); accumulator in VMEM scratch.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +19,7 @@ import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.compat import CompilerParams
+from repro.env import fit_block_rows, kernel_config, resolve_interpret
 
 
 def _gather_kernel(ids_ref, bank_ref, o_ref, acc_ref, *, n_block: int):
@@ -42,12 +44,22 @@ def _gather_kernel(ids_ref, bank_ref, o_ref, acc_ref, *, n_block: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def kb_gather_pallas(table, ids, *, id_block: int = 256, n_block: int = 512,
-                     interpret: bool = True):
-    """table: (N, D); ids: (B,) int32 -> (B, D)."""
+def kb_gather_pallas(table, ids, *, id_block: int = 256,
+                     n_block: Optional[int] = None,
+                     interpret: Optional[bool] = None):
+    """table: (N, D); ids: (B,) int32 -> (B, D). ``interpret``/``n_block``
+    default to the process `KernelConfig` (repro.env); the bank tile is
+    fitted so the (id_block, n_block) one-hot stays inside the VMEM
+    budget."""
+    interpret = resolve_interpret(interpret)
     N, D = table.shape
     B = ids.shape[0]
     ib = min(id_block, B)
+    if n_block is None:
+        # one-hot is (ib, nb): charge ib floats per bank row on top of the
+        # streamed (nb, D) tile
+        n_block = fit_block_rows(D + ib, want=kernel_config().block_ids,
+                                 n_arrays=2, fixed_bytes=ib * D * 4)
     nb = min(n_block, N)
     Bp = -(-B // ib) * ib
     Np = -(-N // nb) * nb

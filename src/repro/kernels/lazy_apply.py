@@ -10,6 +10,7 @@ Grid: row blocks (fully parallel); everything fits a VMEM tile.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +18,7 @@ import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.compat import CompilerParams
+from repro.env import fit_block_rows, resolve_interpret
 
 
 def _lazy_apply_kernel(tbl_ref, gsum_ref, gcnt_ref, gsq_ref,
@@ -43,10 +45,16 @@ def _lazy_apply_kernel(tbl_ref, gsum_ref, gcnt_ref, gsq_ref,
 
 def lazy_apply_pallas(table, grad_sum, grad_cnt, grad_sqnorm, *,
                       lazy_lr: float = 0.1, zmax: float = 3.0,
-                      row_block: int = 256, interpret: bool = True):
+                      row_block: Optional[int] = None,
+                      interpret: Optional[bool] = None):
     """table: (N, D); grad_sum: (N, D) f32; grad_cnt/grad_sqnorm: (N,) f32.
-    Returns (new_table, zeroed grad_sum/cnt/sqnorm) — kb_flush semantics."""
+    Returns (new_table, zeroed grad_sum/cnt/sqnorm) — kb_flush semantics.
+    ``interpret``/``row_block`` default to the process `KernelConfig`
+    (repro.env); the row tile is VMEM-fitted (4 in + 4 out streams)."""
+    interpret = resolve_interpret(interpret)
     N, D = table.shape
+    if row_block is None:
+        row_block = fit_block_rows(D, n_arrays=8)
     rb = min(row_block, N)
     Np = -(-N // rb) * rb
     pad = lambda a: jnp.pad(a, ((0, Np - N),) + ((0, 0),) * (a.ndim - 1))

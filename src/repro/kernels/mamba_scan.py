@@ -13,6 +13,7 @@ O(S * di * ds) to O(S * di) — a factor of ds (= 16).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +21,7 @@ import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.compat import CompilerParams
+from repro.env import resolve_interpret
 
 
 def _mamba_kernel(delta_ref, bm_ref, cm_ref, x_ref, a_ref, o_ref, h_ref, *,
@@ -51,9 +53,12 @@ def _mamba_kernel(delta_ref, bm_ref, cm_ref, x_ref, a_ref, o_ref, h_ref, *,
 
 
 def mamba_scan_pallas(delta, bm, cm, x, A, *, di_block: int = 512,
-                      seq_block: int = 256, interpret: bool = True):
+                      seq_block: int = 256,
+                      interpret: Optional[bool] = None):
     """delta/x: (B, S, di); bm/cm: (B, S, ds); A: (di, ds).
-    Returns y: (B, S, di) f32 (the SSM output before D-skip/gating)."""
+    Returns y: (B, S, di) f32 (the SSM output before D-skip/gating).
+    ``interpret`` defaults to the process `KernelConfig` (repro.env)."""
+    interpret = resolve_interpret(interpret)
     B, S, di = delta.shape
     ds = bm.shape[-1]
     db = min(di_block, di)

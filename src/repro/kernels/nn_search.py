@@ -15,6 +15,7 @@ D<=1024 stays well under 16 MB.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +23,7 @@ import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.compat import CompilerParams
+from repro.env import fit_block_rows, resolve_interpret
 
 NEG = -1e30
 
@@ -95,10 +97,17 @@ def _nn_kernel(q_ref, bank_ref, os_ref, oi_ref, bs_ref, bi_ref, *, k: int,
 
 
 def nn_search_pallas(queries, bank, k: int, *, q_block: int = 128,
-                     n_block: int = 256, interpret: bool = True):
-    """queries: (B, D); bank: (N, D) -> (scores (B, k), ids (B, k))."""
+                     n_block: Optional[int] = None,
+                     interpret: Optional[bool] = None):
+    """queries: (B, D); bank: (N, D) -> (scores (B, k), ids (B, k)).
+
+    ``interpret``/``n_block`` default to the process `KernelConfig`
+    (repro.env); the bank tile is VMEM-fitted against the budget."""
+    interpret = resolve_interpret(interpret)
     B, D = queries.shape
     N = bank.shape[0]
+    if n_block is None:
+        n_block = fit_block_rows(D, n_arrays=2)
     qb = min(q_block, B)
     nb = min(n_block, N)
     # pad to block multiples

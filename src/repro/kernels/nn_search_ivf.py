@@ -24,6 +24,19 @@ Because a row lives in exactly one bucket and probes are per-query, the
 result is a pure function of (index, table, query) — coalescing a batch of
 IVF searches into one call is deterministic, same as the exact path.
 
+Skew-proofing: buckets are padded to the COMMON capacity ``cap``, so on a
+skewed bank most chunks of most buckets are pure padding — work the
+max-bucket layout forces on every probe. ``ivf_chunk_plan`` fixes this
+through the same scalar-prefetch table: given the per-bucket occupancy
+(``bucket_occ``, carried by the index since the packer fills each bucket
+front-to-back), it compacts each query's OCCUPIED chunks to the front of
+its selector row, repeats the last valid chunk index over the tail (a
+repeated block index is not re-fetched — the pipeline skips the DMA), and
+hands the kernel a per-query valid count; the merge body is skipped with
+``pl.when`` past it. Results are bit-identical to the dense plan — skipped
+chunks contain only NEG-masked padding that can never enter the top-k —
+but FLOPs (and on device, DMAs) scale with occupancy instead of capacity.
+
 Final step: the k winners are re-scored against the LIVE table (a (B*k)-row
 gather, negligible) so returned scores are exact for the rows found even
 when the index snapshot has gone stale — stale assignments only cost
@@ -32,6 +45,7 @@ recall, never score accuracy.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,9 +53,52 @@ import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.compat import CompilerParams
+from repro.env import resolve_interpret
 from repro.kernels.nn_search import NEG, _merge_topk
 
 _IMAX = jnp.iinfo(jnp.int32).max
+
+
+def _chunk_rows(bucket_cap: int, block: int) -> int:
+    """Stage-2 chunk size: buckets are pow2 (< 128) or multiples of 128
+    (see ann_index.build_ivf_index); pick the largest 128-multiple divisor
+    of the capacity that fits the requested block."""
+    if bucket_cap < 128:
+        return bucket_cap
+    m = bucket_cap // 128
+    return 128 * max((d for d in range(1, m + 1)
+                      if m % d == 0 and 128 * d <= block), default=1)
+
+
+def ivf_chunk_plan(probes, bucket_occ, cpb: int, lb: int):
+    """Per-query chunk schedule for the stage-2 grid.
+
+    probes: (B, nprobe) bucket ids; bucket_occ: (C,) rows actually packed
+    into each bucket (None = assume every bucket full). Returns
+    ``(sel (B, nprobe*cpb) int32, nvalid (B,) int32)`` where ``sel`` holds
+    each query's occupied chunk indices compacted to the front (the tail
+    repeats the last valid chunk — same block index, so the pipeline skips
+    the re-fetch) and ``nvalid`` is how many entries the kernel must merge.
+    Bit-identical results to the dense plan by construction: every dropped
+    chunk holds only -1-id padding slots, which score NEG and never win."""
+    B, nprobe = probes.shape
+    n_chunks = nprobe * cpb
+    arange = jnp.arange(cpb, dtype=jnp.int32)
+    cand = (probes[:, :, None] * cpb +
+            arange[None, None, :]).reshape(B, n_chunks).astype(jnp.int32)
+    if bucket_occ is None:
+        return cand, jnp.full((B,), n_chunks, jnp.int32)
+    occ = jnp.asarray(bucket_occ, jnp.int32)[probes]         # (B, nprobe)
+    nch = jnp.minimum((occ + lb - 1) // lb, cpb)             # occupied chunks
+    valid = (arange[None, None, :] < nch[:, :, None]).reshape(B, n_chunks)
+    order = jnp.argsort(jnp.where(valid, 0, 1), axis=1)      # stable: valid
+    sel = jnp.take_along_axis(cand, order, axis=1)           # first, in order
+    nvalid = valid.sum(axis=1).astype(jnp.int32)
+    last = jnp.take_along_axis(sel, jnp.maximum(nvalid - 1, 0)[:, None],
+                               axis=1)
+    j = jnp.arange(n_chunks, dtype=jnp.int32)[None, :]
+    sel = jnp.where(j < nvalid[:, None], sel, last)
+    return sel.astype(jnp.int32), nvalid
 
 
 # ---------------------------------------------------------------------------
@@ -94,9 +151,10 @@ def _rerank_live_q(codes, qscale, qoffset, queries, ids):
 # stage 2, Pallas: scalar-prefetched bucket tiles + running top-k
 # ---------------------------------------------------------------------------
 
-def _ivf_kernel(sel_ref, q_ref, vec_ref, id_ref, os_ref, oi_ref,
+def _ivf_kernel(sel_ref, nv_ref, q_ref, vec_ref, id_ref, os_ref, oi_ref,
                 bs_ref, bi_ref, *, k: int):
     del sel_ref                       # consumed by the index_maps
+    i = pl.program_id(0)
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -104,16 +162,20 @@ def _ivf_kernel(sel_ref, q_ref, vec_ref, id_ref, os_ref, oi_ref,
         bs_ref[...] = jnp.full_like(bs_ref, NEG)
         bi_ref[...] = jnp.full_like(bi_ref, _IMAX)
 
-    q = q_ref[...].astype(jnp.float32)                       # (1, D)
-    v = vec_ref[...].astype(jnp.float32)                     # (LB, D)
-    ids = id_ref[...].reshape(1, -1)                         # (1, LB)
-    scores = jax.lax.dot_general(q, v, (((1,), (1,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
-    scores = jnp.where(ids >= 0, scores, NEG)
-    ids = jnp.where(ids >= 0, ids, _IMAX)
-    bs, bi = _merge_topk(scores, ids, bs_ref[...], bi_ref[...], k)
-    bs_ref[...] = bs
-    bi_ref[...] = bi
+    # merge only this query's occupied chunks (ivf_chunk_plan); past-valid
+    # steps re-see the last fetched block and skip the work entirely
+    @pl.when(j < nv_ref[i])
+    def _():
+        q = q_ref[...].astype(jnp.float32)                   # (1, D)
+        v = vec_ref[...].astype(jnp.float32)                 # (LB, D)
+        ids = id_ref[...].reshape(1, -1)                     # (1, LB)
+        scores = jax.lax.dot_general(q, v, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        scores = jnp.where(ids >= 0, scores, NEG)
+        ids = jnp.where(ids >= 0, ids, _IMAX)
+        bs, bi = _merge_topk(scores, ids, bs_ref[...], bi_ref[...], k)
+        bs_ref[...] = bs
+        bi_ref[...] = bi
 
     @pl.when(j == pl.num_programs(1) - 1)
     def _():
@@ -122,39 +184,32 @@ def _ivf_kernel(sel_ref, q_ref, vec_ref, id_ref, os_ref, oi_ref,
 
 
 def ivf_stage2_pallas(packed_vecs, packed_ids, queries, probes, k: int, *,
-                      bucket_cap: int, block: int = 256,
-                      interpret: bool = True):
+                      bucket_cap: int, bucket_occ=None, block: int = 256,
+                      interpret: Optional[bool] = None):
     """packed_vecs: (C*cap, D); packed_ids: (C*cap,); queries: (B, D);
-    probes: (B, nprobe) -> (scores (B, k), ids (B, k)), snapshot scores."""
+    probes: (B, nprobe) -> (scores (B, k), ids (B, k)), snapshot scores.
+    ``bucket_occ`` (C,) enables the occupied-chunks-only schedule (see
+    ``ivf_chunk_plan``) — same results, work proportional to occupancy."""
+    interpret = resolve_interpret(interpret)
     B, D = queries.shape
     nprobe = probes.shape[1]
-    # chunk size: buckets are pow2 (< 128) or multiples of 128 (see
-    # ann_index.build_ivf_index); pick the largest 128-multiple divisor of
-    # the capacity that fits the requested block
-    if bucket_cap < 128:
-        lb = bucket_cap
-    else:
-        m = bucket_cap // 128
-        lb = 128 * max((d for d in range(1, m + 1)
-                        if m % d == 0 and 128 * d <= block), default=1)
+    lb = _chunk_rows(bucket_cap, block)
     assert bucket_cap % lb == 0, (bucket_cap, lb)
     cpb = bucket_cap // lb                      # chunks per bucket
     n_chunks = nprobe * cpb
-    # block-selector table: chunk j of query i reads packed block
-    # probes[i, j // cpb] * cpb + j % cpb
-    sel = (probes[:, :, None] * cpb +
-           jnp.arange(cpb, dtype=jnp.int32)[None, None, :]
-           ).reshape(B, n_chunks).astype(jnp.int32)
+    # block-selector table + per-query valid count: chunk j of query i
+    # reads packed block sel[i, j], merging only while j < nvalid[i]
+    sel, nvalid = ivf_chunk_plan(probes, bucket_occ, cpb, lb)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(B, n_chunks),
         in_specs=[
-            pl.BlockSpec((1, D), lambda i, j, sel: (i, 0)),
-            pl.BlockSpec((lb, D), lambda i, j, sel: (sel[i, j], 0)),
-            pl.BlockSpec((lb,), lambda i, j, sel: (sel[i, j],)),
+            pl.BlockSpec((1, D), lambda i, j, sel, nv: (i, 0)),
+            pl.BlockSpec((lb, D), lambda i, j, sel, nv: (sel[i, j], 0)),
+            pl.BlockSpec((lb,), lambda i, j, sel, nv: (sel[i, j],)),
         ],
-        out_specs=[pl.BlockSpec((1, k), lambda i, j, sel: (i, 0)),
-                   pl.BlockSpec((1, k), lambda i, j, sel: (i, 0))],
+        out_specs=[pl.BlockSpec((1, k), lambda i, j, sel, nv: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i, j, sel, nv: (i, 0))],
         scratch_shapes=[pltpu.VMEM((1, k), jnp.float32),
                         pltpu.VMEM((1, k), jnp.int32)],
     )
@@ -166,19 +221,19 @@ def ivf_stage2_pallas(packed_vecs, packed_ids, queries, probes, k: int, *,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(sel, queries, packed_vecs, packed_ids)
+    )(sel, nvalid, queries, packed_vecs, packed_ids)
 
 
 def ivf_search_pallas(table, centroids, packed_vecs, packed_ids, queries,
-                      k: int, nprobe: int, *, block: int = 256,
-                      interpret: bool = True):
+                      k: int, nprobe: int, *, bucket_occ=None,
+                      block: int = 256, interpret: Optional[bool] = None):
     """Full two-stage IVF search, Pallas stage 2. Returns (scores, ids)
     with live (re-ranked) scores; padding slots are (-inf, -1)."""
     bucket_cap = packed_vecs.shape[0] // centroids.shape[0]
     probes = ivf_probes(queries, centroids, nprobe)
     _, ids = ivf_stage2_pallas(packed_vecs, packed_ids, queries, probes, k,
-                               bucket_cap=bucket_cap, block=block,
-                               interpret=interpret)
+                               bucket_cap=bucket_cap, bucket_occ=bucket_occ,
+                               block=block, interpret=interpret)
     return _rerank_live(table, queries, ids)
 
 
@@ -186,13 +241,14 @@ def ivf_search_pallas(table, centroids, packed_vecs, packed_ids, queries,
 # stage 2, Pallas, quantized: int8 bucket tiles with fused dequant scoring
 # ---------------------------------------------------------------------------
 
-def _ivf_kernel_q(sel_ref, q_ref, vec_ref, scl_ref, off_ref, id_ref,
+def _ivf_kernel_q(sel_ref, nv_ref, q_ref, vec_ref, scl_ref, off_ref, id_ref,
                   os_ref, oi_ref, bs_ref, bi_ref, *, k: int):
     """The stage-2 merge over int8 bucket tiles. Never dequantizes the
     (LB, D) tile: scores via ``s * (q . c) + o * sum(q)`` — the exact
     decomposition of q against the dequantized rows, fused into the MXU
     dot + one VPU fixup."""
     del sel_ref
+    i = pl.program_id(0)
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -200,19 +256,21 @@ def _ivf_kernel_q(sel_ref, q_ref, vec_ref, scl_ref, off_ref, id_ref,
         bs_ref[...] = jnp.full_like(bs_ref, NEG)
         bi_ref[...] = jnp.full_like(bi_ref, _IMAX)
 
-    q = q_ref[...].astype(jnp.float32)                       # (1, D)
-    c = vec_ref[...].astype(jnp.float32)                     # (LB, D) codes
-    scl = scl_ref[...].reshape(1, -1)                        # (1, LB)
-    off = off_ref[...].reshape(1, -1)
-    ids = id_ref[...].reshape(1, -1)                         # (1, LB)
-    raw = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
-                              preferred_element_type=jnp.float32)
-    scores = raw * scl + jnp.sum(q) * off
-    scores = jnp.where(ids >= 0, scores, NEG)
-    ids = jnp.where(ids >= 0, ids, _IMAX)
-    bs, bi = _merge_topk(scores, ids, bs_ref[...], bi_ref[...], k)
-    bs_ref[...] = bs
-    bi_ref[...] = bi
+    @pl.when(j < nv_ref[i])
+    def _():
+        q = q_ref[...].astype(jnp.float32)                   # (1, D)
+        c = vec_ref[...].astype(jnp.float32)                 # (LB, D) codes
+        scl = scl_ref[...].reshape(1, -1)                    # (1, LB)
+        off = off_ref[...].reshape(1, -1)
+        ids = id_ref[...].reshape(1, -1)                     # (1, LB)
+        raw = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        scores = raw * scl + jnp.sum(q) * off
+        scores = jnp.where(ids >= 0, scores, NEG)
+        ids = jnp.where(ids >= 0, ids, _IMAX)
+        bs, bi = _merge_topk(scores, ids, bs_ref[...], bi_ref[...], k)
+        bs_ref[...] = bs
+        bi_ref[...] = bi
 
     @pl.when(j == pl.num_programs(1) - 1)
     def _():
@@ -222,36 +280,31 @@ def _ivf_kernel_q(sel_ref, q_ref, vec_ref, scl_ref, off_ref, id_ref,
 
 def ivf_stage2_quantized_pallas(packed_codes, packed_scale, packed_offset,
                                 packed_ids, queries, probes, k: int, *,
-                                bucket_cap: int, block: int = 256,
-                                interpret: bool = True):
+                                bucket_cap: int, bucket_occ=None,
+                                block: int = 256,
+                                interpret: Optional[bool] = None):
     """``ivf_stage2_pallas`` over a quantized index: packed_codes
     (C*cap, D) int8, packed_scale/packed_offset (C*cap,) f32. Snapshot
     scores are exact w.r.t. the quantized rows."""
+    interpret = resolve_interpret(interpret)
     B, D = queries.shape
     nprobe = probes.shape[1]
-    if bucket_cap < 128:
-        lb = bucket_cap
-    else:
-        m = bucket_cap // 128
-        lb = 128 * max((d for d in range(1, m + 1)
-                        if m % d == 0 and 128 * d <= block), default=1)
+    lb = _chunk_rows(bucket_cap, block)
     assert bucket_cap % lb == 0, (bucket_cap, lb)
     cpb = bucket_cap // lb
     n_chunks = nprobe * cpb
-    sel = (probes[:, :, None] * cpb +
-           jnp.arange(cpb, dtype=jnp.int32)[None, None, :]
-           ).reshape(B, n_chunks).astype(jnp.int32)
-    flat = pl.BlockSpec((lb,), lambda i, j, sel: (sel[i, j],))
+    sel, nvalid = ivf_chunk_plan(probes, bucket_occ, cpb, lb)
+    flat = pl.BlockSpec((lb,), lambda i, j, sel, nv: (sel[i, j],))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(B, n_chunks),
         in_specs=[
-            pl.BlockSpec((1, D), lambda i, j, sel: (i, 0)),
-            pl.BlockSpec((lb, D), lambda i, j, sel: (sel[i, j], 0)),
+            pl.BlockSpec((1, D), lambda i, j, sel, nv: (i, 0)),
+            pl.BlockSpec((lb, D), lambda i, j, sel, nv: (sel[i, j], 0)),
             flat, flat, flat,
         ],
-        out_specs=[pl.BlockSpec((1, k), lambda i, j, sel: (i, 0)),
-                   pl.BlockSpec((1, k), lambda i, j, sel: (i, 0))],
+        out_specs=[pl.BlockSpec((1, k), lambda i, j, sel, nv: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i, j, sel, nv: (i, 0))],
         scratch_shapes=[pltpu.VMEM((1, k), jnp.float32),
                         pltpu.VMEM((1, k), jnp.int32)],
     )
@@ -263,13 +316,15 @@ def ivf_stage2_quantized_pallas(packed_codes, packed_scale, packed_offset,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(sel, queries, packed_codes, packed_scale, packed_offset, packed_ids)
+    )(sel, nvalid, queries, packed_codes, packed_scale, packed_offset,
+      packed_ids)
 
 
 def ivf_search_quantized_pallas(table_codes, qscale, qoffset, centroids,
                                 packed_codes, packed_scale, packed_offset,
                                 packed_ids, queries, k: int, nprobe: int, *,
-                                block: int = 256, interpret: bool = True):
+                                bucket_occ=None, block: int = 256,
+                                interpret: Optional[bool] = None):
     """Two-stage IVF search where BOTH the snapshot and the live bank are
     int8: quantized stage-2 shortlist, live re-rank against the dequantized
     winner rows (``_rerank_live_q``)."""
@@ -277,8 +332,135 @@ def ivf_search_quantized_pallas(table_codes, qscale, qoffset, centroids,
     probes = ivf_probes(queries, centroids, nprobe)
     _, ids = ivf_stage2_quantized_pallas(
         packed_codes, packed_scale, packed_offset, packed_ids, queries,
-        probes, k, bucket_cap=bucket_cap, block=block, interpret=interpret)
+        probes, k, bucket_cap=bucket_cap, bucket_occ=bucket_occ,
+        block=block, interpret=interpret)
     return _rerank_live_q(table_codes, qscale, qoffset, queries, ids)
+
+
+# ---------------------------------------------------------------------------
+# stage 2, Pallas, sharded: per-shard shortlists in one grid
+# ---------------------------------------------------------------------------
+
+def _ivf_kernel_sharded(sel_ref, nv_ref, q_ref, vec_ref, id_ref,
+                        os_ref, oi_ref, bs_ref, bi_ref, *, k: int,
+                        chunks_per_shard: int):
+    """The dense stage-2 kernel walked shard-major: grid axis 1 covers
+    every shard's chunks back to back; the running top-k scratch resets at
+    each shard's first chunk and flushes to that shard's (1, 1, k) output
+    slot at its last — per-(query, shard) shortlists in ONE pallas_call."""
+    del sel_ref
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    r = j % chunks_per_shard                 # chunk step within the shard
+    s = j // chunks_per_shard
+
+    @pl.when(r == 0)
+    def _():
+        bs_ref[...] = jnp.full_like(bs_ref, NEG)
+        bi_ref[...] = jnp.full_like(bi_ref, _IMAX)
+
+    @pl.when(r < nv_ref[i, s])
+    def _():
+        q = q_ref[...].astype(jnp.float32)                   # (1, D)
+        v = vec_ref[...].astype(jnp.float32)                 # (LB, D)
+        ids = id_ref[...].reshape(1, -1)                     # (1, LB)
+        scores = jax.lax.dot_general(q, v, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        scores = jnp.where(ids >= 0, scores, NEG)
+        ids = jnp.where(ids >= 0, ids, _IMAX)
+        bs, bi = _merge_topk(scores, ids, bs_ref[...], bi_ref[...], k)
+        bs_ref[...] = bs
+        bi_ref[...] = bi
+
+    @pl.when(r == chunks_per_shard - 1)
+    def _():
+        os_ref[...] = bs_ref[...].reshape(os_ref.shape)
+        oi_ref[...] = bi_ref[...].reshape(oi_ref.shape)
+
+
+def ivf_stage2_sharded_pallas(packed_vecs, packed_ids, queries, probes,
+                              k: int, *, n_shards: int, nlist: int,
+                              bucket_cap: int, bucket_occ=None,
+                              block: int = 256,
+                              interpret: Optional[bool] = None):
+    """Per-shard stage-2 shortlists over a ``ShardedIVFIndex`` layout.
+
+    packed_vecs: (S*C*cap, D) shard-major; probes: (B, S, nprobe) LOCAL
+    bucket ids per shard. Returns (scores (B, S, k), ids (B, S, k)) —
+    snapshot scores, global ids (the packed ids are global), NEG/_IMAX in
+    unfilled slots. ``bucket_occ`` (S*C,) enables the occupied-chunk
+    schedule per shard, exactly as in the dense kernel."""
+    interpret = resolve_interpret(interpret)
+    B, D = queries.shape
+    S, nprobe = probes.shape[1], probes.shape[2]
+    lb = _chunk_rows(bucket_cap, block)
+    assert bucket_cap % lb == 0, (bucket_cap, lb)
+    cpb = bucket_cap // lb
+    cps = nprobe * cpb                       # chunks per shard
+    # globalize the bucket ids (shard s, local b -> s*nlist + b), then the
+    # dense chunk planner runs unchanged on the flattened (B*S, nprobe)
+    gprobes = (probes.astype(jnp.int32) +
+               (jnp.arange(S, dtype=jnp.int32) * nlist)[None, :, None])
+    sel, nvalid = ivf_chunk_plan(gprobes.reshape(B * S, nprobe),
+                                 bucket_occ, cpb, lb)
+    sel = sel.reshape(B, S * cps)
+    nvalid = nvalid.reshape(B, S)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, S * cps),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i, j, sel, nv: (i, 0)),
+            pl.BlockSpec((lb, D), lambda i, j, sel, nv: (sel[i, j], 0)),
+            pl.BlockSpec((lb,), lambda i, j, sel, nv: (sel[i, j],)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, k), lambda i, j, sel, nv: (i, j // cps, 0)),
+            pl.BlockSpec((1, 1, k), lambda i, j, sel, nv: (i, j // cps, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, k), jnp.float32),
+                        pltpu.VMEM((1, k), jnp.int32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_ivf_kernel_sharded, k=k, chunks_per_shard=cps),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, S, k), jnp.float32),
+                   jax.ShapeDtypeStruct((B, S, k), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(sel, nvalid, queries, packed_vecs, packed_ids)
+
+
+def ivf_search_sharded_pallas(table, centroids, packed_vecs, packed_ids,
+                              queries, k: int, nprobe: int, *,
+                              n_shards: int, bucket_occ=None,
+                              block: int = 256,
+                              interpret: Optional[bool] = None):
+    """Pallas counterpart of ``ivf_search_sharded_jnp`` (the bit-identical
+    oracle): per-shard stage-1 probe, ONE sharded stage-2 pallas_call for
+    every shard's shortlist, shard-major hierarchical merge, live re-rank.
+    Single-device — the serving path for a sharded-layout index hosted on
+    one core (the shard_map op remains the multi-device path)."""
+    S = n_shards
+    SC, D = centroids.shape
+    C = SC // S
+    cap = packed_vecs.shape[0] // SC
+    B = queries.shape[0]
+    nprobe = min(nprobe, C)
+    qf = queries.astype(jnp.float32)
+    cent = centroids.reshape(S, C, D)
+    cscore = jnp.einsum("bd,scd->bsc", qf, cent.astype(jnp.float32))
+    _, probes = jax.lax.top_k(cscore, nprobe)               # (B, S, nprobe)
+    ls, li = ivf_stage2_sharded_pallas(
+        packed_vecs, packed_ids, queries, probes.astype(jnp.int32), k,
+        n_shards=S, nlist=C, bucket_cap=cap, bucket_occ=bucket_occ,
+        block=block, interpret=interpret)
+    # hierarchical merge in shard-major order (== the oracle's concat);
+    # _IMAX fill ids score NEG and fall to _rerank_live's invalid branch
+    ls, li = ls.reshape(B, -1), li.reshape(B, -1)
+    _, gsel = jax.lax.top_k(ls, min(k, ls.shape[1]))
+    ids = jnp.take_along_axis(li, gsel, axis=1)
+    return _rerank_live(table, queries, ids)
 
 
 # ---------------------------------------------------------------------------

@@ -1,17 +1,22 @@
 """Jitted public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True (this container is CPU-only; interpret mode
-executes the kernel body with jax ops, validating logic + BlockSpecs). On a
-real TPU pass ``interpret=False`` — the call sites in the model/KB layers
-thread a single flag through.
+Interpret-vs-compiled is decided by the process-wide ``KernelConfig``
+(repro.env): ``interpret=None`` (the default everywhere) resolves to
+interpret mode on CPU and compiled mode when an accelerator backend is
+present. The resolution happens HERE, outside jit — ``interpret`` is a
+static argname, so resolving before entering the traced function means a
+config flip (`set_kernel_config`) recompiles instead of silently reusing a
+stale cached program.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.env import resolve_interpret
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.kb_gather import kb_gather_pallas
 from repro.kernels.nn_search import nn_search_pallas
@@ -19,25 +24,34 @@ from repro.kernels.rwkv_wkv import rwkv_wkv_pallas
 
 
 @partial(jax.jit, static_argnames=("k", "interpret"))
-def nn_search_topk(queries, bank, k: int, interpret: bool = True):
+def _nn_search_topk(queries, bank, k: int, interpret: bool):
     return nn_search_pallas(queries, bank, k, interpret=interpret)
 
 
+def nn_search_topk(queries, bank, k: int, interpret: Optional[bool] = None):
+    return _nn_search_topk(queries, bank, k, resolve_interpret(interpret))
+
+
 @partial(jax.jit, static_argnames=("k", "nprobe", "interpret"))
-def nn_search_ivf(table, centroids, packed_vecs, packed_ids, queries,
-                  k: int, nprobe: int, interpret: bool = True):
-    """Two-stage IVF MIPS over a clustered snapshot (repro.core.ann_index);
-    scores come re-ranked against the live ``table``."""
+def _nn_search_ivf(table, centroids, packed_vecs, packed_ids, queries,
+                   k: int, nprobe: int, interpret: bool):
     from repro.kernels.nn_search_ivf import ivf_search_pallas
     return ivf_search_pallas(table, centroids, packed_vecs, packed_ids,
                              queries, k, nprobe, interpret=interpret)
 
 
+def nn_search_ivf(table, centroids, packed_vecs, packed_ids, queries,
+                  k: int, nprobe: int, interpret: Optional[bool] = None):
+    """Two-stage IVF MIPS over a clustered snapshot (repro.core.ann_index);
+    scores come re-ranked against the live ``table``."""
+    return _nn_search_ivf(table, centroids, packed_vecs, packed_ids,
+                          queries, k, nprobe, resolve_interpret(interpret))
+
+
 @partial(jax.jit, static_argnames=("causal", "window", "softcap",
                                    "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    softcap: float = 0.0, interpret: bool = True):
-    """q/k/v: (B, H, S, d) -> (B, H, S, d)."""
+def _flash_attention(q, k, v, *, causal: bool, window: int,
+                     softcap: float, interpret: bool):
     B, H, S, d = q.shape
     f = lambda a: a.reshape(B * H, S, d)
     out = flash_attention_pallas(f(q), f(k), f(v), causal=causal,
@@ -46,26 +60,53 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return out.reshape(B, H, S, d)
 
 
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, interpret: Optional[bool] = None):
+    """q/k/v: (B, H, S, d) -> (B, H, S, d)."""
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap,
+                            interpret=resolve_interpret(interpret))
+
+
 @partial(jax.jit, static_argnames=("interpret",))
-def kb_gather(table, ids, interpret: bool = True):
+def _kb_gather(table, ids, interpret: bool):
     return kb_gather_pallas(table, ids, interpret=interpret)
 
 
+def kb_gather(table, ids, interpret: Optional[bool] = None):
+    return _kb_gather(table, ids, resolve_interpret(interpret))
+
+
 @partial(jax.jit, static_argnames=("interpret",))
-def rwkv_wkv(r, k, v, w, u, interpret: bool = True):
+def _rwkv_wkv(r, k, v, w, u, interpret: bool):
     return rwkv_wkv_pallas(r, k, v, w, u, interpret=interpret)
 
 
+def rwkv_wkv(r, k, v, w, u, interpret: Optional[bool] = None):
+    return _rwkv_wkv(r, k, v, w, u, resolve_interpret(interpret))
+
+
 @partial(jax.jit, static_argnames=("lazy_lr", "zmax", "interpret"))
-def lazy_apply(table, grad_sum, grad_cnt, grad_sqnorm, *,
-               lazy_lr: float = 0.1, zmax: float = 3.0,
-               interpret: bool = True):
+def _lazy_apply(table, grad_sum, grad_cnt, grad_sqnorm, *,
+                lazy_lr: float, zmax: float, interpret: bool):
     from repro.kernels.lazy_apply import lazy_apply_pallas
     return lazy_apply_pallas(table, grad_sum, grad_cnt, grad_sqnorm,
                              lazy_lr=lazy_lr, zmax=zmax, interpret=interpret)
 
 
+def lazy_apply(table, grad_sum, grad_cnt, grad_sqnorm, *,
+               lazy_lr: float = 0.1, zmax: float = 3.0,
+               interpret: Optional[bool] = None):
+    return _lazy_apply(table, grad_sum, grad_cnt, grad_sqnorm,
+                       lazy_lr=lazy_lr, zmax=zmax,
+                       interpret=resolve_interpret(interpret))
+
+
 @partial(jax.jit, static_argnames=("interpret",))
-def mamba_scan(delta, bm, cm, x, A, interpret: bool = True):
+def _mamba_scan(delta, bm, cm, x, A, interpret: bool):
     from repro.kernels.mamba_scan import mamba_scan_pallas
     return mamba_scan_pallas(delta, bm, cm, x, A, interpret=interpret)
+
+
+def mamba_scan(delta, bm, cm, x, A, interpret: Optional[bool] = None):
+    return _mamba_scan(delta, bm, cm, x, A, resolve_interpret(interpret))

@@ -11,6 +11,7 @@ with the state carried in scratch.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +19,7 @@ import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.compat import CompilerParams
+from repro.env import resolve_interpret
 
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
@@ -50,8 +52,10 @@ def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
 
 
 def rwkv_wkv_pallas(r, k, v, w, u, *, seq_block: int = 512,
-                    interpret: bool = True):
-    """r/k/v/w: (B, S, H, d); u: (H, d) -> (B, S, H, d) float32."""
+                    interpret: Optional[bool] = None):
+    """r/k/v/w: (B, S, H, d); u: (H, d) -> (B, S, H, d) float32.
+    ``interpret`` defaults to the process `KernelConfig` (repro.env)."""
+    interpret = resolve_interpret(interpret)
     B, S, H, d = r.shape
     sb = min(seq_block, S)
     assert S % sb == 0, (S, sb)

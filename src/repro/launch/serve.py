@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import argparse
 import signal
+import sys
 import threading
 import time
 
@@ -55,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
+from repro.env import add_device_args, apply_device_args
 from repro.models import build_model
 from repro.sharding.partition import DistContext
 
@@ -97,15 +99,22 @@ def serve_kb_partitioned(args) -> None:
     if args.kb_replicas:
         # one warm standby per partition, filled through the router's
         # export/import stream and kept in sync by the write tee — the
-        # in-process rehearsal of `serve.py --replica-of`
+        # in-process rehearsal of `serve.py --replica-of`; replicas
+        # beyond the first queue as COLD spares the router fills and
+        # attaches automatically when a promotion empties the slot
         for p in range(P):
-            s = KnowledgeBankServer(int(pmap.counts[p]), args.kb_dim,
-                                    backend=args.kb_backend,
-                                    coalesce=not args.no_coalesce,
-                                    reorder=args.kb_reorder,
-                                    storage=args.kb_storage)
-            standbys.append(s)
-            router.attach_standby(p, InProcessTransport(s), fill=True)
+            for i in range(args.kb_replicas):
+                s = KnowledgeBankServer(int(pmap.counts[p]), args.kb_dim,
+                                        backend=args.kb_backend,
+                                        coalesce=not args.no_coalesce,
+                                        reorder=args.kb_reorder,
+                                        storage=args.kb_storage)
+                standbys.append(s)
+                if i == 0:
+                    router.attach_standby(p, InProcessTransport(s),
+                                          fill=True)
+                else:
+                    router.add_spare(p, InProcessTransport(s))
     for s in servers + standbys:
         s.warmup(args.batch * args.clients)
     router.nn_search(np.zeros((args.batch, args.kb_dim), np.float32), k=8)
@@ -133,7 +142,7 @@ def serve_kb_partitioned(args) -> None:
         s.close()
     m = stats["metrics"]
     print(f"kb-serve partitions={P} backend={args.kb_backend} "
-          f"replicas={int(bool(args.kb_replicas))} "
+          f"replicas={args.kb_replicas} "
           f"reorder={args.kb_reorder} clients={args.clients}: "
           f"{calls / dt:.0f} req/s ({dt / calls * 1e6:.0f} us/req), "
           f"coalescing x{stats['coalescing_factor']:.1f}, "
@@ -392,6 +401,11 @@ def main(argv=None):
                     help="IVF partitions (k-means centroids)")
     ap.add_argument("--nprobe", type=int, default=8,
                     help="IVF partitions probed per query")
+    ap.add_argument("--kb-autotuned", default="", metavar="PATH",
+                    help="load the ANN sweep result written by "
+                         "tools/autotune_ann.py and override "
+                         "--nlist/--nprobe with the winning config for "
+                         "the active --kb-storage mode")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--kb-makers", default="",
                     help="comma list of checkpoint-free maker kinds (e.g. "
@@ -417,12 +431,14 @@ def main(argv=None):
                          "bank and label the handshake I/N (requires "
                          "--listen); routers connect all members with "
                          "--kb-connect host:p0,host:p1,... in ring order")
-    ap.add_argument("--kb-replicas", type=int, default=0, choices=[0, 1],
-                    help="--kb-partitions: give every in-process partition "
-                         "a warm standby attached to the router (filled by "
-                         "row export/import, kept in sync by the write "
-                         "tee); the wire-fleet equivalent is one "
-                         "--replica-of process per member")
+    ap.add_argument("--kb-replicas", type=int, default=0,
+                    help="--kb-partitions: replicas per in-process "
+                         "partition — the first is a warm standby attached "
+                         "to the router (filled by row export/import, kept "
+                         "in sync by the write tee), the rest queue as "
+                         "cold spares auto-attached after a promotion; "
+                         "the wire-fleet equivalent is one --replica-of "
+                         "process per member")
     ap.add_argument("--replica-of", default="", metavar="HOST:PORT",
                     help="boot as the standby of the fleet member at "
                          "HOST:PORT: size to the same --kb-join ring slot, "
@@ -451,9 +467,25 @@ def main(argv=None):
     ap.add_argument("--sock-buf", type=int, default=0,
                     help="--listen: SO_SNDBUF/SO_RCVBUF bytes "
                          "(0 = OS default)")
+    add_device_args(ap)
     args = ap.parse_args(argv)
+    apply_device_args(args)
 
     if args.kb:
+        if args.kb_autotuned:
+            from repro.core.ann_autotune import load_autotune
+            tuned = load_autotune(args.kb_autotuned,
+                                  storage=args.kb_storage)
+            args.kb_search = "ivf"
+            args.nlist, args.nprobe = tuned["nlist"], tuned["nprobe"]
+            print(f"autotuned ANN config ({args.kb_storage}): "
+                  f"nlist={args.nlist} nprobe={args.nprobe} "
+                  f"recall@10={tuned['recall']:.3f}", flush=True)
+            if not tuned.get("meets_floor", True):
+                print("WARNING: no swept config cleared the recall "
+                      "floor; serving the best-recall cell anyway — "
+                      "widen the autotuner grid", file=sys.stderr,
+                      flush=True)
         if args.kb_replicas and args.kb_partitions <= 1:
             ap.error("--kb-replicas pairs with --kb-partitions N (wire "
                      "fleets boot standbys with --replica-of instead)")

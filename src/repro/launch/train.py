@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.checkpoint import DiskCheckpointStore
 from repro.configs import ARCH_IDS, get_config
+from repro.env import add_device_args, apply_device_args
 from repro.core import (format_maker_stats, kb_create,
                         make_carls_train_step, make_embedding_refresh,
                         run_async_training)
@@ -87,7 +88,9 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    add_device_args(ap)
     args = ap.parse_args(argv)
+    apply_device_args(args)
     if args.kb_connect and not args.makers:
         # the sync in-graph loop owns its KBState and never talks to a
         # server — silently training against a local bank while the user

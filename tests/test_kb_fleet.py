@@ -309,6 +309,85 @@ def test_lost_standby_is_dropped_not_fatal():
         _close(srvs + [sb], router)
 
 
+def test_promotion_auto_reattaches_spare_survives_second_kill():
+    """After a promotion the router automatically fills the next COLD
+    spare from the new primary (under the same slot lock) and attaches it
+    as the fresh standby — so a SECOND kill promotes again, and across
+    both kills every acknowledged write survives: the twice-healed fleet
+    is bit-identical to a never-failed reference."""
+    table = _table(N, D)
+    _, ref_srvs, ref = _fleet(N, D, 2, table)
+    plan1, plan2 = FaultPlan(), FaultPlan()
+    pmap, srvs, router = _fleet(N, D, 2, table, plan=plan1)
+    extra = []
+    try:
+        # warm standby (pre-filled, fill=False) wrapped in its OWN plan so
+        # the PROMOTED primary can be killed deterministically later
+        sb = KnowledgeBankServer(int(pmap.counts[0]), D)
+        sb.update(np.arange(int(pmap.counts[0])), table[pmap.global_ids(0)])
+        extra.append(sb)
+        router.attach_standby(
+            0, FaultyTransport(InProcessTransport(sb), plan2), fill=False)
+        # one cold spare, deliberately EMPTY: only the auto-attach fill
+        # can make it bit-identical to the promoted primary
+        sp = KnowledgeBankServer(int(pmap.counts[0]), D)
+        extra.append(sp)
+        router.add_spare(0, InProcessTransport(sp))
+        assert router.spare_status() == [1, 0]
+
+        rng = np.random.default_rng(21)
+
+        def acked_traffic(rounds):
+            for _ in range(rounds):
+                ids = rng.integers(0, N, 6)
+                v = rng.normal(size=(6, D)).astype(np.float32)
+                ref.update(ids, v, src_step=1)
+                router.update(ids, v, src_step=1)
+                g = rng.normal(size=(6, D)).astype(np.float32)
+                ref.lazy_grad(ids, g)
+                router.lazy_grad(ids, g)
+
+        acked_traffic(4)
+        plan1.kill_after_requests = plan1.requests  # primary 0 dies NOW
+        acked_traffic(4)                            # trips promotion #1
+        assert router.router_metrics["promotions"] == 1
+        assert router.router_metrics["spares_attached"] == 1
+        assert router.standby_status() == [True, False]
+        assert router.spare_status() == [0, 0]
+        plan2.kill_after_requests = plan2.requests  # promoted one dies
+        acked_traffic(4)                            # trips promotion #2
+        assert router.router_metrics["promotions"] == 2
+        assert router.standby_status() == [False, False]  # pool exhausted
+        ref.flush()
+        router.flush()
+        np.testing.assert_array_equal(ref.table_snapshot(),
+                                      router.table_snapshot())
+        np.testing.assert_array_equal(ref.lookup(np.arange(N)),
+                                      router.lookup(np.arange(N)))
+        assert router.stats()["router"]["spares_attached"] == 1
+    finally:
+        _close(ref_srvs, ref)
+        _close(srvs + extra, router)
+
+
+def test_add_spare_validates_geometry_and_counts():
+    table = _table(N, D)
+    pmap, srvs, router = _fleet(N, D, 2, table)
+    extra = []
+    try:
+        wrong = KnowledgeBankServer(int(pmap.counts[0]) + 1, D)
+        extra.append(wrong)
+        with pytest.raises(ValueError, match="spare"):
+            router.add_spare(0, InProcessTransport(wrong))
+        ok = KnowledgeBankServer(int(pmap.counts[1]), D)
+        extra.append(ok)
+        router.add_spare(1, InProcessTransport(ok))
+        assert router.spare_status() == [0, 1]
+        assert router.stats()["router"]["spares"] == 1
+    finally:
+        _close(srvs + extra, router)
+
+
 # ---------------------------------------------------------------------------
 # SocketTransport backoff schedule (timing-mocked)
 # ---------------------------------------------------------------------------

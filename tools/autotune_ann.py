@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""ANN autotuner CLI: sweep (nlist, nprobe) x (fp32, int8) on a synthetic
+clustered bank, print the sweep table, and write the winning configs to a
+JSON artifact `serve.py --kb-autotuned` consumes.
+
+  PYTHONPATH=src python tools/autotune_ann.py --out autotune_ann.json
+  PYTHONPATH=src python tools/autotune_ann.py --quick --out /tmp/tune.json
+  PYTHONPATH=src python -m repro.launch.serve --kb --kb-search ivf \
+      --kb-autotuned autotune_ann.json
+
+The sweep measures recall@k against the exact fp32 top-k and picks the
+lowest-latency config clearing --recall-floor per storage mode (see
+repro.core.ann_autotune). --quick shrinks the sweep for CI smoke runs.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _int_list(s: str):
+    return tuple(int(x) for x in s.split(",") if x.strip())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=16384,
+                    help="bank rows (synthetic clustered bank)")
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--centers", type=int, default=64,
+                    help="true clusters in the synthetic bank")
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--nlist", default="32,64,128", type=_int_list,
+                    help="comma list of nlist values to sweep")
+    ap.add_argument("--nprobe", default="4,8,16", type=_int_list,
+                    help="comma list of nprobe values to sweep")
+    ap.add_argument("--recall-floor", type=float, default=0.95)
+    ap.add_argument("--iters", type=int, default=8,
+                    help="k-means iteration ceiling per build")
+    ap.add_argument("--out", default="autotune_ann.json",
+                    help="JSON artifact path (serve.py --kb-autotuned)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny sweep for CI smoke (small bank, 2x2 grid)")
+    ap.add_argument("--seed", type=int, default=0)
+    from repro.env import add_device_args, apply_device_args
+    add_device_args(ap)
+    args = ap.parse_args(argv)
+    apply_device_args(args)
+
+    if args.quick:
+        args.n = min(args.n, 2048)
+        args.queries = min(args.queries, 64)
+        args.nlist = args.nlist[:2]
+        args.nprobe = args.nprobe[:2]
+
+    from repro.core.ann_autotune import save_autotune, sweep_ann
+    from repro.core.ann_index import clustered_bank
+    bank = clustered_bank(args.n, args.dim, args.centers, seed=args.seed)
+    queries = clustered_bank(args.queries, args.dim, args.centers,
+                             seed=args.seed + 1)
+    result = sweep_ann(bank, queries, k=args.k, nlists=args.nlist,
+                       nprobes=args.nprobe,
+                       recall_floor=args.recall_floor, iters=args.iters)
+    print(f"ANN sweep: bank {args.n}x{args.dim}, {args.queries} queries, "
+          f"recall@{args.k} floor {args.recall_floor}")
+    for r in result["results"]:
+        print(f"  {r['storage']:>4} nlist={r['nlist']:>4} "
+              f"nprobe={r['nprobe']:>3} cap={r['bucket_cap']:>4} "
+              f"shortlist={r['shortlist_rows']:>5} "
+              f"recall={r['recall']:.3f} "
+              f"search={r['search_s'] * 1e3:.2f}ms "
+              f"build={r['build_s'] * 1e3:.0f}ms")
+    for storage, win in result["best"].items():
+        floor = "" if win["meets_floor"] else "  (BELOW FLOOR: best recall)"
+        print(f"best[{storage}]: nlist={win['nlist']} "
+              f"nprobe={win['nprobe']} recall={win['recall']:.3f} "
+              f"search={win['search_s'] * 1e3:.2f}ms{floor}")
+    save_autotune(result, args.out)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

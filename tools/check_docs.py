@@ -33,12 +33,16 @@ BENCH_JSON = "BENCH_nn_search.json"
 # what README.md's results table is built from: per-size timing/recall
 # pairs plus the sharded section. Renaming any of these in
 # benchmarks/nn_search_bench.py silently orphans the README numbers.
-BENCH_TOP_KEYS = ("rows", "config", "sizes", "sharded")
+BENCH_TOP_KEYS = ("rows", "config", "sizes", "sharded", "skew", "autotuned")
 BENCH_SIZE_KEYS = ("nlist", "nprobe", "us_exact_ref", "us_ivf_ref",
                    "us_build", "recall_at_10", "ivf_speedup_vs_exact",
                    "us_ivf_int8", "recall_at_10_int8")
 BENCH_SHARDED_KEYS = ("n_shards", "us_sharded_exact", "us_sharded_ivf",
                       "recall_at_10", "ivf_speedup_vs_sharded_exact")
+BENCH_SKEW_KEYS = ("N", "nlist", "occ_min", "occ_max", "chunks_padded",
+                   "chunks_occupied", "work_ratio", "identical")
+BENCH_AUTOTUNE_KEYS = ("nlist", "nprobe", "recall", "search_s",
+                       "meets_floor")
 
 # the scale-out serving numbers docs/tuning.md quotes; the file is only
 # written by a local `benchmarks.run --only kb_serving` (CI's quick bench
@@ -140,6 +144,12 @@ def check_bench_keys(required: bool = False) -> int:
     for n, size in data.get("sizes", {}).items():
         need(size, BENCH_SIZE_KEYS, f"sizes[{n}]")
     need(data.get("sharded", {}), BENCH_SHARDED_KEYS, "sharded")
+    need(data.get("skew", {}), BENCH_SKEW_KEYS, "skew")
+    # docs quote the autotuned fp32 winner and its recall floor; both
+    # storage winners must carry the same operating-point fields
+    for mode in ("fp32", "int8"):
+        need(data.get("autotuned", {}).get(mode, {}),
+             BENCH_AUTOTUNE_KEYS, f"autotuned.{mode}")
     if not failures:
         print(f"ok   {BENCH_JSON} keys")
     return failures
