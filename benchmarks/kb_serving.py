@@ -41,6 +41,13 @@ reorder-on >= 1.2x over FIFO on interleaved lookup/update streams with
 bit-identical results + final table. Everything lands in
 ``BENCH_kb_serving.json`` (validated by ``tools/check_docs.py``).
 
+Mixed rows (ISSUE 10): protocol v4's multiplexed wire. One connection,
+8 threads hammering bulk ``nn_search`` while a 9th times point lookups;
+``kb_serving/mixed/fifo`` delivers responses in request-arrival order (the
+v3 contract) and ``kb_serving/mixed/v4-lanes`` is the multiplexed wire
+(out-of-order completion + weighted priority lanes). Acceptance: lanes
+cuts lookup p99 >= 3x with bit-identical results.
+
 Storage rows (ISSUE 7): int8 rows vs fp32 (memory per row, lookup
 throughput, quantized-IVF recall@10) and a cold-tier run where the bank
 is 4x its resident device tier and must fault rows in on demand.
@@ -364,6 +371,104 @@ def _run_cold_tier(quick: bool, rows: List[Dict], raw: Dict) -> None:
                    f" lookups_correct={correct}"})
 
 
+def _mixed_trial(scheduler: str, hogs: int, hog_calls: int,
+                 look_calls: int, table: np.ndarray):
+    """One mixed-workload run: ``hogs`` threads hammering bulk nn_search
+    while one thread times point lookups, ALL sharing one pipelined wire
+    connection. Returns (p99_ms, p50_ms, lookup_results, nn_results) —
+    the result arrays are compared across schedulers bit-for-bit."""
+    server = KnowledgeBankServer(N, D)
+    server.update(np.arange(N), table)
+    server.warmup(BATCH * CLIENTS)
+    transport = KBTransportServer(server, scheduler=scheduler)
+    remote = RemoteKnowledgeBank("127.0.0.1", transport.port,
+                                 client_name=f"bench-mixed-{scheduler}")
+    remote.lookup(np.arange(BATCH))                        # prime the wire
+    remote.nn_search(table[:64], 32)
+    lat: List[float] = []
+    looks: List[np.ndarray] = []
+    nn_res: List[list] = [[] for _ in range(hogs)]
+    done = threading.Event()
+
+    def hog(h: int) -> None:
+        rng = np.random.default_rng(50 + h)
+        for _ in range(hog_calls):
+            q = table[rng.integers(0, N, (64,))]
+            nn_res[h].append(remote.nn_search(q, 32))
+            # keep hogging until the timed thread finishes, but compare a
+            # guaranteed-deterministic prefix across schedulers
+            if done.is_set() and len(nn_res[h]) >= 3:
+                break
+
+    def looker() -> None:
+        rng = np.random.default_rng(99)
+        for _ in range(look_calls):
+            ids = rng.integers(0, N, (BATCH,))
+            t0 = time.perf_counter()
+            looks.append(remote.lookup(ids))
+            lat.append(time.perf_counter() - t0)
+        done.set()
+
+    threads = [threading.Thread(target=hog, args=(h,)) for h in range(hogs)]
+    timed = threading.Thread(target=looker)
+    for th in threads:
+        th.start()
+    time.sleep(0.05)                   # hogs in flight before timing opens
+    timed.start()
+    timed.join()
+    for th in threads:
+        th.join()
+    remote.close()
+    transport.close()
+    server.close()
+    arr = np.asarray(lat)
+    return (float(np.percentile(arr, 99) * 1e3),
+            float(np.median(arr) * 1e3), looks, nn_res)
+
+
+def _run_mixed(quick: bool, rows: List[Dict], raw: Dict) -> None:
+    """Protocol v4 mixed workload (ISSUE 10): point lookups racing
+    concurrent bulk nn_search on ONE connection. scheduler="fifo" delivers
+    responses in request-arrival order (the v3 contract — a completed
+    lookup response queues behind every earlier-arrived in-flight search),
+    scheduler="lanes" is the v4 multiplexed wire: out-of-order completion
+    + weighted priority lanes let the point response overtake bulk.
+    Acceptance: lanes cuts lookup p99 >= 3x with every result (lookups
+    AND the common prefix of each hog's searches) bit-identical."""
+    hogs = 8
+    hog_calls, look_calls = (6, 120) if quick else (10, 400)
+    table = np.random.default_rng(0).normal(size=(N, D)).astype(np.float32)
+    res = {s: _mixed_trial(s, hogs, hog_calls, look_calls, table)
+           for s in ("fifo", "lanes")}
+    nmin = [min(len(res["fifo"][3][h]), len(res["lanes"][3][h]))
+            for h in range(hogs)]
+    identical = (
+        all(np.array_equal(a, b)
+            for a, b in zip(res["fifo"][2], res["lanes"][2]))
+        and all(np.array_equal(res["fifo"][3][h][i][j],
+                               res["lanes"][3][h][i][j])
+                for h in range(hogs) for i in range(nmin[h])
+                for j in (0, 1)))
+    improvement = res["fifo"][0] / res["lanes"][0]
+    raw["mixed"] = {
+        "hogs": hogs, "look_calls": look_calls,
+        "lookup_p99_ms": {s: res[s][0] for s in ("fifo", "lanes")},
+        "lookup_p50_ms": {s: res[s][1] for s in ("fifo", "lanes")},
+        "p99_improvement": improvement,
+        "bit_identical": bool(identical)}
+    for sched, name in (("fifo", "fifo"), ("lanes", "v4-lanes")):
+        extra = ""
+        if sched == "lanes":
+            extra = (f" p99_improvement={improvement:.2f}x"
+                     f" bit_identical={identical}")
+        rows.append({
+            "name": f"kb_serving/mixed/{name}",
+            "us_per_call": 1e3 * res[sched][0],
+            "derived": f"lookup_p99_ms={res[sched][0]:.2f}"
+                       f" lookup_p50_ms={res[sched][1]:.2f}"
+                       f" nn_hogs={hogs}{extra}"})
+
+
 def run(quick: bool = False) -> List[Dict]:
     calls = 30 if quick else 120
     table = np.random.default_rng(0).normal(size=(N, D)).astype(np.float32)
@@ -418,6 +523,7 @@ def run(quick: bool = False) -> List[Dict]:
     _run_cold_tier(quick, rows, raw)
     _run_scaleout(quick, rows, raw)
     _run_reorder(quick, rows, raw)
+    _run_mixed(quick, rows, raw)
     with open("BENCH_kb_serving.json", "w") as f:
         json.dump({"rows": rows, **raw}, f, indent=2)
     return rows

@@ -34,10 +34,12 @@ from repro.core.async_runtime import (AsyncRunResult, KBServerClosedError,
                                       KnowledgeBankServer, MakerJob,
                                       MakerRuntime, SharedFeatureStore,
                                       format_maker_stats, run_async_training)
-from repro.core.kb_protocol import (PROTOCOL_VERSION, ExportRowsRequest,
+from repro.core.kb_protocol import (LANE_BULK, LANE_CONTROL, LANE_POINT,
+                                    PROTOCOL_VERSION, AttachSpareRequest,
+                                    ExportRowsRequest,
                                     ImportRowsRequest, InProcessTransport,
                                     KBClient, PromoteRequest, ProtocolError,
-                                    RemoteKBError, Transport)
+                                    RemoteKBError, Transport, lane_of)
 from repro.core.kb_transport import (FaultPlan, FaultyTransport,
                                      KBTransportServer, RemoteKnowledgeBank,
                                      SocketTransport, TransportError,
@@ -67,9 +69,10 @@ __all__ = [
     "AsyncRunResult", "KBServerClosedError", "KnowledgeBankServer",
     "MakerJob", "MakerRuntime", "SharedFeatureStore", "format_maker_stats",
     "run_async_training",
-    "PROTOCOL_VERSION", "ExportRowsRequest", "ImportRowsRequest",
+    "LANE_BULK", "LANE_CONTROL", "LANE_POINT", "PROTOCOL_VERSION",
+    "AttachSpareRequest", "ExportRowsRequest", "ImportRowsRequest",
     "InProcessTransport", "KBClient", "PromoteRequest", "ProtocolError",
-    "RemoteKBError", "Transport",
+    "RemoteKBError", "Transport", "lane_of",
     "FaultPlan", "FaultyTransport", "KBTransportServer",
     "RemoteKnowledgeBank", "SocketTransport", "TransportError",
     "parse_hostport",

@@ -93,7 +93,7 @@ class _Request:
     src_step) so staleness accounting happens in execution order."""
 
     __slots__ = ("op", "ids", "payload", "k", "mode", "excl", "shape",
-                 "meta", "event", "result", "error")
+                 "meta", "event", "result", "error", "_callbacks")
 
     def __init__(self, op, ids=None, payload=None, k=None, mode=None,
                  excl=None, shape=None, meta=0):
@@ -102,12 +102,40 @@ class _Request:
         self.event = threading.Event()
         self.result = None
         self.error = None
+        self._callbacks: list = []
 
     def wait(self):
         self.event.wait()
         if self.error is not None:
             raise self.error
         return self.result
+
+    def add_done_callback(self, fn) -> None:
+        """Run ``fn(self)`` once ``result``/``error`` is set — immediately
+        if it already is. The wire transport's out-of-order completion
+        hook (protocol v4): the connection queues the response frame the
+        moment the dispatcher finishes THIS request instead of parking a
+        thread in ``wait()`` per in-flight wire request. Callbacks run on
+        the completing thread (the dispatcher) and must be cheap and
+        non-blocking. Each registered callback fires exactly once."""
+        self._callbacks.append(fn)
+        if self.event.is_set():
+            self._fire_callbacks()
+
+    def _fire_callbacks(self) -> None:
+        # list.pop is atomic under the GIL: when registration races
+        # completion, each callback is popped (hence fired) exactly once,
+        # by whichever side wins. Never lets a callback error escape into
+        # the dispatcher (deliver, don't kill).
+        while self._callbacks:
+            try:
+                cb = self._callbacks.pop()
+            except IndexError:
+                return
+            try:
+                cb(self)
+            except Exception:
+                pass
 
 
 def _mergeable(prev: _Request, r: _Request) -> bool:
@@ -424,6 +452,7 @@ class KnowledgeBankServer:
             for r in stranded:
                 r.error = err
                 r.event.set()
+                r._fire_callbacks()
             raise RuntimeError(
                 f"KB dispatcher did not drain within {timeout_s}s "
                 f"({len(stranded)} stranded requests failed)")
@@ -606,6 +635,7 @@ class KnowledgeBankServer:
         finally:
             for r in run:
                 r.event.set()
+                r._fire_callbacks()
 
     def _cached_lookup(self, ids: np.ndarray) -> np.ndarray:
         """Hot-id LRU read path (see __init__): serve repeats from host

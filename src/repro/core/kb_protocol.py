@@ -38,6 +38,23 @@ control records: ``ExportRowsRequest`` / ``ImportRowsRequest`` stream full
 per-row engine state (every leaf, bit-identical — the replica warm-fill and
 resharding primitive) and ``PromoteRequest`` re-labels a standby's serving
 ring slot when the router promotes it.
+
+v4 makes every connection a multiplexed channel. After the handshake,
+every frame carries a 9-byte mux header between the u32 length prefix and
+the message body: a u64 **request id** (responses echo the request's id,
+so the server may complete them OUT OF ORDER and the client matches by id
+instead of FIFO position) and a u8 **priority lane** (2 bits used:
+control > point > bulk — see ``lane_of``; the server's response scheduler
+and per-lane inflight credits live in ``repro.core.kb_transport``). The
+HANDSHAKE frames themselves (``Hello`` / ``Welcome`` / a pre-``Welcome``
+``ErrorResponse``) intentionally keep the v3 plain framing: that is the
+version gate's compat contract — an old client's ``Hello`` still decodes,
+and the ``version_mismatch`` refusal it gets back is still readable, so
+mixed-version fleets fail loudly instead of desynchronizing on an
+unparseable mux header. v4 also added ``AttachSpareRequest``, the wire
+path for ``KBRouter.add_spare``: a router claims a cold spare's host over
+TCP (the server refuses a second claim for a different slot with kind
+``"spare_conflict"``; promotion clears the claim).
 """
 from __future__ import annotations
 
@@ -46,11 +63,18 @@ from typing import Dict, NamedTuple, Optional, Protocol, Tuple
 
 import numpy as np
 
-PROTOCOL_VERSION = 3
+PROTOCOL_VERSION = 4
 
 # refuse absurd frames before allocating: a corrupt length prefix must fail
 # fast, not OOM the server. 1 GiB comfortably fits any real snapshot.
 MAX_FRAME_BYTES = 1 << 30
+
+# priority lanes (v4): a 2-bit tag in every post-handshake frame. Lower
+# value = higher priority in the server's weighted response scheduler, and
+# each lane holds its own inflight credits so bulk can't starve control.
+LANE_CONTROL, LANE_POINT, LANE_BULK = 0, 1, 2
+LANES = (LANE_CONTROL, LANE_POINT, LANE_BULK)
+LANE_NAMES = ("control", "point", "bulk")
 
 
 class ProtocolError(RuntimeError):
@@ -145,6 +169,19 @@ class PromoteRequest(NamedTuple):
     partition: str                  # "p/N" ring slot label
 
 
+class AttachSpareRequest(NamedTuple):
+    """Control record (v4): a router claims this server as partition
+    ``partition``'s COLD spare — the wire path for ``KBRouter.add_spare``,
+    so spares can join a fleet over TCP instead of only in-process.
+    Geometry is validated router-side at admission (same checks as the
+    in-process path); the server's job is exclusivity: a second claim for
+    a DIFFERENT slot is refused (``ErrorResponse`` kind
+    ``"spare_conflict"``), a re-claim of the same slot is idempotent, and
+    a subsequent ``PromoteRequest`` clears the claim (the spare became a
+    serving member)."""
+    partition: str                  # "p/N" ring slot being claimed
+
+
 class OkResponse(NamedTuple):
     pass
 
@@ -181,8 +218,27 @@ _WIRE_SPECS: Dict[int, type] = {
     19: PromoteRequest,
     20: OkResponse, 21: ValuesResponse, 22: NNSearchResponse,
     23: StatsResponse, 24: ErrorResponse, 25: RowsResponse,
+    26: AttachSpareRequest,
 }
 _WIRE_CODES = {cls: code for code, cls in _WIRE_SPECS.items()}
+
+# request record -> default priority lane. Control-plane ops (stats,
+# promote/attach, the reshard export/import stream) overtake point ops,
+# which overtake bulk payloads (nn fan-outs, full-table snapshots).
+_LANE_OF = {
+    StatsRequest: LANE_CONTROL, PromoteRequest: LANE_CONTROL,
+    AttachSpareRequest: LANE_CONTROL, ExportRowsRequest: LANE_CONTROL,
+    ImportRowsRequest: LANE_CONTROL,
+    LookupRequest: LANE_POINT, UpdateRequest: LANE_POINT,
+    LazyGradRequest: LANE_POINT, FlushRequest: LANE_POINT,
+    NNSearchRequest: LANE_BULK, SnapshotRequest: LANE_BULK,
+}
+
+
+def lane_of(msg) -> int:
+    """The priority lane a request travels (and its response returns) on.
+    Unlisted records default to the point lane."""
+    return _LANE_OF.get(type(msg), LANE_POINT)
 
 
 # ---------------------------------------------------------------------------
@@ -337,6 +393,43 @@ def read_frame_length(prefix: bytes) -> int:
     return n
 
 
+# -- v4 multiplexed framing --------------------------------------------------
+# post-handshake frame layout:
+#   u32 length | u64 request id | u8 lane | u16 wire code | fields...
+# The length prefix counts the mux header. Request id 0 is RESERVED for
+# connection-level errors (a frame the server could not attribute to any
+# request); clients allocate ids from 1.
+
+_MUX = struct.Struct("<QB")
+MUX_HEADER_BYTES = _MUX.size            # 9
+
+
+def frame_message_mux(msg, req_id: int, lane: int) -> bytes:
+    """Record -> length-prefixed v4 frame carrying (request id, lane)."""
+    if lane not in LANES:
+        raise ProtocolError(f"invalid lane {lane!r}")
+    body = encode_message(msg)
+    n = len(body) + MUX_HEADER_BYTES
+    if n > MAX_FRAME_BYTES:
+        raise ProtocolError(f"frame of {n} bytes exceeds MAX_FRAME_BYTES "
+                            f"({MAX_FRAME_BYTES})")
+    return _U32.pack(n) + _MUX.pack(req_id, lane) + body
+
+
+def decode_mux(data) -> Tuple[int, int, NamedTuple]:
+    """v4 frame body (length prefix already stripped) ->
+    ``(request id, lane, record)``. A malformed mux header raises before
+    the message decode, so the caller can distinguish "can't even
+    attribute this frame" from "request ``id`` carried a bad record"."""
+    if len(data) < MUX_HEADER_BYTES:
+        raise ProtocolError(f"frame of {len(data)} bytes is shorter than "
+                            f"the {MUX_HEADER_BYTES}-byte mux header")
+    req_id, lane = _MUX.unpack_from(data, 0)
+    if lane not in LANES:
+        raise ProtocolError(f"invalid lane {lane} in mux header")
+    return req_id, lane, decode_message(memoryview(data)[MUX_HEADER_BYTES:])
+
+
 # ---------------------------------------------------------------------------
 # the transport seam
 # ---------------------------------------------------------------------------
@@ -393,6 +486,7 @@ class InProcessTransport:
         self.num_entries = server.engine.num_entries
         self.dim = server.engine.dim
         self.partition = partition      # ring slot label ("p/N"; "" = none)
+        self.spare_claim = ""           # "p/N" once a router claimed us
 
     def request(self, msg) -> NamedTuple:
         srv = self.server
@@ -423,6 +517,15 @@ class InProcessTransport:
             return OkResponse()
         if isinstance(msg, PromoteRequest):
             self.partition = msg.partition
+            self.spare_claim = ""       # a promoted spare is a member now
+            return OkResponse()
+        if isinstance(msg, AttachSpareRequest):
+            if self.spare_claim and self.spare_claim != msg.partition:
+                raise ProtocolError(
+                    f"spare_conflict: already claimed as spare for "
+                    f"{self.spare_claim!r}, refused claim for "
+                    f"{msg.partition!r}")
+            self.spare_claim = msg.partition
             return OkResponse()
         if isinstance(msg, Hello):
             if msg.expect_partition and msg.expect_partition != self.partition:

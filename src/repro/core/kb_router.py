@@ -76,10 +76,12 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.kb_protocol import (ExportRowsRequest, FlushRequest,
+from repro.core.kb_protocol import (AttachSpareRequest, ExportRowsRequest,
+                                    FlushRequest,
                                     ImportRowsRequest, LazyGradRequest,
                                     LookupRequest, NNSearchRequest,
-                                    PromoteRequest, RemoteKBError,
+                                    PromoteRequest, ProtocolError,
+                                    RemoteKBError,
                                     SnapshotRequest, StatsRequest, Transport,
                                     UpdateRequest)
 
@@ -673,8 +675,19 @@ class KBRouter:
         one (from the then-current primary, under the slot lock) the
         moment a promotion empties the standby slot — see
         ``_reattach_spare_locked``. Geometry is validated on admission so
-        a mis-sized spare fails here, not during an emergency."""
+        a mis-sized spare fails here, not during an emergency. Admission
+        also stakes a claim on the spare itself (the v4 ``AttachSpare``
+        record — works identically over TCP and in-process): the server
+        remembers which slot reserved it, so a second router claiming the
+        same bank for a DIFFERENT slot is refused here rather than
+        discovering the double-booking during a promotion."""
         self._check_standby_geometry(p, transport, "spare")
+        claim = f"{p}/{len(self._routing.members)}"
+        try:
+            transport.request(AttachSpareRequest(claim))
+        except (RemoteKBError, ProtocolError) as e:
+            raise ValueError(f"spare for partition {p} refused the "
+                             f"claim: {e}") from e
         with self._slot_locks[p]:
             self._spares[p].append(transport)
 
@@ -952,8 +965,12 @@ def connect_kb(spec: str, **kw):
     partition server's handshake label and row count are verified against
     the ring). A ``"host:p0|host:s0"`` element attaches ``host:s0`` as
     partition 0's standby (filled on attach, then kept in sync by the
-    write tee); any ``|`` forces the router path even for one endpoint.
-    Keyword args pass through to ``SocketTransport``."""
+    write tee); further ``|`` legs (``"host:p0|host:s0|host:c0|..."``)
+    join partition 0's COLD spare pool over the wire (v4 ``AttachSpare``
+    — geometry-checked and claimed on admission, filled only when a
+    promotion empties the standby slot). Any ``|`` forces the router path
+    even for one endpoint. Keyword args pass through to
+    ``SocketTransport``."""
     from repro.core.kb_transport import (RemoteKnowledgeBank,
                                          SocketTransport, parse_hostport)
     endpoints = [e.strip() for e in spec.split(",") if e.strip()]
@@ -964,28 +981,34 @@ def connect_kb(spec: str, **kw):
         return RemoteKnowledgeBank(host, port, **kw)
     transports: list = []
     standbys: Dict[int, object] = {}
+    spares: Dict[int, list] = {}
     opened: list = []
     try:
         for p, ep in enumerate(endpoints):
             legs = [x.strip() for x in ep.split("|") if x.strip()]
-            if len(legs) > 2:
-                raise ValueError(
-                    f"endpoint {ep!r}: at most one standby per partition")
             host, port = parse_hostport(legs[0])
             t = SocketTransport(
                 host, port, expect_partition=f"{p}/{len(endpoints)}", **kw)
             transports.append(t)
             opened.append(t)
-            if len(legs) == 2:
+            if len(legs) >= 2:
                 sh, sp = parse_hostport(legs[1])
                 # a --replica-of standby already serves its ring label;
                 # a plain spare serves "" — attach_standby validates both
                 sb = SocketTransport(sh, sp, **kw)
                 standbys[p] = sb
                 opened.append(sb)
+            for leg in legs[2:]:
+                ch, cp = parse_hostport(leg)
+                cold = SocketTransport(ch, cp, **kw)
+                spares.setdefault(p, []).append(cold)
+                opened.append(cold)
         router = KBRouter(transports)
         for p, sb in standbys.items():
             router.attach_standby(p, sb, fill=True)
+        for p, pool in spares.items():
+            for cold in pool:
+                router.add_spare(p, cold)
         return router
     except BaseException:
         for t in opened:

@@ -3,25 +3,38 @@ one coalescing ``KnowledgeBankServer``.
 
 This is the piece that makes CARLS *cross-platform* in the paper's sense —
 trainers and knowledge makers in separate OS processes (or hosts) against a
-single bank — rather than threads in one interpreter:
+single bank — rather than threads in one interpreter. Protocol v4 makes
+every connection a true multiplexed channel:
 
-- ``KBTransportServer``: an acceptor thread plus one reader/writer thread
-  pair per connection. The reader decodes protocol records and FEEDS THE
-  EXISTING COALESCING QUEUE (``KnowledgeBankServer.enqueue_op``) without
-  waiting, so requests from different processes — and from the in-process
-  clients sharing the server — merge into the same batched device dispatches.
-  The writer resolves futures in FIFO order, which is what lets the client
-  side match responses to requests without per-message ids. ``max_inflight``
-  bounds the unanswered requests one connection may pipeline (backpressure
-  is TCP itself: the reader simply stops reading).
+- ``KBTransportServer``: an acceptor thread plus a reader/writer/executor
+  thread trio per connection. The reader decodes protocol records and FEEDS
+  THE EXISTING COALESCING QUEUE (``KnowledgeBankServer.enqueue_op``)
+  without waiting, so requests from different processes — and from the
+  in-process clients sharing the server — merge into the same batched
+  device dispatches. Responses complete OUT OF ORDER: every frame carries a
+  u64 request id, each finished op queues its response the moment the
+  dispatcher completes it (``_Request.add_done_callback``), and a weighted
+  per-connection scheduler drains the three priority lanes
+  (control > point > bulk, weights 8:4:1) so a stats poll or a reshard
+  control record overtakes a bulk ``nn_search`` payload. ``max_inflight``
+  credits are PER LANE (``max_inflight_control`` / ``max_inflight_bulk``
+  default to the point value), so a bulk flood can't starve control of
+  pipelining budget; backpressure is TCP itself (the reader stops reading).
+  ``cork_us`` adds an adaptive writer-side microbatch window: when more
+  responses are in flight, the writer holds a batch up to that long and
+  packs the small frames into ONE ``sendall`` — amortizing syscalls at
+  high client counts, complementing TCP_NODELAY. ``scheduler="fifo"``
+  delivers responses in request-arrival order instead (the v3 behavior,
+  kept as the benchmark ablation baseline).
 - ``SocketTransport``: the client half. Thread-safe and pipelined — callers
-  append a future and send under one lock; a receiver thread resolves
-  futures FIFO — so several maker threads sharing one connection get their
-  requests coalesced server-side. Connection loss fails all in-flight
-  futures, then ``request`` redials with capped exponential backoff +
-  jitter (``reconnects`` counted in client stats) and retries
-  (at-least-once semantics; see docs/tuning.md for the ``lazy_grad`` caveat)
-  up to ``max_retries`` times.
+  register their request id in a pending MAP and send under one lock; a
+  receiver thread resolves futures BY ID, so several maker threads sharing
+  one connection neither serialize on each other's responses nor stall
+  behind a slow bulk op. Connection loss strands only the UNANSWERED ids;
+  each of those is re-issued (same id) after an automatic redial with
+  capped exponential backoff plus jitter, up to ``max_retries`` times —
+  ``reconnects`` and ``reissued`` are surfaced in client stats. Retries
+  are AT-LEAST-ONCE (see docs/tuning.md for the ``lazy_grad`` caveat).
 - ``RemoteKnowledgeBank``: the client stub. Same duck-type as the concrete
   server (``repro.core.kb_protocol.KBClient``), numpy in / numpy out, so
   ``MakerRuntime``, the trainer loop, and the launch layer run unmodified
@@ -35,11 +48,12 @@ import socket
 import threading
 import time
 from collections import deque
-from typing import NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import numpy as np
 
-from repro.core.kb_protocol import (PROTOCOL_VERSION, ErrorResponse,
+from repro.core.kb_protocol import (LANE_CONTROL, LANES, PROTOCOL_VERSION,
+                                    AttachSpareRequest, ErrorResponse,
                                     ExportRowsRequest, FlushRequest, Hello,
                                     ImportRowsRequest, LazyGradRequest,
                                     LookupRequest, NNSearchRequest,
@@ -49,7 +63,9 @@ from repro.core.kb_protocol import (PROTOCOL_VERSION, ErrorResponse,
                                     SnapshotRequest, StatsRequest,
                                     StatsResponse, Transport, UpdateRequest,
                                     ValuesResponse, Welcome, decode_message,
-                                    frame_message, read_frame_length)
+                                    decode_mux, frame_message,
+                                    frame_message_mux, lane_of,
+                                    read_frame_length)
 
 
 class TransportError(ConnectionError):
@@ -103,27 +119,47 @@ def parse_hostport(spec: str) -> Tuple[str, int]:
 # server side
 # ---------------------------------------------------------------------------
 
-class _Sentinel(NamedTuple):
-    """Writer-queue end marker (reader exited)."""
+# weighted service quota per scheduler cycle, indexed by lane
+# (control, point, bulk): under contention control gets 8 frames for every
+# 4 point and 1 bulk — strict enough that control-plane ops overtake bulk
+# payloads, weighted (not absolute) so a control flood can't starve bulk
+_LANE_WEIGHTS = (8, 4, 1)
+# cap frames packed into one sendall so a corked batch stays bounded
+_MAX_BATCH_FRAMES = 64
 
 
 class _Conn:
-    """One accepted connection: reader decodes+enqueues, writer responds
-    FIFO. Two threads so a slow device op never stops the reader from
-    feeding further requests into the coalescing window."""
+    """One accepted connection: reader decodes + starts, responses complete
+    out of order, writer drains the per-lane ready queues by weighted
+    priority. Three threads: a slow device op never stops the READER from
+    feeding further requests into the coalescing window, and a slow
+    synchronous op (snapshot / export / import, run on the EXECUTOR) never
+    stops the WRITER from sending responses that are already done."""
 
     def __init__(self, tsrv: "KBTransportServer", sock: socket.socket,
                  addr) -> None:
         self.tsrv, self.sock, self.addr = tsrv, sock, addr
-        self.entries: deque = deque()       # (resolve_fn,) in request order
         self.cond = threading.Condition()
-        self.inflight = threading.Semaphore(tsrv.max_inflight)
+        # completed-response queues, one per lane: (rid, resp, credited)
+        self.ready = [deque() for _ in LANES]
+        self.served = [0, 0, 0]             # frames sent this quota cycle
+        self.fifo_order: deque = deque()    # scheduler="fifo": arrival rids
+        self.fifo_done: dict = {}           # rid -> (lane, resp, credited)
+        self.open = 0                       # admitted, response not sent
+        self.closing = False
+        self.credits = {lane: threading.Semaphore(tsrv.lane_inflight[lane])
+                        for lane in LANES}
+        self.exec_cond = threading.Condition()
+        self.exec_q: deque = deque()        # (rid, lane, thunk) FIFO
         self.reader = threading.Thread(target=self._read_loop, daemon=True,
                                        name=f"kb-conn-r-{addr}")
         self.writer = threading.Thread(target=self._write_loop, daemon=True,
                                        name=f"kb-conn-w-{addr}")
+        self.executor = threading.Thread(target=self._exec_loop, daemon=True,
+                                         name=f"kb-conn-x-{addr}")
         self.reader.start()
         self.writer.start()
+        self.executor.start()
 
     # -- reader ------------------------------------------------------------
 
@@ -135,6 +171,9 @@ class _Conn:
                 raise ProtocolError(f"expected Hello, got "
                                     f"{type(hello).__name__}")
             if hello.version != PROTOCOL_VERSION:
+                # the version gate's compat contract: the handshake stays
+                # PLAIN-framed (no mux header), so an old client's Hello
+                # decodes here and this refusal is readable by it
                 self.sock.sendall(frame_message(ErrorResponse(
                     "version_mismatch",
                     f"server speaks v{PROTOCOL_VERSION}, client sent "
@@ -154,31 +193,89 @@ class _Conn:
                 PROTOCOL_VERSION, srv.engine.num_entries, srv.engine.dim,
                 self.tsrv.partition)))
             while not self.tsrv._stop.is_set():
-                msg = decode_message(_read_frame(self.sock))
-                while not self.inflight.acquire(timeout=1.0):
-                    # pipelining credit; poll so a dead writer (whose
-                    # releases will never come) can't pin this thread
+                raw = _read_frame(self.sock)
+                try:
+                    rid, lane, msg = decode_mux(raw)
+                except TransportError:
+                    raise
+                except Exception as e:
+                    # a frame we cannot attribute to any request id:
+                    # report once on the reserved id 0, then hang up
+                    self._admit(0)
+                    self._complete(0, LANE_CONTROL,
+                                   ErrorResponse(type(e).__name__, str(e)),
+                                   credited=False)
+                    return
+                while not self.credits[lane].acquire(timeout=1.0):
+                    # per-lane pipelining credit; poll so a dead writer
+                    # (whose releases will never come) can't pin this thread
                     if self.tsrv._stop.is_set() or not self.writer.is_alive():
                         raise TransportError("connection writer exited")
-                self._push(self._start(srv, msg))
+                self._admit(rid)
+                self._start(srv, rid, lane, msg)
         except TransportError:
             pass                                # client went away: normal
-        except Exception as e:                  # protocol garbage: tell the
-            # peer once, then hang up — routed through the WRITER queue so
-            # the error frame can neither interleave with a response the
-            # writer is mid-sendall on nor overtake queued responses (the
-            # client matches responses to requests by FIFO order)
-            resp = ErrorResponse(type(e).__name__, str(e))
-            self._push(lambda: resp)
+        except Exception as e:                  # handshake-phase garbage:
+            try:                                # tell the peer, hang up
+                self.sock.sendall(frame_message(ErrorResponse(
+                    type(e).__name__, str(e))))
+            except OSError:
+                pass
         finally:
-            self._push(_Sentinel())
+            with self.cond:
+                self.closing = True
+                self.cond.notify_all()
+            with self.exec_cond:
+                self.exec_cond.notify_all()
 
-    def _start(self, srv, msg):
-        """Begin executing ``msg``; return a thunk the writer calls (in
-        FIFO order) to produce the response record. KB ops enqueue into the
-        server's coalescing queue HERE — before the previous response is
-        even written — which is exactly how cross-process requests land in
-        the same coalescing window as in-process ones."""
+    def _admit(self, rid: int) -> None:
+        with self.cond:
+            self.open += 1
+            if self.tsrv.scheduler == "fifo":
+                self.fifo_order.append(rid)
+
+    def _complete(self, rid: int, lane: int, resp, *,
+                  credited: bool = True) -> None:
+        """Queue a finished response for the writer. Runs on whichever
+        thread finished the op (reader, executor, or the bank's
+        dispatcher via ``add_done_callback``) — never blocks, never
+        raises."""
+        with self.cond:
+            if self.tsrv.scheduler == "fifo":
+                self.fifo_done[rid] = (lane, resp, credited)
+            else:
+                self.ready[lane].append((rid, resp, credited))
+            self.cond.notify_all()
+
+    def _defer(self, rid: int, lane: int, thunk) -> None:
+        """Hand a synchronous (non-queued) op to the executor thread, so
+        a multi-second snapshot blocks neither the reader nor responses
+        that are already done."""
+        with self.exec_cond:
+            self.exec_q.append((rid, lane, thunk))
+            self.exec_cond.notify()
+
+    def _on_done(self, rid: int, lane: int, req, build) -> None:
+        """Out-of-order completion seam: queue the response frame the
+        moment the dispatcher finishes ``req`` — no thread parked in
+        ``wait()`` per in-flight wire request."""
+        def cb(r):
+            if r.error is not None:
+                resp = ErrorResponse(type(r.error).__name__, str(r.error))
+            else:
+                try:
+                    resp = build(r)
+                except Exception as e:
+                    resp = ErrorResponse(type(e).__name__, str(e))
+            self._complete(rid, lane, resp)
+        req.add_done_callback(cb)
+
+    def _start(self, srv, rid: int, lane: int, msg) -> None:
+        """Begin executing ``msg``. KB ops enqueue into the server's
+        coalescing queue HERE — before earlier responses are even
+        written — which is exactly how cross-process requests land in the
+        same coalescing window as in-process ones. Each admitted request
+        completes exactly once, via ``_complete``."""
         with self.tsrv._metrics_lock:
             self.tsrv.requests_served += 1
         try:
@@ -186,90 +283,189 @@ class _Conn:
                 ids = np.asarray(msg.ids).reshape(-1)
                 req = srv.enqueue_op("lookup", ids=ids, shape=ids.shape,
                                      meta=int(msg.trainer_step))
-                return lambda: ValuesResponse(req.wait())
-            if isinstance(msg, UpdateRequest):
+                self._on_done(rid, lane, req,
+                              lambda r: ValuesResponse(r.result))
+            elif isinstance(msg, UpdateRequest):
                 ids = np.asarray(msg.ids).reshape(-1)
                 req = srv.enqueue_op(
                     "update", ids=ids,
                     payload=np.asarray(msg.values).reshape(ids.size, -1),
                     meta=int(msg.src_step))
-                return lambda: (req.wait(), OkResponse())[1]
-            if isinstance(msg, LazyGradRequest):
+                self._on_done(rid, lane, req, lambda r: OkResponse())
+            elif isinstance(msg, LazyGradRequest):
                 ids = np.asarray(msg.ids).reshape(-1)
                 req = srv.enqueue_op(
                     "lazy_grad", ids=ids,
                     payload=np.asarray(msg.grads,
                                        np.float32).reshape(ids.size, -1))
-                return lambda: (req.wait(), OkResponse())[1]
-            if isinstance(msg, FlushRequest):
+                self._on_done(rid, lane, req, lambda r: OkResponse())
+            elif isinstance(msg, FlushRequest):
                 req = srv.enqueue_op("flush")
-                return lambda: (req.wait(), OkResponse())[1]
-            if isinstance(msg, NNSearchRequest):
+                self._on_done(rid, lane, req, lambda r: OkResponse())
+            elif isinstance(msg, NNSearchRequest):
                 q = np.asarray(msg.queries)
                 excl = (None if msg.exclude_ids is None
                         else np.asarray(msg.exclude_ids,
                                         np.int32).reshape(q.shape[0], -1))
-                req = srv.enqueue_op("nn", payload=q, k=int(msg.k),
-                                     mode=msg.mode, excl=excl)
-                return lambda: NNSearchResponse(*req.wait())
-            if isinstance(msg, StatsRequest):
-                # fast-path: snapshot the counters NOW, in the reader
-                # thread, instead of when the writer reaches this entry —
-                # a cheap stats poll pipelined behind a multi-second
-                # snapshot used to wait for it; now only its DELIVERY is
-                # FIFO (response matching has no per-message ids), the
-                # observation happens at request arrival
-                resp = StatsResponse(srv.stats())
-                return lambda: resp
-            if isinstance(msg, SnapshotRequest):
-                return lambda: ValuesResponse(srv.table_snapshot())
-            if isinstance(msg, ExportRowsRequest):
+                # bulk lane runs on the EXECUTOR via the public blocking
+                # API: a pipelined burst of bulk searches then holds at
+                # most ONE slot in the dispatcher queue at a time, so
+                # point lookups drain between bulk executions instead of
+                # behind the whole burst. The cost is that same-connection
+                # pipelined searches no longer coalesce with each other —
+                # the latency-vs-batching call the lane split is for.
+                self._defer(rid, lane,
+                            lambda: NNSearchResponse(*srv.nn_search(
+                                q, int(msg.k), mode=msg.mode,
+                                exclude_ids=excl)))
+            elif isinstance(msg, StatsRequest):
+                # counters snapshot at ARRIVAL (reader thread), response
+                # queued immediately on the control lane — out-of-order
+                # completion replaced the v3 eager-stats special case
+                # (which observed eagerly but still DELIVERED in FIFO turn)
+                self._complete(rid, lane, StatsResponse(srv.stats()))
+            elif isinstance(msg, SnapshotRequest):
+                self._defer(rid, lane,
+                            lambda: ValuesResponse(srv.table_snapshot()))
+            elif isinstance(msg, ExportRowsRequest):
                 ids = np.asarray(msg.ids).reshape(-1)
-                return lambda: RowsResponse(srv.export_rows(ids))
-            if isinstance(msg, ImportRowsRequest):
+                self._defer(rid, lane,
+                            lambda: RowsResponse(srv.export_rows(ids)))
+            elif isinstance(msg, ImportRowsRequest):
                 ids = np.asarray(msg.ids).reshape(-1)
                 leaves = msg.leaves
-                return lambda: (srv.import_rows(ids, leaves),
-                                OkResponse())[1]
-            if isinstance(msg, PromoteRequest):
+                self._defer(rid, lane,
+                            lambda: (srv.import_rows(ids, leaves),
+                                     OkResponse())[1])
+            elif isinstance(msg, PromoteRequest):
                 # control-plane: adopt the ring slot the router assigned —
                 # applied NOW (reader thread), so the very next handshake
-                # that pins this slot already succeeds
+                # that pins this slot already succeeds; a promoted spare
+                # is a serving member, so any spare claim is released
                 self.tsrv.partition = msg.partition
-                return lambda: OkResponse()
-            raise ProtocolError(f"{type(msg).__name__} is not a request "
-                                "record")
+                self.tsrv.spare_claim = ""
+                self._complete(rid, lane, OkResponse())
+            elif isinstance(msg, AttachSpareRequest):
+                with self.tsrv._metrics_lock:   # claim is server-global
+                    claimed = self.tsrv.spare_claim
+                    if claimed and claimed != msg.partition:
+                        resp = ErrorResponse(
+                            "spare_conflict",
+                            f"already claimed as spare for {claimed!r}, "
+                            f"refused claim for {msg.partition!r}")
+                    else:
+                        self.tsrv.spare_claim = msg.partition
+                        resp = OkResponse()
+                self._complete(rid, lane, resp)
+            else:
+                raise ProtocolError(f"{type(msg).__name__} is not a "
+                                    "request record")
         except Exception as e:          # enqueue refused (server closing,
-            resp = ErrorResponse(type(e).__name__, str(e))  # bad record):
-            return lambda: resp         # deliver as an in-order error
+            # bad record): deliver as this request's error response
+            self._complete(rid, lane,
+                           ErrorResponse(type(e).__name__, str(e)))
 
-    def _push(self, entry) -> None:
-        with self.cond:
-            self.entries.append(entry)
-            self.cond.notify()
+    # -- executor (synchronous slow ops) -----------------------------------
+
+    def _exec_loop(self) -> None:
+        while True:
+            with self.exec_cond:
+                while not self.exec_q and not self.closing:
+                    self.exec_cond.wait(0.25)
+                if not self.exec_q:
+                    return              # closing and drained
+                rid, lane, thunk = self.exec_q.popleft()
+            try:
+                resp = thunk()
+            except Exception as e:
+                resp = ErrorResponse(type(e).__name__, str(e))
+            self._complete(rid, lane, resp)
 
     # -- writer ------------------------------------------------------------
+
+    def _pop_locked(self):
+        """Next (rid, lane, resp, credited) per the active scheduler, or
+        None. ``cond`` must be held. ``scheduler="fifo"`` reproduces the
+        v3 contract (responses in request-arrival order — the benchmark
+        ablation baseline); ``"lanes"`` runs weighted round-robin over
+        the priority lanes, FIFO within each lane."""
+        if self.tsrv.scheduler == "fifo":
+            if not self.fifo_order:
+                return None
+            entry = self.fifo_done.pop(self.fifo_order[0], None)
+            if entry is None:
+                return None             # head-of-line response not ready
+            rid = self.fifo_order.popleft()
+            self.open -= 1
+            lane, resp, credited = entry
+            return rid, lane, resp, credited
+        for _ in range(2):              # second pass after a quota reset
+            for lane in LANES:
+                q = self.ready[lane]
+                if q and self.served[lane] < _LANE_WEIGHTS[lane]:
+                    self.served[lane] += 1
+                    self.open -= 1
+                    rid, resp, credited = q.popleft()
+                    return rid, lane, resp, credited
+            if not any(self.ready):
+                return None
+            self.served = [0, 0, 0]     # all ready lanes exhausted quota
+        return None
+
+    def _collect(self):
+        """Block for the next batch of completed responses; None = writer
+        should exit. Drains everything already ready into one batch
+        (single sendall); with ``cork_us`` and further responses in
+        flight, holds the batch up to that long so they share the send."""
+        cork_s = self.tsrv.cork_us / 1e6
+        out = []
+        with self.cond:
+            while not out:
+                e = self._pop_locked()
+                if e is not None:
+                    out.append(e)
+                    break
+                if self.closing and (self.open == 0
+                                     or self.tsrv._stop.is_set()):
+                    return None
+                self.cond.wait(0.25)
+            while len(out) < _MAX_BATCH_FRAMES:
+                e = self._pop_locked()
+                if e is None:
+                    if cork_s > 0 and self.open > 0:
+                        # adaptive cork: only waits when more responses
+                        # are actually in flight, at most once per batch
+                        self.cond.wait(cork_s)
+                        cork_s = 0.0
+                        continue
+                    break
+                out.append(e)
+        return out
 
     def _write_loop(self) -> None:
         try:
             while True:
-                with self.cond:
-                    while not self.entries:
-                        self.cond.wait()
-                    entry = self.entries.popleft()
-                if isinstance(entry, _Sentinel):
+                batch = self._collect()
+                if batch is None:
                     return
-                try:
-                    resp = entry()
-                    payload = frame_message(resp)
-                except Exception as e:  # op failed server-side OR the
-                    # response itself won't encode (e.g. a snapshot past
-                    # MAX_FRAME_BYTES): report per-request, serve on —
-                    # never tear down the connection for one bad response
-                    payload = frame_message(ErrorResponse(
-                        type(e).__name__, str(e)))
-                self.sock.sendall(payload)
-                self.inflight.release()
+                parts = []
+                for rid, lane, resp, _credited in batch:
+                    try:
+                        parts.append(frame_message_mux(resp, rid, lane))
+                    except Exception as e:  # the response itself won't
+                        # encode (e.g. a snapshot past MAX_FRAME_BYTES):
+                        # report per-request, serve on — never tear down
+                        # the connection for one bad response
+                        parts.append(frame_message_mux(
+                            ErrorResponse(type(e).__name__, str(e)),
+                            rid, lane))
+                self.sock.sendall(b"".join(parts))
+                with self.tsrv._metrics_lock:
+                    self.tsrv.frames_sent += len(batch)
+                    self.tsrv.sendalls += 1
+                for _rid, lane, _resp, credited in batch:
+                    if credited:
+                        self.credits[lane].release()
         except OSError:
             pass                        # peer gone mid-response
         finally:
@@ -299,25 +495,44 @@ class KBTransportServer:
     clients after the listener goes away.
 
     Knobs (docs/tuning.md): ``max_inflight`` pipelining credits per
-    connection, ``sock_buf`` bytes for SO_SNDBUF/SO_RCVBUF (0 = OS
-    default), ``backlog`` for pending accepts. ``partition`` labels this
-    bank's ring slot ("p/N", set by ``serve.py --kb-join``): it travels in
-    every Welcome, and clients that pinned a slot via
-    ``Hello.expect_partition`` are refused on mismatch."""
+    connection PER LANE — ``max_inflight_control`` / ``max_inflight_bulk``
+    override the control / bulk lanes (None = same as ``max_inflight``);
+    ``cork_us`` microseconds of adaptive writer-side corking (0 = off);
+    ``scheduler`` is ``"lanes"`` (v4 weighted priority) or ``"fifo"``
+    (v3-style arrival-order delivery, the ablation baseline);
+    ``sock_buf`` bytes for SO_SNDBUF/SO_RCVBUF (0 = OS default);
+    ``backlog`` for pending accepts. ``partition`` labels this bank's ring
+    slot ("p/N", set by ``serve.py --kb-join``): it travels in every
+    Welcome, and clients that pinned a slot via ``Hello.expect_partition``
+    are refused on mismatch."""
 
     def __init__(self, server, host: str = "127.0.0.1", port: int = 0, *,
-                 max_inflight: int = 32, sock_buf: int = 0,
-                 backlog: int = 16, partition: str = ""):
+                 max_inflight: int = 32,
+                 max_inflight_control: Optional[int] = None,
+                 max_inflight_bulk: Optional[int] = None,
+                 cork_us: int = 0, scheduler: str = "lanes",
+                 sock_buf: int = 0, backlog: int = 16, partition: str = ""):
+        if scheduler not in ("lanes", "fifo"):
+            raise ValueError(f"scheduler must be 'lanes' or 'fifo', "
+                             f"got {scheduler!r}")
         self.server = server
         self.max_inflight = max_inflight
+        self.lane_inflight = (int(max_inflight_control or max_inflight),
+                              int(max_inflight),
+                              int(max_inflight_bulk or max_inflight))
+        self.cork_us = int(cork_us)
+        self.scheduler = scheduler
         self.sock_buf = sock_buf
         self.partition = partition
+        self.spare_claim = ""           # "p/N" once a router claimed us
         self._stop = threading.Event()
         self._conns: set = set()
         self._conns_lock = threading.Lock()
         self._metrics_lock = threading.Lock()
         self.connections_accepted = 0
         self.requests_served = 0
+        self.frames_sent = 0            # responses written
+        self.sendalls = 0               # send syscalls (corking packs
         self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._lsock.bind((host, port))
@@ -376,6 +591,7 @@ class KBTransportServer:
         for c in conns:
             c.reader.join(timeout=timeout_s)
             c.writer.join(timeout=timeout_s)
+            c.executor.join(timeout=timeout_s)
 
     def __enter__(self):
         return self
@@ -387,6 +603,13 @@ class KBTransportServer:
 # ---------------------------------------------------------------------------
 # client side
 # ---------------------------------------------------------------------------
+
+# caller-assigned request ids (FaultyTransport's keyed schedules) live in
+# their own id namespace so they can never collide with the transport's
+# auto-allocated ids (which count up from 1; 0 is the reserved
+# connection-error id)
+_EXTERNAL_RID_BASE = 1 << 48
+
 
 class _Future:
     __slots__ = ("event", "value", "error")
@@ -408,16 +631,17 @@ class _Future:
 
 
 class _Live:
-    """One live dialed connection: socket + FIFO of unanswered futures +
-    the receiver thread resolving them in arrival order. ``send_lock``
-    serializes [append future + sendall] so the pending FIFO matches the
-    byte order on the wire; the receiver never takes it on the hot path
-    (only in its death handler), so a sender blocked in sendall can never
-    stall response draining."""
+    """One live dialed connection: socket + the pending MAP of unanswered
+    request ids + the receiver thread resolving futures BY ID (v4: server
+    completion order is free). ``send_lock`` serializes [register id +
+    sendall] so a frame can't hit the wire after the connection was marked
+    dead; the receiver takes no lock on its hot path (dict get/pop are
+    atomic under the GIL), so a sender blocked mid-sendall can never stall
+    response draining."""
 
     def __init__(self, sock: socket.socket):
         self.sock = sock
-        self.pending: deque = deque()
+        self.pending: Dict[int, _Future] = {}
         self.dead = False
         self.send_lock = threading.Lock()
         self.receiver: Optional[threading.Thread] = None
@@ -430,10 +654,14 @@ class SocketTransport:
     ``min(cap, base * 2**(a-1)) * uniform(0.5, 1.5)`` so a restarting
     server isn't hammered at a fixed cadence and a fleet of clients
     doesn't redial in lockstep — up to ``max_retries`` redials per
-    request. Retries are AT-LEAST-ONCE: a request whose connection died
-    after the send may have executed — idempotent ops (lookup / update /
-    nn_search / flush / snapshot / stats) are safe, a retried ``lazy_grad``
-    can double-cache one gradient batch (set ``max_retries=0`` to fail
+    request. A connection death strands exactly the UNANSWERED request
+    ids (the pending map — an id whose response already arrived is
+    resolved and never re-sent); each stranded request is re-issued with
+    the SAME id on the next live connection and counted in ``reissued``.
+    Retries are AT-LEAST-ONCE: a request whose connection died after the
+    send may have executed — idempotent ops (lookup / update / nn_search /
+    flush / snapshot / stats) are safe, a retried ``lazy_grad`` can
+    double-cache one gradient batch (set ``max_retries=0`` to fail
     instead). ``expect_partition`` pins the handshake to one ring slot
     (see ``KBTransportServer``)."""
 
@@ -451,8 +679,11 @@ class SocketTransport:
         self.sock_buf = sock_buf
         self.expect_partition = expect_partition
         self.reconnects = 0
+        self.reissued = 0               # unanswered ids re-sent on redial
         self.partition = ""                 # set by the first handshake
-        self._lock = threading.Lock()       # connection mgmt + frame sends
+        self._lock = threading.Lock()       # connection management
+        self._id_lock = threading.Lock()    # rid allocation + counters
+        self._next_rid = 1                  # 0 is the reserved error id
         self._live: Optional[_Live] = None
         self._closed = False
         self.num_entries = self.dim = 0     # set by the first handshake
@@ -500,28 +731,36 @@ class SocketTransport:
         err: Optional[Exception] = None
         try:
             while True:
-                msg = decode_message(_read_frame(live.sock))
-                # bare popleft: senders append under live.send_lock in
-                # wire order, and taking no lock here means a sender
-                # blocked mid-sendall can never stop response draining
-                fut = live.pending.popleft() if live.pending else None
+                rid, _lane, msg = decode_mux(_read_frame(live.sock))
+                # lock-free pop: senders register ids under live.send_lock,
+                # and taking no lock here means a sender blocked
+                # mid-sendall can never stop response draining
+                fut = live.pending.pop(rid, None)
                 if fut is None:
-                    raise ProtocolError("response with no pending request")
+                    if rid == 0 and isinstance(msg, ErrorResponse):
+                        # connection-level error: the server could not
+                        # attribute a frame to any request id
+                        raise TransportError(
+                            f"server protocol error: [{msg.kind}] "
+                            f"{msg.message}")
+                    raise ProtocolError(
+                        f"response for unknown request id {rid}")
                 fut.set(value=msg)
         except Exception as e:          # ANY decode/socket failure —
             err = (e if isinstance(e, TransportError)     # struct.error,
                    else TransportError(str(e)))   # bad dtype, unicode...
         finally:
-            # ...must mark the connection dead and strand every in-flight
+            # ...must mark the connection dead and strand every UNANSWERED
             # future: _Future.wait() has no timeout, so a skipped cleanup
             # is a caller parked forever. send_lock excludes a concurrent
-            # sender: either its future is already pending (stranded
-            # here) or it sees dead=True and never appends.
+            # sender: either its id is already pending (stranded here) or
+            # it sees dead=True and never sends. Stranded callers re-issue
+            # their ids on the next live connection — see ``_request``.
             if err is None:
                 err = TransportError("receiver exited")
             with live.send_lock:
                 live.dead = True
-                stranded = list(live.pending)
+                stranded = list(live.pending.values())
                 live.pending.clear()
             for fut in stranded:        # NEVER leave a caller hanging
                 fut.set(error=err)
@@ -533,6 +772,22 @@ class SocketTransport:
     # -- the one public verb ----------------------------------------------
 
     def request(self, msg) -> NamedTuple:
+        with self._id_lock:
+            rid = self._next_rid
+            self._next_rid += 1
+        return self._request(msg, rid)
+
+    def request_with_id(self, rid: int, msg) -> NamedTuple:
+        """``request`` with a caller-assigned request id (namespaced so it
+        can't collide with auto-allocated ids) — ``FaultyTransport``'s
+        seam for keying fault schedules by the id actually stamped into
+        the wire frames."""
+        return self._request(msg, _EXTERNAL_RID_BASE + int(rid))
+
+    def _request(self, msg, rid: int) -> NamedTuple:
+        lane = lane_of(msg)
+        frame = frame_message_mux(msg, rid, lane)
+        sent_before = False
         last: Optional[Exception] = None
         for attempt in range(self.max_retries + 1):
             if attempt:
@@ -547,12 +802,21 @@ class SocketTransport:
                 with self._lock:        # connection management only — the
                     live = self._ensure_live()  # blocking send happens
                 fut = _Future()                 # outside this lock
-                frame = frame_message(msg)
-                with live.send_lock:
-                    if live.dead:
-                        raise TransportError("connection lost")
-                    live.pending.append(fut)
-                    live.sock.sendall(frame)
+                try:
+                    with live.send_lock:
+                        if live.dead:
+                            raise TransportError("connection lost")
+                        live.pending[rid] = fut
+                        live.sock.sendall(frame)
+                except BaseException:
+                    live.pending.pop(rid, None)
+                    raise
+                if sent_before:
+                    # this id went out before and was never answered —
+                    # the re-issue the at-least-once contract allows
+                    with self._id_lock:
+                        self.reissued += 1
+                sent_before = True
                 resp = fut.wait()
             except (TransportError, OSError) as e:
                 last = e
@@ -587,19 +851,24 @@ class FaultPlan:
     injectable seam that lets tests and ``tools/smoke_multiproc.py`` drive
     the router's fail-over paths without sleeps or real process kills.
 
-    Requests through the wrapped transport(s) are numbered 0, 1, 2, ... by
-    THIS plan (share one plan across transports for a global schedule):
+    Requests through the wrapped transport(s) are assigned ids 0, 1, 2, ...
+    by THIS plan (share one plan across transports for a global schedule),
+    and every schedule below is keyed by that request id. Over a v4
+    ``SocketTransport`` the plan's id is also stamped into the wire frame
+    (``request_with_id``, in its own id namespace), so the id a schedule
+    names IS the id on the wire:
 
-    - ``kill_after_requests=k``: request ``k`` and every later one raise
-      ``TransportError`` without touching the wire — the transport is
-      permanently dead, the SIGKILLed-server model.
-    - ``drop_requests={i, ...}``: request ``i`` is lost on the way IN — it
-      never executes, then the failure surfaces as ``TransportError``.
-    - ``drop_responses={i, ...}``: request ``i`` EXECUTES on the inner
+    - ``kill_after_requests=k``: request id ``k`` and every later one
+      raise ``TransportError`` without touching the wire — the transport
+      is permanently dead, the SIGKILLed-server model.
+    - ``drop_requests={i, ...}``: request id ``i`` is lost on the way
+      IN — it never executes, then the failure surfaces as
+      ``TransportError``.
+    - ``drop_responses={i, ...}``: request id ``i`` EXECUTES on the inner
       transport, then its response is dropped — the lost-ack case, which
       is exactly the at-least-once hazard the retry contract covers.
     - ``delay_s`` + ``delay_requests``: sleep before forwarding those
-      request indexes (widening race windows deterministically).
+      request ids (widening race windows deterministically).
 
     ``faults`` counts injected failures; ``requests`` counts everything
     scheduled."""
@@ -631,7 +900,10 @@ class FaultyTransport:
     """Wrap any ``Transport`` with a ``FaultPlan``. Works identically over
     ``InProcessTransport`` and ``SocketTransport`` — the router can't tell
     an injected ``TransportError`` from a real dead connection, which is
-    the point: CI exercises promotion deterministically."""
+    the point: CI exercises promotion deterministically. Over a
+    ``SocketTransport`` the plan's request id is forwarded as the wire
+    request id (``request_with_id``), so drop/delay schedules are keyed by
+    the id that actually frames the request."""
 
     def __init__(self, inner, plan: FaultPlan):
         self.inner = inner
@@ -649,7 +921,10 @@ class FaultyTransport:
                 f"{'killed' if killed else 'dropped'} by FaultPlan")
         if plan.delay_s and i in plan.delay_requests:
             time.sleep(plan.delay_s)
-        resp = self.inner.request(msg)
+        if hasattr(self.inner, "request_with_id"):
+            resp = self.inner.request_with_id(i, msg)
+        else:
+            resp = self.inner.request(msg)
         if i in plan.drop_responses:
             plan.count_fault()
             raise TransportError(
@@ -734,14 +1009,18 @@ class RemoteKnowledgeBank:
         """The server's full stats dict (metrics, staleness, search stats,
         server-side maker stats), plus this client's own transport health
         under ``"transport"`` (``reconnects`` — how many times the
-        connection was redialed). After ``close`` this returns the final
-        snapshot taken at close time."""
+        connection was redialed; ``reissued`` — how many unanswered
+        request ids were re-sent after a redial). After ``close`` this
+        returns the final snapshot taken at close time."""
         if self._final_stats is not None:
             return self._final_stats
         stats = self._t.request(StatsRequest()).stats
         reconnects = getattr(self._t, "reconnects", None)
         if reconnects is not None:
-            stats["transport"] = {"reconnects": int(reconnects)}
+            stats["transport"] = {
+                "reconnects": int(reconnects),
+                "reissued": int(getattr(self._t, "reissued", 0)),
+            }
         return stats
 
     @property

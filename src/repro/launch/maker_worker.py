@@ -185,8 +185,14 @@ def main(argv=None) -> int:
     steps = sum(j.steps for j in rt.jobs)
     rows = sum(j.rows_written for j in rt.jobs)
     errors = sum(j.errors for j in rt.jobs)
+    try:
+        tstats = client.stats().get("transport", {})
+    except Exception:       # bank already gone: the counters are client-
+        tstats = {}         # side but ride on a stats() round-trip
+    extra = (f" reconnects={tstats.get('reconnects', 0)}"
+             f" reissued={tstats.get('reissued', 0)}" if tstats else "")
     print(f"maker-worker done: steps={steps} rows_written={rows} "
-          f"errors={errors}", flush=True)
+          f"errors={errors}{extra}", flush=True)
     client.close()
     return 2 if (steps == 0 and errors > 0) else 0
 

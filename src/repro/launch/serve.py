@@ -282,10 +282,13 @@ def serve_kb(args) -> None:
         from repro.core import KBTransportServer, parse_hostport
         from repro.core.kb_protocol import PROTOCOL_VERSION
         host, port = parse_hostport(args.listen)
-        transport = KBTransportServer(server, host, port,
-                                      max_inflight=args.max_inflight,
-                                      sock_buf=args.sock_buf,
-                                      partition=partition_label)
+        transport = KBTransportServer(
+            server, host, port,
+            max_inflight=args.max_inflight,
+            max_inflight_control=args.max_inflight_control or None,
+            max_inflight_bulk=args.max_inflight_bulk or None,
+            cork_us=args.cork_us, scheduler=args.scheduler,
+            sock_buf=args.sock_buf, partition=partition_label)
         part = (f"partition {partition_label}, {num_rows} of "
                 f"{args.kb_entries} rows, " if partition_label else "")
         print(f"kb server listening on {transport.host}:{transport.port} "
@@ -298,8 +301,10 @@ def serve_kb(args) -> None:
         stop.wait(args.serve_seconds or None)
         conns = transport.connections_accepted
         wire_reqs = transport.requests_served
+        sendalls = transport.sendalls
         transport.close()
-        summary = (f"{conns} connections, {wire_reqs} wire requests, ")
+        summary = (f"{conns} connections, {wire_reqs} wire requests "
+                   f"({sendalls} sendalls), ")
     else:
         # -- local-driver mode: synthetic concurrent in-process clients ---
         def client(t: int, n_calls: int):
@@ -462,8 +467,25 @@ def main(argv=None):
                          "SIGINT/SIGTERM)")
     ap.add_argument("--max-inflight", type=int, default=32,
                     help="--listen: pipelining credits per connection "
-                         "(unanswered requests before the reader applies "
-                         "TCP backpressure)")
+                         "PER LANE (unanswered requests before the reader "
+                         "applies TCP backpressure)")
+    ap.add_argument("--max-inflight-control", type=int, default=0,
+                    help="--listen: override the control lane's credits "
+                         "(0 = same as --max-inflight)")
+    ap.add_argument("--max-inflight-bulk", type=int, default=0,
+                    help="--listen: override the bulk lane's credits "
+                         "(0 = same as --max-inflight)")
+    ap.add_argument("--cork-us", type=int, default=0,
+                    help="--listen: adaptive writer-side cork window in "
+                         "microseconds — hold a response batch up to this "
+                         "long while more responses are in flight, packing "
+                         "small frames into one sendall (0 = off)")
+    ap.add_argument("--scheduler", choices=("lanes", "fifo"),
+                    default="lanes",
+                    help="--listen: response scheduler — 'lanes' (v4 "
+                         "weighted priority, control > point > bulk) or "
+                         "'fifo' (v3-style arrival order, the ablation "
+                         "baseline)")
     ap.add_argument("--sock-buf", type=int, default=0,
                     help="--listen: SO_SNDBUF/SO_RCVBUF bytes "
                          "(0 = OS default)")

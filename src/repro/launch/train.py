@@ -188,6 +188,11 @@ def run_async(model, cfg, args) -> None:
     m = res.server.metrics
     print(f"kb server: {m['requests']} requests -> {m['dispatches']} "
           f"dispatches (coalescing x{res.server.coalescing_factor:.1f})")
+    if kb_client is not None:
+        t = res.server.stats().get("transport", {})
+        if t:
+            print(f"kb transport: reconnects={t.get('reconnects', 0)} "
+                  f"reissued={t.get('reissued', 0)}")
     for line in format_maker_stats(res.server.maker_stats):
         print(line)
 

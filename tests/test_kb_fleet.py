@@ -592,9 +592,44 @@ def test_reshard_then_failover_compose():
 # connect_kb replica syntax
 # ---------------------------------------------------------------------------
 
-def test_connect_kb_rejects_multiple_standbys_per_partition():
-    with pytest.raises(ValueError, match="at most one standby"):
-        connect_kb("h:1|h:2|h:3")
+def test_connect_kb_third_leg_joins_spare_pool_over_wire():
+    """``"p|s|c"`` legs: primary + standby + COLD spare, all over TCP. The
+    spare is geometry-checked and claimed (v4 ``AttachSpare``) on
+    admission, so a second router claiming it for another slot is
+    refused."""
+    from repro.core import KBTransportServer
+    table = _table(N, D)
+    servers, tsrvs = [], []
+    try:
+        legs = []
+        for label in ("0/1", "", ""):
+            s = KnowledgeBankServer(N, D)
+            s.update(np.arange(N), table)
+            tsrv = KBTransportServer(s, partition=label)
+            servers.append(s)
+            tsrvs.append(tsrv)
+            legs.append(f"127.0.0.1:{tsrv.port}")
+        router = connect_kb("|".join(legs))
+        try:
+            assert router.standby_status() == [True]
+            assert router.spare_status() == [1]
+            assert tsrvs[2].spare_claim == "0/1"
+            got = router.lookup(np.arange(N))
+            np.testing.assert_array_equal(got, table)
+            # the claim is sticky: a claim for a DIFFERENT slot is
+            # refused (spare_conflict), re-claiming the same slot is
+            # idempotent
+            conflicting = SocketTransport("127.0.0.1", tsrvs[2].port)
+            with pytest.raises(kbp.RemoteKBError, match="spare_conflict"):
+                conflicting.request(kbp.AttachSpareRequest("1/2"))
+            conflicting.request(kbp.AttachSpareRequest("0/1"))
+            conflicting.close()
+        finally:
+            router.close()
+    finally:
+        for tsrv in tsrvs:
+            tsrv.close()
+        _close(servers)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,438 @@
+"""Protocol v4 (ISSUE 10): the multiplexed wire.
+
+- mux framing: request id + lane survive the header round-trip, reserved
+  id 0 and lane bounds are enforced, and ``lane_of`` classifies every
+  request record into the documented lane.
+- version gate: a v3 client's PLAIN-framed Hello is refused with a
+  readable plain-framed ``version_mismatch`` error — the compat contract
+  that keeps old clients failing loudly instead of mis-parsing mux frames.
+- out-of-order completion: a stats poll overtakes a deliberately blocked
+  bulk snapshot on the SAME connection (deterministic, event-gated), and
+  its counters reflect arrival time — the eager-stats special case's
+  semantics without its FIFO delivery.
+- the reassembly property: random per-thread op streams over disjoint id
+  slices, run concurrently through v4 lanes (with and without corking)
+  and through the FIFO-delivery ablation, produce bit-identical lookup
+  streams, final table, flush, nn_search, and snapshot — equal to a
+  serial in-process reference. Out-of-order delivery may reorder
+  responses, never corrupt them.
+- reconnect re-issue: after a connection death, ONLY unanswered request
+  ids are re-sent (same id), counted in ``reissued``.
+- FaultyTransport: the plan's request index is forwarded as the wire
+  request id via ``request_with_id``, so fault schedules key by the id
+  actually on the wire.
+- corking: with ``cork_us`` set, concurrent responses pack into fewer
+  ``sendall`` calls than frames.
+"""
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FaultPlan, FaultyTransport, InProcessTransport,
+                        KBTransportServer, KnowledgeBankServer,
+                        RemoteKnowledgeBank, SocketTransport)
+from repro.core import kb_protocol as kbp
+
+D = 4
+
+
+# ---------------------------------------------------------------------------
+# framing + lanes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 62), st.integers(0, 2), st.integers(0, 9))
+def test_mux_frame_roundtrip(rid, lane, n):
+    msg = kbp.LookupRequest(np.arange(n, dtype=np.int64), 3)
+    frame = kbp.frame_message_mux(msg, rid, lane)
+    assert kbp.read_frame_length(frame[:4]) == len(frame) - 4
+    got_rid, got_lane, got = kbp.decode_mux(frame[4:])
+    assert got_rid == rid and got_lane == lane
+    np.testing.assert_array_equal(got.ids, msg.ids)
+
+
+def test_mux_rejects_bad_lane_and_short_frame():
+    msg = kbp.FlushRequest()
+    with pytest.raises(kbp.ProtocolError):
+        kbp.frame_message_mux(msg, 1, 3)
+    with pytest.raises(kbp.ProtocolError):
+        kbp.decode_mux(b"\x00" * 5)            # shorter than the header
+    bad = bytearray(kbp.frame_message_mux(msg, 1, 0)[4:])
+    bad[8] = 7                                 # corrupt the lane byte
+    with pytest.raises(kbp.ProtocolError):
+        kbp.decode_mux(bytes(bad))
+
+
+def test_lane_of_classifies_every_request_record():
+    z = np.zeros(1, np.int64)
+    control = [kbp.StatsRequest(), kbp.PromoteRequest("0/2"),
+               kbp.AttachSpareRequest("0/2"), kbp.ExportRowsRequest(z),
+               kbp.ImportRowsRequest(z, {"table": np.zeros((1, D),
+                                                           np.float32)})]
+    point = [kbp.LookupRequest(z, 0),
+             kbp.UpdateRequest(z, np.zeros((1, D), np.float32), 0),
+             kbp.LazyGradRequest(z, np.zeros((1, D), np.float32)),
+             kbp.FlushRequest()]
+    bulk = [kbp.NNSearchRequest(np.zeros((1, D), np.float32), 1, None,
+                                None),
+            kbp.SnapshotRequest()]
+    assert all(kbp.lane_of(m) == kbp.LANE_CONTROL for m in control)
+    assert all(kbp.lane_of(m) == kbp.LANE_POINT for m in point)
+    assert all(kbp.lane_of(m) == kbp.LANE_BULK for m in bulk)
+
+
+def test_v3_client_refused_with_plain_readable_error():
+    """The version gate's compat contract: handshake frames stay PLAIN v3
+    framing on both sides, so a v3 client's Hello decodes server-side and
+    the refusal decodes client-side — no mux header anywhere."""
+    with KnowledgeBankServer(8, D) as srv:
+        with KBTransportServer(srv) as ts:
+            sock = socket.create_connection(("127.0.0.1", ts.port),
+                                            timeout=5)
+            try:
+                sock.sendall(kbp.frame_message(kbp.Hello(3, "old", "")))
+                prefix = b""
+                while len(prefix) < 4:
+                    prefix += sock.recv(4 - len(prefix))
+                want = kbp.read_frame_length(prefix)
+                body = b""
+                while len(body) < want:
+                    body += sock.recv(want - len(body))
+                resp = kbp.decode_message(body)     # PLAIN decode works
+            finally:
+                sock.close()
+            assert isinstance(resp, kbp.ErrorResponse)
+            assert resp.kind == "version_mismatch"
+            assert "v3" in resp.message
+
+
+# ---------------------------------------------------------------------------
+# out-of-order completion
+# ---------------------------------------------------------------------------
+
+def test_stats_overtakes_blocked_bulk_snapshot():
+    """Deterministic OOO proof: with a bulk snapshot HELD mid-execution on
+    the connection's executor, a later stats request completes and is
+    DELIVERED while the snapshot is still blocked — and its counters are
+    the arrival-time snapshot (the old eager-stats semantics, now a plain
+    consequence of per-request completion)."""
+    srv = KnowledgeBankServer(16, D)
+    srv.update(np.arange(16), np.ones((16, D), np.float32))
+    started, release = threading.Event(), threading.Event()
+    orig = srv.table_snapshot
+
+    def slow_snapshot():
+        started.set()
+        assert release.wait(timeout=30)
+        return orig()
+
+    srv.table_snapshot = slow_snapshot
+    try:
+        with KBTransportServer(srv) as ts:
+            kb = RemoteKnowledgeBank("127.0.0.1", ts.port)
+            snap_out = []
+            t = threading.Thread(
+                target=lambda: snap_out.append(kb.table_snapshot()))
+            t.start()
+            assert started.wait(timeout=30)
+            # the same connection, AFTER the snapshot request: under v3
+            # FIFO delivery this would hang until the snapshot releases
+            before = kb.stats()
+            assert before["metrics"]["lookups"] == 0
+            kb.lookup(np.arange(4))             # point lane flows too
+            assert kb.stats()["metrics"]["lookups"] == 1
+            assert not snap_out                 # bulk still parked
+            release.set()
+            t.join(timeout=30)
+            np.testing.assert_array_equal(
+                snap_out[0], np.ones((16, D), np.float32))
+            kb.close()
+    finally:
+        release.set()
+        srv.table_snapshot = orig
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# the reassembly property
+# ---------------------------------------------------------------------------
+
+def _val(t: int, j: int, d: int) -> np.ndarray:
+    return np.full((d,), 10.0 * t + j, np.float32)
+
+
+def _run_workers(kb, jobs, record):
+    """Execute the drawn op streams (one worker per disjoint id slice,
+    blocking calls, so per-worker program order holds). ``jobs`` is a
+    list of (thread_id, ids, stream); pass one job for a serial run."""
+    def worker(t, ids, stream):
+        for j, op in enumerate(stream):
+            if op == 0:
+                kb.update(ids, np.stack([_val(t, j, D)] * len(ids)))
+            elif op == 1:
+                record[t].append(kb.lookup(ids))
+            else:
+                kb.lazy_grad(ids, 0.1 * np.stack([_val(t, j, D)] * len(ids)))
+        record[t].append(kb.lookup(ids))        # every stream ends read
+
+    threads = [threading.Thread(target=worker, args=job) for job in jobs]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+
+
+def _tail(kb, n_threads):
+    """The serial post-join tail exercising the remaining wire ops."""
+    kb.flush()
+    q = np.stack([_val(t, 0, D) for t in range(n_threads)])
+    scores, nn_ids = kb.nn_search(q, k=3)
+    return scores, nn_ids, kb.table_snapshot()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.integers(0, 2), min_size=1, max_size=6),
+       st.lists(st.integers(0, 2), min_size=1, max_size=6),
+       st.lists(st.integers(0, 2), min_size=1, max_size=6),
+       st.booleans())
+def test_ooo_interleavings_reassemble_bit_identically(s0, s1, s2, cork):
+    """Random op streams (update / lookup / lazy_grad) on DISJOINT id
+    slices, racing on one connection, then flush + nn_search + snapshot:
+    v4 lanes (corked and uncorked) == FIFO delivery == a serial
+    in-process reference, bit for bit, on all five ops. Out-of-order
+    delivery reorders responses; it must never change any of them."""
+    n = 48
+    streams = (s0, s1, s2)
+    slices = [np.arange(t * 16, t * 16 + 16) for t in range(3)]
+    table = np.random.default_rng(3).normal(size=(n, D)).astype(np.float32)
+    outs = {}
+    for variant in ("serial", "lanes", "fifo"):
+        srv = KnowledgeBankServer(n, D)
+        srv.update(np.arange(n), table)
+        record = [[] for _ in range(3)]
+        if variant == "serial":
+            kb = RemoteKnowledgeBank(InProcessTransport(srv))
+            # the reference: streams executed one thread AFTER another —
+            # legal because slices are disjoint, so streams commute
+            for t in range(3):
+                _run_workers(kb, [(t, slices[t], streams[t])], record)
+            outs[variant] = (record,) + _tail(kb, 3)
+        else:
+            ts = KBTransportServer(
+                srv, scheduler=("fifo" if variant == "fifo" else "lanes"),
+                cork_us=(2000 if (cork and variant == "lanes") else 0))
+            kb = RemoteKnowledgeBank("127.0.0.1", ts.port)
+            _run_workers(kb, [(t, slices[t], streams[t])
+                              for t in range(3)], record)
+            outs[variant] = (record,) + _tail(kb, 3)
+            kb.close()
+            ts.close()
+        srv.close()
+    ref = outs["serial"]
+    for variant in ("lanes", "fifo"):
+        got = outs[variant]
+        for t in range(3):
+            assert len(ref[0][t]) == len(got[0][t])
+            for a, b in zip(ref[0][t], got[0][t]):
+                np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(ref[1], got[1])   # nn scores
+        np.testing.assert_array_equal(ref[2], got[2])   # nn ids
+        np.testing.assert_array_equal(ref[3], got[3])   # final table
+
+
+# ---------------------------------------------------------------------------
+# reconnect re-issue
+# ---------------------------------------------------------------------------
+
+def _hand_server(port_box, answered_evt, close_evt, seen):
+    """A scripted v4 server: handshake, answer the ids==[0] lookup, DROP
+    the ids==[1] lookup and hang up; on the redial, answer whatever
+    arrives. Records every (connection, rid, ids) it reads."""
+    lsock = socket.socket()
+    lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(2)
+    port_box.append(lsock.getsockname()[1])
+
+    def read_frame(sock):
+        prefix = b""
+        while len(prefix) < 4:
+            chunk = sock.recv(4 - len(prefix))
+            if not chunk:
+                return None
+            prefix += chunk
+        want = kbp.read_frame_length(prefix)
+        body = b""
+        while len(body) < want:
+            body += sock.recv(want - len(body))
+        return body
+
+    def handshake(sock):
+        kbp.decode_message(read_frame(sock))
+        sock.sendall(kbp.frame_message(kbp.Welcome(
+            kbp.PROTOCOL_VERSION, 8, D, "")))
+
+    resp = kbp.ValuesResponse(np.zeros((1, D), np.float32))
+    # connection 1: answer rid of ids==[0], drop ids==[1], close
+    sock, _ = lsock.accept()
+    handshake(sock)
+    for _ in range(2):
+        rid, lane, msg = kbp.decode_mux(read_frame(sock))
+        seen.append((1, rid, int(msg.ids[0])))
+        if int(msg.ids[0]) == 0:
+            sock.sendall(kbp.frame_message_mux(resp, rid, lane))
+    assert answered_evt.wait(timeout=30)    # caller 0 has its answer
+    close_evt.wait(timeout=30)
+    sock.close()                            # strand the unanswered id
+    # connection 2: answer everything re-issued
+    sock, _ = lsock.accept()
+    handshake(sock)
+    rid, lane, msg = kbp.decode_mux(read_frame(sock))
+    seen.append((2, rid, int(msg.ids[0])))
+    sock.sendall(kbp.frame_message_mux(resp, rid, lane))
+    time.sleep(0.1)
+    sock.close()
+    lsock.close()
+
+
+def test_reconnect_reissues_only_unanswered_ids():
+    port_box, seen = [], []
+    answered, close_evt = threading.Event(), threading.Event()
+    server = threading.Thread(target=_hand_server,
+                              args=(port_box, answered, close_evt, seen),
+                              daemon=True)
+    server.start()
+    while not port_box:
+        time.sleep(0.01)
+    t = SocketTransport("127.0.0.1", port_box[0], max_retries=10,
+                        reconnect_backoff_s=0.01)
+    results = {}
+
+    def call(key):
+        results[key] = t.request(
+            kbp.LookupRequest(np.array([key], np.int64), 0))
+
+    th1 = threading.Thread(target=call, args=(1,))
+    th1.start()
+    call(0)                     # answered on connection 1
+    answered.set()
+    close_evt.set()             # kill the connection under caller 1
+    th1.join(timeout=30)
+    server.join(timeout=30)
+    assert set(results) == {0, 1}
+    # exactly one id was re-issued, with the SAME rid, and it is the
+    # unanswered one — the answered id never re-crossed the wire
+    first = {ids: rid for conn, rid, ids in seen if conn == 1}
+    second = [(rid, ids) for conn, rid, ids in seen if conn == 2]
+    assert second == [(first[1], 1)]
+    assert t.reissued == 1 and t.reconnects == 1
+    t.close()
+
+
+def test_remote_stats_surface_reissued():
+    with KnowledgeBankServer(8, D) as srv:
+        with KBTransportServer(srv) as ts:
+            kb = RemoteKnowledgeBank("127.0.0.1", ts.port)
+            tr = kb.stats()["transport"]
+            assert tr == {"reconnects": 0, "reissued": 0}
+            kb.close()
+            assert kb.stats()["transport"] == tr    # final snapshot
+
+
+# ---------------------------------------------------------------------------
+# FaultyTransport keyed by request id
+# ---------------------------------------------------------------------------
+
+class _RecordingInner:
+    num_entries, dim, partition = 8, D, ""
+
+    def __init__(self):
+        self.by_id = []
+
+    def request_with_id(self, rid, msg):
+        self.by_id.append((rid, type(msg).__name__))
+        return kbp.OkResponse()
+
+    def request(self, msg):                 # must NOT be used when
+        raise AssertionError("request_with_id available but unused")
+
+    def close(self):
+        pass
+
+
+def test_faultplan_indexes_become_wire_request_ids():
+    plan = FaultPlan(drop_requests={1}, delay_s=0.0)
+    inner = _RecordingInner()
+    ft = FaultyTransport(inner, plan)
+    ft.request(kbp.FlushRequest())                       # index 0
+    with pytest.raises(Exception):
+        ft.request(kbp.FlushRequest())                   # index 1: dropped
+    ft.request(kbp.FlushRequest())                       # index 2
+    assert inner.by_id == [(0, "FlushRequest"), (2, "FlushRequest")]
+    assert plan.faults == 1 and plan.requests == 3
+
+
+def test_faultplan_drop_keyed_by_id_over_real_wire():
+    """drop_responses={i}: request i EXECUTES server-side, its response is
+    dropped — keyed by the same id the wire frames carry."""
+    with KnowledgeBankServer(8, D) as srv:
+        with KBTransportServer(srv) as ts:
+            inner = SocketTransport("127.0.0.1", ts.port)
+            ft = FaultyTransport(inner, FaultPlan(drop_responses={0}))
+            from repro.core import TransportError
+            ids = np.array([3], np.int64)
+            vals = np.full((1, D), 7.0, np.float32)
+            with pytest.raises(TransportError):
+                ft.request(kbp.UpdateRequest(ids, vals, 0))  # id 0: lost ack
+            got = ft.request(kbp.LookupRequest(ids, 0))      # id 1: clean
+            # the dropped-ack write EXECUTED server-side regardless
+            np.testing.assert_array_equal(got.values, vals)
+            ft.close()
+
+
+# ---------------------------------------------------------------------------
+# corking
+# ---------------------------------------------------------------------------
+
+def test_corking_packs_concurrent_responses_into_fewer_sendalls():
+    with KnowledgeBankServer(64, D) as srv:
+        srv.update(np.arange(64), np.ones((64, D), np.float32))
+        with KBTransportServer(srv, cork_us=20000) as ts:
+            kb = RemoteKnowledgeBank("127.0.0.1", ts.port)
+
+            def hammer(t):
+                rng = np.random.default_rng(t)
+                for _ in range(20):
+                    kb.lookup(rng.integers(0, 64, (8,)))
+
+            threads = [threading.Thread(target=hammer, args=(t,))
+                       for t in range(8)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            kb.close()
+            assert ts.frames_sent >= 160
+            assert ts.sendalls < ts.frames_sent
+
+
+# ---------------------------------------------------------------------------
+# AttachSpare + Promote claim lifecycle (in-process twin of the wire path)
+# ---------------------------------------------------------------------------
+
+def test_promote_clears_spare_claim():
+    with KnowledgeBankServer(8, D) as srv:
+        t = InProcessTransport(srv)
+        t.request(kbp.AttachSpareRequest("1/2"))
+        assert t.spare_claim == "1/2"
+        t.request(kbp.AttachSpareRequest("1/2"))        # idempotent
+        with pytest.raises(kbp.ProtocolError, match="spare_conflict"):
+            t.request(kbp.AttachSpareRequest("0/2"))
+        t.request(kbp.PromoteRequest("1/2"))            # spare -> member
+        assert t.spare_claim == ""
+        t.request(kbp.AttachSpareRequest("0/2"))        # free again
+        assert t.spare_claim == "0/2"

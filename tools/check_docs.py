@@ -49,7 +49,7 @@ BENCH_AUTOTUNE_KEYS = ("nlist", "nprobe", "recall", "search_s",
 # doesn't run the suite), so this guard fires only when it is present
 SERVING_JSON = "BENCH_kb_serving.json"
 SERVING_TOP_KEYS = ("rows", "config", "storage", "cold_tier", "scaleout",
-                    "reorder")
+                    "reorder", "mixed")
 SERVING_SCALE_KEYS = ("partitions", "lookups_per_s", "nn_p50_us",
                       "speedup_vs_1p")
 SERVING_REORDER_KEYS = ("fifo_s", "reorder_s", "speedup", "reorders",
@@ -59,6 +59,11 @@ SERVING_STORAGE_KEYS = ("fp32", "int8", "bytes_per_row_ratio",
 SERVING_COLD_KEYS = ("total_rows", "resident_rows", "oversubscription",
                      "bytes_resident", "cold_rows", "tier_faults",
                      "tier_spills", "lookups_correct")
+# the protocol-v4 mixed-workload rows (ISSUE 10) docs/architecture.md and
+# docs/tuning.md quote; the per-scheduler latency dicts must keep both
+# the fifo ablation and the v4 lanes entries
+SERVING_MIXED_KEYS = ("hogs", "look_calls", "lookup_p99_ms",
+                      "lookup_p50_ms", "p99_improvement", "bit_identical")
 
 SNIPPET_FILES = ["README.md"]
 LINK_FILES = ["README.md", "ROADMAP.md"]
@@ -188,6 +193,17 @@ def check_serving_keys() -> int:
              ("bytes_per_row", "bytes_resident", "lookups_per_s"),
              f"storage.{mode}")
     need(data.get("cold_tier", {}), SERVING_COLD_KEYS, "cold_tier")
+    need(data.get("mixed", {}), SERVING_MIXED_KEYS, "mixed")
+    for sched in ("fifo", "lanes"):
+        for metric in ("lookup_p99_ms", "lookup_p50_ms"):
+            need(data.get("mixed", {}).get(metric, {}), (sched,),
+                 f"mixed.{metric}")
+    mixed_rows = {r.get("name") for r in data.get("rows", [])}
+    for name in ("kb_serving/mixed/fifo", "kb_serving/mixed/v4-lanes"):
+        if name not in mixed_rows:
+            failures += 1
+            print(f"FAIL {SERVING_JSON}: missing row {name!r} "
+                  "(referenced by docs/tuning.md)", file=sys.stderr)
     if not failures:
         print(f"ok   {SERVING_JSON} keys")
     return failures

@@ -22,6 +22,16 @@ Boots the real deployment shapes with zero test scaffolding:
 4. SIGTERMs both members and asserts EACH served wire requests > 0 (both
    partitions took traffic, none sat idle behind the router).
 
+``--phase mixed`` (ISSUE 10 — the v4 multiplexed wire):
+1. one ``serve --kb --listen`` bank process,
+2. a client process sharing ONE pipelined connection between nn_search
+   hog threads and a point-lookup thread (the workload FIFO response
+   matching head-of-line-blocked before v4),
+3. asserts zero client errors and a generous absolute lookup-p99 bound —
+   a v3-style delivery stall parks lookups behind every in-flight bulk
+   search and blows the bound; bit-identity is the bench's job
+   (``kb_serving/mixed/*``), this phase proves the real-process path.
+
 ``--phase failover`` (ISSUE 8 — the self-healing fleet):
 1. TWO partition members plus ONE standby (``serve --kb-join 0/2
    --replica-of host:p0``) that boot-copies its primary's rows,
@@ -33,7 +43,8 @@ Boots the real deployment shapes with zero test scaffolding:
 4. SIGTERMs the survivor and the promoted standby and asserts each served
    wire traffic.
 
-Usage:  python tools/smoke_multiproc.py [--phase single|router|failover|all]
+Usage:
+  python tools/smoke_multiproc.py [--phase single|router|mixed|failover|all]
 (exit 0 = pass)
 """
 from __future__ import annotations
@@ -72,6 +83,61 @@ assert nn[0, 0] == ids[0] and nn[1, 0] == ids[1], (nn, ids)
 assert owners == {0, 1}, f"nn results stayed on partitions {owners}"
 kb.close()
 print("router-client OK")
+"""
+
+
+# mixed workload over one connection: bulk nn_search hogs + a timed point
+# lookup thread. argv: spec, p99 bound in ms. Prints the measured p99 and
+# an error count that must be zero.
+_MIXED_CLIENT = r"""
+import sys, threading, time
+import numpy as np
+from repro.core import connect_kb
+
+spec, bound_ms = sys.argv[1], float(sys.argv[2])
+kb = connect_kb(spec, client_name="smoke-mixed")
+n = kb.num_entries
+table = np.random.default_rng(0).normal(size=(64, kb.dim)) \
+    .astype(np.float32)
+kb.lookup(np.arange(16)); kb.nn_search(table[:16], 4)      # warm the wire
+errors, lat = [], []
+done = threading.Event()
+
+def hog(h):
+    rng = np.random.default_rng(40 + h)
+    while not done.is_set():
+        try:
+            kb.nn_search(table[rng.integers(0, 64, (32,))], 8)
+        except Exception as e:
+            errors.append(e)
+            return
+
+def looker():
+    rng = np.random.default_rng(99)
+    try:
+        for _ in range(80):
+            ids = rng.integers(0, n, (16,))
+            t0 = time.perf_counter()
+            kb.lookup(ids)
+            lat.append(time.perf_counter() - t0)
+    except Exception as e:
+        errors.append(e)
+    finally:
+        done.set()
+
+hogs = [threading.Thread(target=hog, args=(h,)) for h in range(3)]
+for t in hogs: t.start()
+time.sleep(0.05)
+lt = threading.Thread(target=looker)
+lt.start(); lt.join()
+for t in hogs: t.join()
+st = kb.stats()["transport"]
+kb.close()
+p99 = float(np.percentile(np.asarray(lat), 99) * 1e3)
+assert not errors, f"client errors: {errors[:3]}"
+assert p99 <= bound_ms, f"lookup p99 {p99:.1f}ms over {bound_ms}ms bound"
+print(f"mixed-client OK p99={p99:.2f}ms errors=0 "
+      f"reissued={st['reissued']}")
 """
 
 
@@ -180,6 +246,24 @@ def phase_router() -> None:
     print("router smoke: OK", flush=True)
 
 
+def phase_mixed() -> None:
+    serve, port = _boot_server([])
+    try:
+        client = subprocess.run(
+            [sys.executable, "-c", _MIXED_CLIENT,
+             f"127.0.0.1:{port}", "2000"],
+            env=_env(), cwd=ROOT, capture_output=True, text=True,
+            timeout=STARTUP_TIMEOUT_S)
+        print("[client]", client.stdout, client.stderr, flush=True)
+        if client.returncode != 0 or "mixed-client OK" not in client.stdout:
+            raise RuntimeError(f"mixed client failed ({client.returncode})")
+        _stop_server(serve, "serve")
+    finally:
+        if serve.poll() is None:
+            serve.kill()
+    print("mixed smoke: OK", flush=True)
+
+
 def phase_failover() -> None:
     procs = []
     worker = None
@@ -249,13 +333,16 @@ def phase_failover() -> None:
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--phase",
-                    choices=["single", "router", "failover", "all"],
+                    choices=["single", "router", "mixed", "failover",
+                             "all"],
                     default="all")
     args = ap.parse_args()
     if args.phase in ("single", "all"):
         phase_single()
     if args.phase in ("router", "all"):
         phase_router()
+    if args.phase in ("mixed", "all"):
+        phase_mixed()
     if args.phase in ("failover", "all"):
         phase_failover()
     print("multi-process smoke: OK")
